@@ -1,0 +1,109 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.core.cluster import ClusterSpec
+from repro.core.policies import (
+    FifoPolicy,
+    GavelPolicy,
+    SrtfPolicy,
+    ThemisFtfPolicy,
+    TiresiasPolicy,
+)
+from repro.core.profiler import ThroughputProfile
+from repro.core.scheduler import TesseraeScheduler, tiresias_single_packed_ok
+from repro.core.simulator import SimConfig, Simulator
+
+
+def timed(fn: Callable, *args, repeats: int = 3, **kwargs):
+    """(result, best_seconds)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+# --------------------------------------------------------------------------- #
+# Scheduler configurations used across the end-to-end figures
+# --------------------------------------------------------------------------- #
+def build_scheduler(
+    name: str, cluster: ClusterSpec, profile: ThroughputProfile
+) -> TesseraeScheduler:
+    """The named scheduler configurations of §6.1."""
+    if name == "tiresias":
+        # plain Tiresias: no packing, no migration remapping
+        return TesseraeScheduler(
+            cluster,
+            TiresiasPolicy(profile),
+            profile,
+            enable_packing=False,
+            migration_algorithm="none",
+        )
+    if name == "tiresias-single":
+        # Tiresias scheduling + Tesserae packing restricted to 1-GPU jobs
+        return TesseraeScheduler(
+            cluster,
+            TiresiasPolicy(profile),
+            profile,
+            enable_packing=True,
+            migration_algorithm="none",
+            packed_ok=tiresias_single_packed_ok,
+        )
+    if name == "tesserae-t":
+        return TesseraeScheduler(
+            cluster, TiresiasPolicy(profile), profile,
+            enable_packing=True, migration_algorithm="node",
+        )
+    if name == "tesserae-t-nomig":
+        # ablation: Tesserae packing with Gavel's basic migration policy
+        return TesseraeScheduler(
+            cluster, TiresiasPolicy(profile), profile,
+            enable_packing=True, migration_algorithm="none",
+        )
+    if name == "gavel":
+        # Gavel: LP-based priorities + packing, basic migration
+        return TesseraeScheduler(
+            cluster, GavelPolicy(profile), profile,
+            enable_packing=True, migration_algorithm="none",
+        )
+    if name == "gavel-ftf":
+        pol = GavelPolicy(profile)
+        pol.name = "gavel-ftf"
+        return TesseraeScheduler(
+            cluster, pol, profile, enable_packing=True, migration_algorithm="none"
+        )
+    if name == "tesserae-ftf":
+        return TesseraeScheduler(
+            cluster, ThemisFtfPolicy(profile), profile,
+            enable_packing=True, migration_algorithm="node",
+        )
+    if name == "ftf":
+        return TesseraeScheduler(
+            cluster, ThemisFtfPolicy(profile), profile,
+            enable_packing=False, migration_algorithm="none",
+        )
+    raise ValueError(name)
+
+
+def simulate(
+    name: str,
+    cluster: ClusterSpec,
+    trace,
+    profile: ThroughputProfile,
+    sched_profile: Optional[ThroughputProfile] = None,
+    **sim_kwargs,
+):
+    sched = build_scheduler(name, cluster, sched_profile or profile)
+    return Simulator(cluster, trace, sched, profile, SimConfig(**sim_kwargs)).run()

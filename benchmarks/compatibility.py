@@ -1,0 +1,67 @@
+"""§2.4/§4.3 "Compatibility": Tesserae as a placement plugin under FOUR
+different scheduling policies.
+
+The claim: users keep their scheduler (FIFO, SRTF, Tiresias-LAS, Themis-
+FTF) and bolt on Tesserae's packing+migration; every policy should gain
+throughput without modification (the placement layer only consumes the
+priority ORDER).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import csv_row
+from repro.core.cluster import ClusterSpec
+from repro.core.policies import FifoPolicy, SrtfPolicy, ThemisFtfPolicy, TiresiasPolicy
+from repro.core.profiler import ThroughputProfile
+from repro.core.scheduler import TesseraeScheduler
+from repro.core.simulator import SimConfig, Simulator
+from repro.core.traces import shockwave_trace
+
+CLUSTER = ClusterSpec(20, 4)
+NUM_JOBS = 200
+POLICIES = {
+    "fifo": FifoPolicy,
+    "srtf": SrtfPolicy,
+    "tiresias": TiresiasPolicy,
+    "ftf": ThemisFtfPolicy,
+}
+
+
+def main(print_csv: bool = True) -> List[str]:
+    rows: List[str] = []
+    profile = ThroughputProfile()
+    trace = shockwave_trace(num_jobs=NUM_JOBS, seed=9, profile=profile)
+    for name, cls in POLICIES.items():
+        results = {}
+        for tesserae in (False, True):
+            sched = TesseraeScheduler(
+                CLUSTER,
+                cls(profile),
+                profile,
+                enable_packing=tesserae,
+                migration_algorithm="node" if tesserae else "none",
+            )
+            res = Simulator(CLUSTER, trace, sched, profile, SimConfig()).run()
+            results[tesserae] = res
+            tag = "tesserae" if tesserae else "plain"
+            rows.append(
+                csv_row(
+                    f"compat/{name}/{tag}",
+                    0.0,
+                    f"avg_jct_s={res.avg_jct_s:.0f};migrations={res.total_migrations}",
+                )
+            )
+        x = results[False].avg_jct_s / results[True].avg_jct_s
+        rows.append(
+            csv_row(f"compat/{name}/gain", 0.0, f"jct_x_with_tesserae={x:.2f}")
+        )
+    if print_csv:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Figs. 9, 12, 17: end-to-end Avg JCT / makespan across schedulers.
+
+* Fig. 9  — Shockwave-like trace, Tesserae-T vs Tiresias (paper: JCT x1.62,
+  makespan x1.15 on the physical cluster; simulation-scale here).
+* Fig. 12 — vs Tiresias (Single) on A100 and V100 profiles (paper: x1.54 /
+  x1.20; V100 gains shrink because 16 GB HBM kills packing pairs).
+* Fig. 17 — Gavel-generator trace (paper: up to x1.87 JCT).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import csv_row, simulate, timed
+from repro.core.cluster import ClusterSpec
+from repro.core.profiler import ThroughputProfile
+from repro.core.traces import gavel_trace, shockwave_trace
+
+CLUSTER = ClusterSpec(20, 4)  # 80 GPUs (paper's simulation scale)
+NUM_JOBS = 300
+
+
+def _compare(trace, profile, names, tag, rows):
+    results = {}
+    for name in names:
+        res, wall = timed(simulate, name, CLUSTER, trace, profile, repeats=1)
+        results[name] = res
+        s = res.summary()
+        rows.append(
+            csv_row(
+                f"e2e/{tag}/{name}",
+                wall * 1e6,
+                f"avg_jct_s={s['avg_jct_s']:.0f};makespan_s={s['makespan_s']:.0f};migrations={int(s['migrations'])}",
+            )
+        )
+    return results
+
+
+def main(print_csv: bool = True) -> List[str]:
+    rows: List[str] = []
+    profile = ThroughputProfile()
+
+    # Fig. 9: Tesserae-T vs Tiresias (shockwave trace)
+    trace = shockwave_trace(num_jobs=NUM_JOBS, seed=0, profile=profile)
+    r = _compare(trace, profile, ["tiresias", "tesserae-t"], "fig9_shockwave", rows)
+    jct_x = r["tiresias"].avg_jct_s / r["tesserae-t"].avg_jct_s
+    mk_x = r["tiresias"].makespan_s / r["tesserae-t"].makespan_s
+    rows.append(
+        csv_row(
+            "e2e/fig9_speedup",
+            0.0,
+            f"jct_x={jct_x:.2f};makespan_x={mk_x:.2f};paper_jct_x=1.62;paper_makespan_x=1.15",
+        )
+    )
+
+    # Fig. 12a: vs Tiresias (Single)
+    r = _compare(trace, profile, ["tiresias-single"], "fig12_a100", rows)
+    jct_single = r["tiresias-single"].avg_jct_s
+    tess = _compare(trace, profile, ["tesserae-t"], "fig12_a100", rows)["tesserae-t"]
+    rows.append(
+        csv_row(
+            "e2e/fig12_speedup_vs_single_a100",
+            0.0,
+            f"jct_x={jct_single / tess.avg_jct_s:.2f};paper_jct_x=1.54",
+        )
+    )
+
+    # Fig. 12b: adaptability — same workload on V100 (16 GB) profiles,
+    # NO retuning: the packing graph just loses OOM edges.
+    v100 = ThroughputProfile(gpu_type="v100")
+    trace_v = shockwave_trace(num_jobs=NUM_JOBS, seed=0, profile=v100)
+    rv = _compare(trace_v, v100, ["tiresias-single", "tesserae-t"], "fig12_v100", rows)
+    rows.append(
+        csv_row(
+            "e2e/fig12_speedup_vs_single_v100",
+            0.0,
+            f"jct_x={rv['tiresias-single'].avg_jct_s / rv['tesserae-t'].avg_jct_s:.2f};paper_jct_x=1.08",
+        )
+    )
+
+    # Fig. 17: Gavel-generator trace
+    trace_g = gavel_trace(num_jobs=NUM_JOBS, seed=0, profile=profile)
+    rg = _compare(
+        trace_g, profile, ["tiresias", "tiresias-single", "tesserae-t"], "fig17_gavel", rows
+    )
+    best_base = max(rg["tiresias"].avg_jct_s, rg["tiresias-single"].avg_jct_s)
+    rows.append(
+        csv_row(
+            "e2e/fig17_speedup",
+            0.0,
+            f"jct_x_vs_worst_baseline={best_base / rg['tesserae-t'].avg_jct_s:.2f};paper_jct_x_up_to=1.87",
+        )
+    )
+
+    if print_csv:
+        for row in rows:
+            print(row)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Fig. 14(b): Tesserae-T overhead breakdown (schedule / pack / migrate).
+
+Paper observation: scheduling+packing scale with active jobs; migration
+cost depends only on cluster size (the k_c^2 k_l^3 term), so it stays flat.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import csv_row
+from repro.core.cluster import ClusterSpec
+from repro.core.policies import TiresiasPolicy
+from repro.core.profiler import ThroughputProfile
+from repro.core.scheduler import TesseraeScheduler
+from repro.core.traces import synthetic_active_jobs
+
+CLUSTER = ClusterSpec(64, 4)
+
+
+def main(print_csv: bool = True) -> List[str]:
+    rows: List[str] = []
+    profile = ThroughputProfile()
+    for n in [256, 1024, 2048]:
+        jobs = synthetic_active_jobs(n, seed=5, profile=profile)
+        sched = TesseraeScheduler(CLUSTER, TiresiasPolicy(profile), profile)
+        d1 = sched.decide(jobs, now=0.0)
+        d2 = sched.decide(jobs, now=360.0, prev_plan=d1.plan)
+        t = d2.timings
+        rows.append(
+            csv_row(
+                f"overhead/jobs{n}",
+                d2.total_overhead_s * 1e6,
+                f"schedule_s={t['schedule_s']:.4f};place_s={t['place_s']:.4f};"
+                f"pack_s={t['pack_s']:.4f};migrate_s={t['migrate_s']:.4f}",
+            )
+        )
+    if print_csv:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""§Perf before/after summary: baseline vs optimized dry-run configurations.
+
+Reads roofline.jsonl (paper-faithful baseline) and roofline_opt.jsonl
+(shard_map MoE + decode cache context sharding) and reports the dominant
+roofline term's improvement per (arch x shape).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import csv_row
+
+DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _load(name: str) -> Dict:
+    out = {}
+    path = os.path.join(DIR, name)
+    if not os.path.exists(path):
+        return out
+    for ln in open(path):
+        ln = ln.strip()
+        if ln:
+            d = json.loads(ln)
+            out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def dominant(d: Dict) -> float:
+    return max(d["compute_term_s"], d["memory_term_s"], d["collective_term_s"])
+
+
+def main(print_csv: bool = True) -> List[str]:
+    rows: List[str] = []
+    base = _load("roofline.jsonl")
+    opt = _load("roofline_opt.jsonl")
+    if not opt:
+        rows.append(csv_row("perf/missing", 0.0, "run benchmarks/run_opt_sweep.sh"))
+    for k in sorted(opt):
+        if k not in base:
+            continue
+        b, o = base[k], opt[k]
+        x = dominant(b) / max(dominant(o), 1e-12)
+        pb = (b.get("peak_memory_per_device") or 0) / 1e9
+        po = (o.get("peak_memory_per_device") or 0) / 1e9
+        rows.append(
+            csv_row(
+                f"perf/{k[0]}/{k[1]}",
+                dominant(o) * 1e6,
+                f"dominant_x={x:.2f};peak_gb={pb:.1f}->{po:.1f};"
+                f"flops_ratio={b['model_flops_ratio']:.3f}->{o['model_flops_ratio']:.3f}",
+            )
+        )
+    if print_csv:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Fig. 18: profiling-cost reduction — estimator quality vs scheduling.
+
+Compares the scheduler packing on: (a) the Oracle (full offline profiling),
+(b) our linear-model + Bayesian-optimization estimator (§4.3), (c) the
+matrix-completion baseline (Gavel/Quasar).  Paper: linear+BO tracks Oracle
+with only a minor JCT loss and beats matrix completion.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core.cluster import ClusterSpec
+from repro.core.policies import TiresiasPolicy
+from repro.core.profiler import (
+    TabulatedProfile,
+    ThroughputProfile,
+    linear_bo_estimate,
+    matrix_completion_estimate,
+    oracle_table,
+)
+from repro.core.scheduler import TesseraeScheduler
+from repro.core.simulator import SimConfig, Simulator
+from repro.core.traces import TABLE1_MODELS, shockwave_trace
+
+CLUSTER = ClusterSpec(20, 4)
+NUM_JOBS = 200
+
+
+def main(print_csv: bool = True) -> List[str]:
+    rows: List[str] = []
+    truth = ThroughputProfile()
+    trace = shockwave_trace(num_jobs=NUM_JOBS, seed=7, profile=truth)
+
+    estimators = {
+        "oracle": TabulatedProfile(truth, oracle_table(truth, TABLE1_MODELS)),
+        "linear+bo": linear_bo_estimate(truth, TABLE1_MODELS, strategy_budget=3),
+        "matrix-completion": matrix_completion_estimate(
+            truth, TABLE1_MODELS, observed_fraction=0.4
+        ),
+    }
+    jcts = {}
+    for name, prof in estimators.items():
+        sched = TesseraeScheduler(CLUSTER, TiresiasPolicy(prof), prof)
+        res = Simulator(CLUSTER, trace, sched, truth, SimConfig()).run()
+        jcts[name] = res.avg_jct_s
+        rows.append(
+            csv_row(f"profiling_cost/{name}", 0.0, f"avg_jct_s={res.avg_jct_s:.0f}")
+        )
+    rows.append(
+        csv_row(
+            "profiling_cost/fig18_summary",
+            0.0,
+            f"linear_bo_vs_oracle_x={jcts['linear+bo'] / jcts['oracle']:.3f};"
+            f"mc_vs_oracle_x={jcts['matrix-completion'] / jcts['oracle']:.3f}"
+            "(paper: linear+BO ~ oracle, beats matrix completion)",
+        )
+    )
+    if print_csv:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Roofline table from the dry-run sweep (EXPERIMENTS.md §Roofline).
+
+Reads ``benchmarks/results/roofline.jsonl`` (written by
+``benchmarks/run_dryrun_sweep.sh``) and emits the per-(arch x shape)
+three-term table plus bottleneck classification; also registers the 10
+repro architectures into the scheduler's model catalog with
+roofline-derived compute intensities (the coupling described in DESIGN.md
+§2).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import csv_row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "roofline.jsonl")
+
+
+def load_reports(path: str = RESULTS) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    out = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            d = json.loads(line)
+            out[(d["arch"], d["shape"], d["mesh"])] = d  # last write wins
+    return list(out.values())
+
+
+def register_arch_profiles(reports: List[Dict]) -> int:
+    """Feed roofline-derived compute intensity into the Tesserae catalog."""
+    from repro.configs import get_config
+    from repro.core.profiler import register_model
+
+    n = 0
+    for d in reports:
+        if d["shape"] != "train_4k":
+            continue
+        ct, mt = d["compute_term_s"], d["memory_term_s"]
+        ci = ct / max(ct + mt, 1e-12)
+        cfg = get_config(d["arch"])
+        params_b = cfg.param_count() / 1e9
+        step_s = max(ct, mt, d["collective_term_s"])
+        register_model(
+            d["arch"],
+            ci=max(0.05, min(ci, 1.0)),
+            mem_gb=min(38.0, 2.0 + params_b * 0.15),
+            base_tput=1.0 / max(step_s, 1e-6),
+            is_llm=True,
+        )
+        n += 1
+    return n
+
+
+def markdown_table(reports: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | bottleneck | 6ND/HLO | peak_mem_GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in sorted(reports, key=lambda x: (x["arch"], x["shape"])):
+        peak = d.get("peak_memory_per_device")
+        peak_s = f"{peak / 1e9:.1f}" if peak else "?"
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+            f"| {d['compute_term_s']:.3g} | {d['memory_term_s']:.3g} "
+            f"| {d['collective_term_s']:.3g} | {d['bottleneck']} "
+            f"| {d['model_flops_ratio']:.2f} | {peak_s} |"
+        )
+    return "\n".join(lines)
+
+
+def main(print_csv: bool = True) -> List[str]:
+    rows: List[str] = []
+    reports = load_reports()
+    single = [d for d in reports if d["mesh"] == "16x16"]
+    if not single:
+        rows.append(
+            csv_row("roofline/missing", 0.0, "run benchmarks/run_dryrun_sweep.sh first")
+        )
+    for d in sorted(single, key=lambda x: (x["arch"], x["shape"])):
+        dominant = {"compute": d["compute_term_s"], "memory": d["memory_term_s"], "collective": d["collective_term_s"]}[d["bottleneck"]]
+        rows.append(
+            csv_row(
+                f"roofline/{d['arch']}/{d['shape']}",
+                dominant * 1e6,
+                f"bottleneck={d['bottleneck']};compute_s={d['compute_term_s']:.3g};"
+                f"memory_s={d['memory_term_s']:.3g};collective_s={d['collective_term_s']:.3g};"
+                f"useful_flops_ratio={d['model_flops_ratio']:.2f}",
+            )
+        )
+    n = register_arch_profiles(single)
+    rows.append(csv_row("roofline/registered_arch_profiles", 0.0, f"count={n}"))
+    if print_csv:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Coupling demo: Tesserae schedules the 10 assigned repro architectures.
+
+The dry-run roofline terms (benchmarks/results/roofline.jsonl, if present)
+feed each architecture's compute intensity + step time into the scheduler's
+throughput catalog; the trace then mixes repro-arch training jobs with the
+paper's Table-1 models and Tesserae packs/migrates them all.
+
+    PYTHONPATH=src python examples/cluster_sim.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline_report import load_reports, register_arch_profiles
+from repro.configs import list_archs
+from repro.core import ClusterSpec, SimConfig, Simulator, TesseraeScheduler
+from repro.core.jobs import MIGRATION_OVERHEAD_S
+from repro.core.policies import TiresiasPolicy
+from repro.core.profiler import MODEL_CATALOG, ThroughputProfile, register_model
+from repro.core.traces import TABLE1_MODELS, shockwave_trace
+
+
+def register_archs():
+    reports = load_reports()
+    n = register_arch_profiles(reports)
+    if n == 0:
+        # no dry-run results yet: fall back to analytic registration
+        from repro.configs import get_config
+
+        for arch in list_archs():
+            cfg = get_config(arch)
+            ci = 0.9 if cfg.arch_type in ("dense", "moe") else 0.5
+            register_model(
+                arch,
+                ci=ci,
+                mem_gb=min(38.0, 2.0 + cfg.param_count() / 1e9 * 0.15),
+                base_tput=max(0.05, 5e9 / cfg.param_count()),
+                is_llm=True,
+            )
+            n += 1
+    # big models checkpoint slowly -> higher migration overhead
+    for arch in list_archs():
+        from repro.configs import get_config
+
+        MIGRATION_OVERHEAD_S[arch] = min(
+            300.0, 30.0 + get_config(arch).param_count() / 1e9 * 0.5
+        )
+    return n
+
+
+def main():
+    n = register_archs()
+    print(f"registered {n} repro architectures into the Tesserae catalog")
+    profile = ThroughputProfile()
+    cluster = ClusterSpec(16, 4)
+    repro_models = [a for a in list_archs() if a in MODEL_CATALOG]
+    trace = shockwave_trace(
+        num_jobs=120, seed=1, extra_models=repro_models, profile=profile
+    )
+    n_repro = sum(1 for t in trace if t.model in repro_models)
+    print(f"trace: 120 jobs, {n_repro} of them repro-arch training jobs")
+
+    for packing in (False, True):
+        sched = TesseraeScheduler(
+            cluster,
+            TiresiasPolicy(profile),
+            profile,
+            enable_packing=packing,
+            migration_algorithm="node" if packing else "none",
+        )
+        res = Simulator(cluster, trace, sched, profile, SimConfig()).run()
+        name = "tesserae-t" if packing else "tiresias"
+        print(
+            f"  {name:11s} avg JCT {res.avg_jct_s:8.0f}s  "
+            f"makespan {res.makespan_s:8.0f}s  migrations {res.total_migrations}"
+        )
+
+
+if __name__ == "__main__":
+    main()

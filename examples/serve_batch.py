@@ -1,0 +1,42 @@
+"""Batched serving example: greedy decode with per-arch KV caches.
+
+Serves three architecture families side by side (GQA ring-buffer cache,
+MLA compressed-latent cache, Mamba2 recurrent state) to show the decode
+substrate is uniform across them.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models import get_model
+from repro.serve.engine import ServeConfig, greedy_generate
+
+ARCHS = ["llama3-8b", "deepseek-v2-236b", "mamba2-780m"]
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for arch in ARCHS:
+        cfg = get_reduced(arch)
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(0), cfg)
+        prompt = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(2, 8)), jnp.int32
+        )
+        sc = ServeConfig(batch_size=2, context_len=64)
+        t0 = time.perf_counter()
+        out = greedy_generate(params, cfg, prompt, 16, sc)
+        dt = time.perf_counter() - t0
+        assert out.shape == (2, 8 + 16)
+        print(f"{cfg.name:22s} cache={'state' if cfg.arch_type == 'ssm' else 'kv'} "
+              f"32 tokens in {dt:.2f}s -> {np.asarray(out[0, 8:14]).tolist()}")
+
+
+if __name__ == "__main__":
+    main()

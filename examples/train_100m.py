@@ -1,0 +1,74 @@
+"""End-to-end training driver: a ~100M-param llama-family model.
+
+Default invocation trains a scaled-down variant for a quick CPU demo; pass
+``--full-100m --steps 300`` for the full ~100M x few-hundred-steps run the
+deliverable describes (minutes-to-hours on CPU; instant on real devices).
+
+    PYTHONPATH=src python examples/train_100m.py            # ~20M quick demo
+    PYTHONPATH=src python examples/train_100m.py --full-100m --steps 300
+"""
+
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.configs.llama3_8b import CONFIG as LLAMA
+from repro.launch.train import train_loop
+
+
+def model_100m():
+    return dataclasses.replace(
+        LLAMA,
+        name="llama-100m",
+        num_layers=12,
+        d_model=640,
+        num_heads=10,
+        num_kv_heads=2,
+        head_dim=64,
+        d_ff=1792,
+        vocab_size=32768,
+    )
+
+
+def model_20m():
+    return dataclasses.replace(
+        LLAMA,
+        name="llama-20m",
+        num_layers=6,
+        d_model=384,
+        num_heads=6,
+        num_kv_heads=2,
+        head_dim=64,
+        d_ff=1024,
+        vocab_size=8192,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full-100m", action="store_true")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = model_100m() if args.full_100m else model_20m()
+    print(f"{cfg.name}: {cfg.param_count() / 1e6:.1f}M params")
+    _, losses = train_loop(
+        cfg,
+        steps=args.steps,
+        batch_size=args.batch,
+        seq_len=args.seq,
+        lr=1e-3,
+        ckpt_path="/tmp/repro_ckpt/train100m.npz",
+        ckpt_every=max(args.steps // 2, 1),
+    )
+    first, last = float(np.mean(losses[:5])), float(np.mean(losses[-5:]))
+    print(f"loss first5={first:.3f} last5={last:.3f}")
+    assert last < first, "loss did not decrease"
+    print("OK: loss decreased; checkpoint written to /tmp/repro_ckpt/")
+
+
+if __name__ == "__main__":
+    main()

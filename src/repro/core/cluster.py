@@ -1,0 +1,165 @@
+"""Cluster topology and placement-plan representation.
+
+A placement plan is the object the paper's Algorithms 2/3/5 operate on:
+which job(s) sit on every GPU of every node.  We represent it densely as an
+int array
+
+    ``slots[node, gpu_in_node, pack_slot] = job_id`` (``-1`` = empty)
+
+with ``pack_slot < MAX_PACK = 2`` because "Tesserae imposes a limit of two
+models running simultaneously on each GPU" (§5).
+
+GPUs are homogeneous within a cluster (§4.1 assumption); heterogeneous
+evaluations (A100 vs V100, Fig. 12b) swap the *throughput profile*, not the
+topology.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, Iterable, List, Tuple
+
+import numpy as np
+
+MAX_PACK = 2
+EMPTY = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    num_nodes: int
+    gpus_per_node: int
+    #: label only (profiles key off it): "a100", "v100", "tpu-v5e", ...
+    gpu_type: str = "a100"
+
+    @property
+    def num_gpus(self) -> int:
+        return self.num_nodes * self.gpus_per_node
+
+    def gpu_id(self, node: int, local: int) -> int:
+        return node * self.gpus_per_node + local
+
+    def node_of(self, gpu_id: int) -> int:
+        return gpu_id // self.gpus_per_node
+
+    def local_of(self, gpu_id: int) -> int:
+        return gpu_id % self.gpus_per_node
+
+
+class PlacementPlan:
+    """Dense job-on-GPU map with set-style helpers used by the matchers."""
+
+    def __init__(self, cluster: ClusterSpec, slots: np.ndarray | None = None):
+        self.cluster = cluster
+        if slots is None:
+            slots = np.full(
+                (cluster.num_nodes, cluster.gpus_per_node, MAX_PACK),
+                EMPTY,
+                dtype=np.int64,
+            )
+        expected = (cluster.num_nodes, cluster.gpus_per_node, MAX_PACK)
+        if slots.shape != expected:
+            raise ValueError(f"slots shape {slots.shape} != {expected}")
+        self.slots = slots
+
+    # ------------------------------------------------------------------ #
+    def copy(self) -> "PlacementPlan":
+        return PlacementPlan(self.cluster, self.slots.copy())
+
+    def jobs_on_gpu(self, node: int, local: int) -> Tuple[int, ...]:
+        js = self.slots[node, local]
+        return tuple(int(j) for j in js if j != EMPTY)
+
+    def job_ids(self) -> FrozenSet[int]:
+        flat = self.slots[self.slots != EMPTY]
+        return frozenset(int(j) for j in flat)
+
+    def gpus_of_job(self, job_id: int) -> FrozenSet[int]:
+        nodes, locals_, _ = np.nonzero(self.slots == job_id)
+        return frozenset(
+            self.cluster.gpu_id(int(n), int(l)) for n, l in zip(nodes, locals_)
+        )
+
+    def job_gpu_map(self) -> Dict[int, FrozenSet[int]]:
+        out: Dict[int, set] = {}
+        nodes, locals_, packs = np.nonzero(self.slots != EMPTY)
+        for n, l, p in zip(nodes, locals_, packs):
+            j = int(self.slots[n, l, p])
+            out.setdefault(j, set()).add(self.cluster.gpu_id(int(n), int(l)))
+        return {j: frozenset(g) for j, g in out.items()}
+
+    def free_gpus_per_node(self) -> np.ndarray:
+        """Number of completely empty GPUs on each node."""
+        empty = (self.slots == EMPTY).all(axis=-1)
+        return empty.sum(axis=-1)
+
+    def pack_capacity(self, node: int, local: int) -> int:
+        return int((self.slots[node, local] == EMPTY).sum())
+
+    def place_job(self, job_id: int, gpu_ids: Iterable[int]) -> None:
+        for g in gpu_ids:
+            n, l = self.cluster.node_of(g), self.cluster.local_of(g)
+            row = self.slots[n, l]
+            free = np.nonzero(row == EMPTY)[0]
+            if len(free) == 0:
+                raise ValueError(f"GPU {g} already holds {MAX_PACK} jobs")
+            row[free[0]] = job_id
+
+    def remove_job(self, job_id: int) -> None:
+        self.slots[self.slots == job_id] = EMPTY
+
+    def without_jobs(self, drop: Iterable[int]) -> "PlacementPlan":
+        out = self.copy()
+        for j in drop:
+            out.remove_job(j)
+        return out
+
+    def restricted_to(self, keep: Iterable[int]) -> "PlacementPlan":
+        keep = set(keep)
+        out = self.copy()
+        mask = ~np.isin(out.slots, list(keep)) & (out.slots != EMPTY)
+        out.slots[mask] = EMPTY
+        return out
+
+    def is_consolidated(self, job_id: int) -> bool:
+        """True if the job occupies one node, or whole nodes only."""
+        nodes, locals_, _ = np.nonzero(self.slots == job_id)
+        if len(nodes) == 0:
+            return True
+        unique_nodes = np.unique(nodes)
+        if len(unique_nodes) == 1:
+            return True
+        # multi-node: every touched node must be fully covered by this job
+        for n in unique_nodes:
+            covered = np.unique(locals_[nodes == n])
+            if len(covered) != self.cluster.gpus_per_node:
+                return False
+        return True
+
+    def __eq__(self, other) -> bool:  # slot-order-insensitive equality
+        if not isinstance(other, PlacementPlan):
+            return NotImplemented
+        return self.job_gpu_map() == other.job_gpu_map()
+
+    def __repr__(self) -> str:
+        rows: List[str] = []
+        for n in range(self.cluster.num_nodes):
+            cells = []
+            for l in range(self.cluster.gpus_per_node):
+                js = self.jobs_on_gpu(n, l)
+                cells.append("+".join(map(str, js)) if js else ".")
+            rows.append(f"node{n}[{' '.join(cells)}]")
+        return "Placement(" + " | ".join(rows) + ")"
+
+
+def count_migrations(
+    prev: PlacementPlan,
+    new: PlacementPlan,
+    num_gpus_of: Dict[int, int] | None = None,
+) -> int:
+    """Definition 1: a job migrated iff present in both rounds with a
+    different physical GPU set."""
+    prev_map = prev.job_gpu_map()
+    new_map = new.job_gpu_map()
+    common = set(prev_map) & set(new_map)
+    return sum(1 for j in common if prev_map[j] != new_map[j])

@@ -1,0 +1,25 @@
+"""Assignment (linear-sum-assignment / LAP) solvers used by Tesserae.
+
+Three interchangeable backends:
+
+* :func:`repro.core.matching.hungarian.linear_sum_assignment` — our own
+  numpy-vectorised Jonker-Volgenant-style shortest-augmenting-path solver
+  (no scipy dependency), used for small/medium problems and as a second
+  oracle in tests.
+* ``scipy.optimize.linear_sum_assignment`` — the backend the paper itself
+  uses (§5 "We use Scipy to generate the migration plan ... and solve the
+  weighted bipartite graph matching problem").  Default for large n.
+* :func:`repro.core.matching.auction.auction_lap` — a jit/vmap-able JAX
+  auction-algorithm solver (beyond-paper): Algorithm 2 solves k_c**2
+  independent node-level LAPs, which we batch with ``jax.vmap``.
+"""
+
+from repro.core.matching.hungarian import linear_sum_assignment, solve_lap
+from repro.core.matching.auction import auction_lap, auction_lap_batched
+
+__all__ = [
+    "linear_sum_assignment",
+    "solve_lap",
+    "auction_lap",
+    "auction_lap_batched",
+]

@@ -1,0 +1,125 @@
+"""Packing as maximum-weight bipartite matching (§4.2, Algorithm 4).
+
+Build G = (V1, V2, E): V1 = placed_jobs, V2 = pending_jobs, an edge (u, v)
+iff the two jobs request the same number of GPUs (so v can overlay u's
+GPUs), weight = profiled combined normalised throughput — maximised over
+job u's parallelism-strategy candidates when enabled (Fig. 7b).
+
+Solving the matching (Hungarian / auction) yields at most one pending job
+per placed job, maximising total cluster throughput.  Jobs flagged
+non-packable (strict deadline / priority, §4.3 "Fairness") get no edges.
+
+Implementation note: we embed the bipartite graph in a rectangular benefit
+matrix with 0 for missing edges; a zero-weight "match" is interpreted as
+*no packing* (packing with combined weight 0 is never beneficial since any
+positive weight adds throughput for a job that would otherwise idle in the
+queue).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.jobs import JobState
+from repro.core.matching.hungarian import solve_lap
+from repro.core.profiler import ThroughputProfile
+
+
+@dataclasses.dataclass
+class PackingResult:
+    #: pending job id -> placed job id
+    matches: Dict[int, int]
+    #: placed job id -> chosen parallelism strategy (LLM jobs whose strategy
+    #: the matcher re-optimised to lift the edge weight)
+    strategies: Dict[int, str]
+    total_weight: float
+    wall_time_s: float
+    num_edges: int
+
+
+def build_packing_graph(
+    placed: Sequence[JobState],
+    pending: Sequence[JobState],
+    profile: ThroughputProfile,
+    optimize_strategy: bool = True,
+    packed_ok=None,
+) -> np.ndarray:
+    """Benefit matrix (|placed| x |pending|), fully vectorised.
+
+    The per-MODEL-pair weight is memoised in the profile; the per-JOB-pair
+    matrix is assembled with numpy indexing (the O(n^2) loop in pure Python
+    was the scalability bottleneck — see EXPERIMENTS.md §Perf, scheduler
+    iteration 1)."""
+    p, q = len(placed), len(pending)
+    if p == 0 or q == 0:
+        return np.zeros((p, q), dtype=np.float64)
+
+    models = sorted({u.spec.model for u in placed} | {v.spec.model for v in pending})
+    midx = {m: i for i, m in enumerate(models)}
+    n_m = len(models)
+    pairw = np.zeros((n_m, n_m), dtype=np.float64)
+    for a in models:
+        for b in models:
+            pairw[midx[a], midx[b]] = profile.combined_weight(
+                a, b, optimize_strategy=optimize_strategy
+            )[0]
+
+    mp = np.array([midx[u.spec.model] for u in placed])
+    mq = np.array([midx[v.spec.model] for v in pending])
+    gi = np.array([u.num_gpus for u in placed])
+    gj = np.array([v.num_gpus for v in pending])
+    ok_p = np.array(
+        [u.spec.packable and u.packed_with is None for u in placed], dtype=bool
+    )
+    ok_q = np.array([v.spec.packable for v in pending], dtype=bool)
+
+    mask = (gi[:, None] == gj[None, :]) & ok_p[:, None] & ok_q[None, :]
+    if packed_ok is not None:
+        if getattr(packed_ok, "vectorized_on_gpus", False):
+            mask &= packed_ok.gpu_mask(gi, gj)
+        else:
+            ii, jj = np.nonzero(mask)
+            for i, j in zip(ii, jj):
+                if not packed_ok(placed[i], pending[j]):
+                    mask[i, j] = False
+    return np.where(mask, pairw[mp[:, None], mq[None, :]], 0.0)
+
+
+def pack_jobs(
+    placed: Sequence[JobState],
+    pending: Sequence[JobState],
+    profile: ThroughputProfile,
+    optimize_strategy: bool = True,
+    backend: str = "auto",
+    packed_ok=None,
+) -> PackingResult:
+    """Algorithm 4."""
+    t0 = time.perf_counter()
+    if not placed or not pending:
+        return PackingResult({}, {}, 0.0, time.perf_counter() - t0, 0)
+    w = build_packing_graph(placed, pending, profile, optimize_strategy, packed_ok)
+    num_edges = int((w > 0).sum())
+    if num_edges == 0:
+        return PackingResult({}, {}, 0.0, time.perf_counter() - t0, 0)
+    rows, cols = solve_lap(w, maximize=True, backend=backend)
+    matches: Dict[int, int] = {}
+    strategies: Dict[int, str] = {}
+    total = 0.0
+    for i, j in zip(rows, cols):
+        if w[i, j] <= 0.0:
+            continue  # zero-weight assignment = leave unpacked
+        u, v = placed[i], pending[j]
+        matches[v.job_id] = u.job_id
+        _, s = profile.combined_weight(
+            u.spec.model, v.spec.model, optimize_strategy=optimize_strategy
+        )
+        if s != "dp":
+            strategies[u.job_id] = s
+        total += w[i, j]
+    return PackingResult(
+        matches, strategies, float(total), time.perf_counter() - t0, num_edges
+    )

@@ -1,0 +1,96 @@
+"""Allocation without packing (Listing 1 lines 5-12, Fig. 5).
+
+Given the priority-sorted active jobs, place as many as possible on empty
+GPUs subject to **consolidated placement**:
+
+* a job needing ``g <= gpus_per_node`` GPUs must get all of them on one
+  node (best-fit: the node with the fewest free GPUs that still fits, to
+  keep large holes open for large jobs);
+* a job needing ``g > gpus_per_node`` GPUs must get whole nodes.
+
+Placement can fail (line 8) when no consolidated hole exists even if the
+total free GPU count suffices — those jobs go to ``pending_jobs`` and
+become packing candidates (Algorithm 4).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cluster import EMPTY, ClusterSpec, PlacementPlan
+from repro.core.jobs import JobState
+
+
+def place_without_packing(
+    cluster: ClusterSpec,
+    sorted_jobs: Sequence[JobState],
+) -> Tuple[PlacementPlan, List[JobState], List[JobState]]:
+    """Greedy consolidated placement of priority-sorted jobs.
+
+    Returns ``(plan, placed_jobs, pending_jobs)``.  Mirrors Listing 1: we
+    keep walking the priority list while any GPU remains free, so a small
+    job can fill a hole a larger, higher-priority job could not use.
+    """
+    plan = PlacementPlan(cluster)
+    placed: List[JobState] = []
+    pending: List[JobState] = []
+    free_per_node = np.full(cluster.num_nodes, cluster.gpus_per_node, np.int64)
+    gpn = cluster.gpus_per_node
+
+    for job in sorted_jobs:
+        g = job.num_gpus
+        if free_per_node.sum() <= 0:
+            pending.append(job)
+            continue
+        if g <= gpn:
+            # best fit: smallest adequate hole
+            candidates = np.nonzero(free_per_node >= g)[0]
+            if len(candidates) == 0:
+                pending.append(job)
+                continue
+            node = int(candidates[np.argmin(free_per_node[candidates])])
+            gpus = _take_free_gpus(plan, node, g)
+        else:
+            if g % gpn != 0:
+                raise ValueError(
+                    f"job {job.job_id}: {g} GPUs not a multiple of node size {gpn}"
+                )
+            need_nodes = g // gpn
+            empty_nodes = np.nonzero(free_per_node == gpn)[0]
+            if len(empty_nodes) < need_nodes:
+                pending.append(job)
+                continue
+            gpus = []
+            for node in empty_nodes[:need_nodes]:
+                gpus.extend(_take_free_gpus(plan, int(node), gpn))
+        plan.place_job(job.job_id, gpus)
+        for gid in gpus:
+            free_per_node[cluster.node_of(gid)] -= 1
+        placed.append(job)
+    return plan, placed, pending
+
+
+def _take_free_gpus(plan: PlacementPlan, node: int, count: int) -> List[int]:
+    cluster = plan.cluster
+    out: List[int] = []
+    for local in range(cluster.gpus_per_node):
+        if (plan.slots[node, local] == EMPTY).all():
+            out.append(cluster.gpu_id(node, local))
+            if len(out) == count:
+                return out
+    raise RuntimeError(f"node {node} lacks {count} free GPUs")  # pragma: no cover
+
+
+def apply_packing(
+    plan: PlacementPlan,
+    matches: Dict[int, int],
+    placed_lookup: Dict[int, JobState],
+) -> PlacementPlan:
+    """Overlay pending jobs onto their matched placed jobs' GPUs."""
+    out = plan.copy()
+    for pending_id, placed_id in matches.items():
+        gpus = out.gpus_of_job(placed_id)
+        out.place_job(pending_id, gpus)
+    return out

@@ -1,0 +1,34 @@
+"""Scheduling (priority-ordering) policies Tesserae composes with.
+
+Tesserae deliberately does NOT invent a scheduling policy: it consumes the
+priority order produced by an existing one (§3.1).  We implement the ones
+the paper evaluates with — FIFO, SRTF, Tiresias 2D-LAS, Themis FTF — plus
+the optimisation-based baselines Gavel (LP) and POP (partitioned LP), which
+are *whole schedulers* used for the scalability and JCT comparisons.
+"""
+
+from repro.core.policies.base import SchedulingPolicy
+from repro.core.policies.simple import FifoPolicy, SrtfPolicy
+from repro.core.policies.tiresias import TiresiasPolicy
+from repro.core.policies.themis import ThemisFtfPolicy
+from repro.core.policies.gavel import GavelPolicy, PopPolicy
+
+POLICIES = {
+    "fifo": FifoPolicy,
+    "srtf": SrtfPolicy,
+    "tiresias": TiresiasPolicy,
+    "ftf": ThemisFtfPolicy,
+    "gavel": GavelPolicy,
+    "pop": PopPolicy,
+}
+
+__all__ = [
+    "SchedulingPolicy",
+    "FifoPolicy",
+    "SrtfPolicy",
+    "TiresiasPolicy",
+    "ThemisFtfPolicy",
+    "GavelPolicy",
+    "PopPolicy",
+    "POLICIES",
+]

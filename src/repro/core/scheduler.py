@@ -1,0 +1,132 @@
+"""The Tesserae round scheduler (Listing 1 + Fig. 4).
+
+One ``decide()`` call per scheduling round:
+
+1. sort active jobs by the composed scheduling policy's priority,
+2. place as many as possible WITHOUT packing, consolidated (Fig. 5),
+3. if GPU sharing is enabled, pack pending jobs onto placed jobs via the
+   max-weight bipartite matching of Algorithm 4,
+4. compute the migration plan vs. the previous round's physical placement
+   (Algorithms 2+3) and emit the physically-relabelled plan.
+
+The per-stage wall times are recorded — they are the Fig. 14(b) overhead
+breakdown and the Fig. 2 decision-time measurements.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.cluster import ClusterSpec, PlacementPlan
+from repro.core.jobs import JobState
+from repro.core.migration import MigrationResult, plan_migration
+from repro.core.packing import PackingResult, pack_jobs
+from repro.core.placement import apply_packing, place_without_packing
+from repro.core.policies.base import SchedulingPolicy
+from repro.core.profiler import ThroughputProfile
+
+
+@dataclasses.dataclass
+class RoundDecision:
+    plan: PlacementPlan  # physical plan for the next round
+    placed: List[JobState]
+    pending: List[JobState]
+    packing: PackingResult
+    migration: Optional[MigrationResult]
+    timings: Dict[str, float]
+
+    @property
+    def total_overhead_s(self) -> float:
+        return sum(self.timings.values())
+
+
+class TesseraeScheduler:
+    """Placement policy engine composed with a pluggable scheduling policy."""
+
+    def __init__(
+        self,
+        cluster: ClusterSpec,
+        policy: SchedulingPolicy,
+        profile: ThroughputProfile,
+        enable_packing: bool = True,
+        optimize_strategy: bool = True,
+        migration_algorithm: str = "node",  # node | flat | none
+        lap_backend: str = "auto",
+        packed_ok: Optional[Callable[[JobState, JobState], bool]] = None,
+    ):
+        self.cluster = cluster
+        self.policy = policy
+        self.profile = profile
+        self.enable_packing = enable_packing
+        self.optimize_strategy = optimize_strategy
+        self.migration_algorithm = migration_algorithm
+        self.lap_backend = lap_backend
+        self.packed_ok = packed_ok
+
+    def decide(
+        self,
+        active_jobs: Sequence[JobState],
+        now: float,
+        prev_plan: Optional[PlacementPlan] = None,
+        num_gpus_of: Optional[Dict[int, int]] = None,
+    ) -> RoundDecision:
+        timings: Dict[str, float] = {}
+
+        t0 = time.perf_counter()
+        ordered = self.policy.order(active_jobs, now, self.cluster)
+        timings["schedule_s"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        plan, placed, pending = place_without_packing(self.cluster, ordered)
+        timings["place_s"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        if self.enable_packing:
+            packing = pack_jobs(
+                placed,
+                pending,
+                self.profile,
+                optimize_strategy=self.optimize_strategy,
+                backend=self.lap_backend,
+                packed_ok=self.packed_ok,
+            )
+            if packing.matches:
+                placed_lookup = {j.job_id: j for j in placed}
+                plan = apply_packing(plan, packing.matches, placed_lookup)
+        else:
+            packing = PackingResult({}, {}, 0.0, 0.0, 0)
+        timings["pack_s"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        migration: Optional[MigrationResult] = None
+        if prev_plan is not None:
+            gmap: Dict[int, int] = dict(num_gpus_of or {})
+            for j in active_jobs:
+                gmap.setdefault(j.job_id, j.num_gpus)
+            migration = plan_migration(
+                prev_plan,
+                plan,
+                gmap,
+                algorithm=self.migration_algorithm,
+                backend=self.lap_backend,
+            )
+            plan = migration.physical_plan
+        timings["migrate_s"] = time.perf_counter() - t0
+
+        return RoundDecision(plan, placed, pending, packing, migration, timings)
+
+
+def tiresias_single_packed_ok(u: JobState, v: JobState) -> bool:
+    """Tiresias (Single) baseline: only pack 1-GPU jobs (Lucid/Pollux rule —
+    'at most one distributed job per node', so distributed jobs never
+    share)."""
+    return u.num_gpus == 1 and v.num_gpus == 1
+
+
+# vectorised fast path used by build_packing_graph on large rounds
+tiresias_single_packed_ok.vectorized_on_gpus = True
+tiresias_single_packed_ok.gpu_mask = lambda gi, gj: (gi[:, None] == 1) & (
+    gj[None, :] == 1
+)

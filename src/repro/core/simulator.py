@@ -1,0 +1,280 @@
+"""Round-based discrete-event simulator (§5 "Schedulers", §6.2).
+
+The paper validates its simulator against a 32-GPU Perlmutter cluster
+(Table 2, max deviation 5.42%) and then runs all large-scale comparisons in
+simulation; we inherit that methodology.  Semantics:
+
+* scheduling happens every ``round_duration_s`` (six minutes, §5);
+* within a round a job progresses at
+  ``isolated_tput(model, gpus, strategy) * packed_factor`` iters/sec,
+* a migrated job first pays its migration debt (checkpoint save + load +
+  warmup, Fig. 3) before making progress; a *newly started or resumed* job
+  pays half the debt (warmup / checkpoint-load only),
+* jobs finishing mid-round release GPUs only at the next round boundary
+  (round-based semantics; Tesserae "only preempts the job after the job
+  finishes the current iteration").
+
+Throughput truth vs. belief: the scheduler consults ``sched_profile``
+(possibly noisy / estimated, Figs. 16 & 18) while the simulator advances
+jobs with ``true_profile``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cluster import ClusterSpec, PlacementPlan
+from repro.core.jobs import JobSpec, JobState, migration_overhead_s
+from repro.core.policies.base import SchedulingPolicy
+from repro.core.policies.gavel import GavelPolicy
+from repro.core.policies.themis import ThemisFtfPolicy
+from repro.core.profiler import ThroughputProfile
+from repro.core.scheduler import RoundDecision, TesseraeScheduler
+
+
+@dataclasses.dataclass
+class SimConfig:
+    round_duration_s: float = 360.0
+    max_time_s: float = 60 * 24 * 3600.0
+    migration_penalty: bool = True
+    #: fraction of the migration debt charged on a cold start / resume
+    startup_fraction: float = 0.5
+
+
+@dataclasses.dataclass
+class SimResult:
+    jobs: Dict[int, JobState]
+    makespan_s: float
+    num_rounds: int
+    total_migrations: int
+    #: per-round scheduler overhead breakdown (schedule/place/pack/migrate)
+    overhead: Dict[str, float]
+    lp_refresh_s: float
+    contention_integral: Dict[int, float]  # job_id -> avg demand/capacity
+
+    @property
+    def jcts(self) -> np.ndarray:
+        return np.array(
+            [s.finish_time - s.spec.arrival_time for s in self.jobs.values()]
+        )
+
+    @property
+    def avg_jct_s(self) -> float:
+        return float(self.jcts.mean())
+
+    def ftf_ratios(self, profile: ThroughputProfile) -> np.ndarray:
+        """rho = T_shared / T_fair; T_fair = isolated duration stretched by
+        the average demand/capacity contention over the job's lifetime."""
+        out = []
+        for jid, s in self.jobs.items():
+            tput = profile.isolated(s.spec.model, s.num_gpus, "dp")
+            iso = s.spec.total_iters / max(tput, 1e-9)
+            contention = max(1.0, self.contention_integral.get(jid, 1.0))
+            t_fair = iso * contention
+            t_shared = s.finish_time - s.spec.arrival_time
+            out.append(t_shared / max(t_fair, 1e-9))
+        return np.array(out)
+
+    def summary(self, profile: Optional[ThroughputProfile] = None) -> Dict[str, float]:
+        d = {
+            "avg_jct_s": self.avg_jct_s,
+            "p50_jct_s": float(np.median(self.jcts)),
+            "p90_jct_s": float(np.percentile(self.jcts, 90)),
+            "makespan_s": self.makespan_s,
+            "migrations": float(self.total_migrations),
+            "rounds": float(self.num_rounds),
+            "overhead_total_s": float(sum(self.overhead.values())) + self.lp_refresh_s,
+        }
+        if profile is not None:
+            rho = self.ftf_ratios(profile)
+            d["ftf_worst"] = float(rho.max())
+            d["ftf_p90"] = float(np.percentile(rho, 90))
+        return d
+
+
+class Simulator:
+    def __init__(
+        self,
+        cluster: ClusterSpec,
+        trace: Sequence[JobSpec],
+        scheduler: TesseraeScheduler,
+        true_profile: ThroughputProfile,
+        config: SimConfig | None = None,
+    ):
+        self.cluster = cluster
+        self.trace = sorted(trace, key=lambda s: (s.arrival_time, s.job_id))
+        self.scheduler = scheduler
+        self.true_profile = true_profile
+        self.config = config or SimConfig()
+
+    # ------------------------------------------------------------------ #
+    def run(self) -> SimResult:
+        cfg = self.config
+        states: Dict[int, JobState] = {
+            s.job_id: JobState(spec=s) for s in self.trace
+        }
+        num_gpus_of = {s.job_id: s.num_gpus for s in self.trace}
+        now = 0.0
+        prev_plan: Optional[PlacementPlan] = None
+        prev_gpus: Dict[int, frozenset] = {}
+        total_migrations = 0
+        overhead: Dict[str, float] = {}
+        lp_refresh_s = 0.0
+        contention_num: Dict[int, float] = {}
+        contention_den: Dict[int, float] = {}
+        rounds = 0
+
+        while now < cfg.max_time_s:
+            active = [
+                s
+                for s in states.values()
+                if s.spec.arrival_time <= now and not s.finished
+            ]
+            future = [
+                s
+                for s in states.values()
+                if s.spec.arrival_time > now and not s.finished
+            ]
+            if not active and not future:
+                break
+            if not active:
+                # idle until the next arrival's round boundary
+                next_arrival = min(s.spec.arrival_time for s in future)
+                k = int(np.floor(next_arrival / cfg.round_duration_s))
+                now = max(now + cfg.round_duration_s, k * cfg.round_duration_s)
+                continue
+
+            # LP-based policies re-solve their optimisation once per round.
+            if isinstance(self.scheduler.policy, GavelPolicy):
+                lp_refresh_s += self.scheduler.policy.refresh(active, self.cluster)
+            if isinstance(self.scheduler.policy, ThemisFtfPolicy):
+                demand = sum(j.num_gpus for j in active)
+                self.scheduler.policy.avg_contention = max(
+                    1.0, demand / self.cluster.num_gpus
+                )
+
+            decision = self.scheduler.decide(active, now, prev_plan, num_gpus_of)
+            for k, v in decision.timings.items():
+                overhead[k] = overhead.get(k, 0.0) + v
+            if decision.migration is not None:
+                total_migrations += decision.migration.num_migrations
+            if isinstance(self.scheduler.policy, GavelPolicy):
+                self.scheduler.policy.note_round(
+                    [j.job_id for j in decision.placed]
+                )
+
+            self._advance_round(
+                decision, states, now, prev_gpus, num_gpus_of
+            )
+
+            # contention bookkeeping for FTF
+            demand = sum(j.num_gpus for j in active)
+            ratio = demand / self.cluster.num_gpus
+            for j in active:
+                contention_num[j.job_id] = (
+                    contention_num.get(j.job_id, 0.0) + ratio
+                )
+                contention_den[j.job_id] = contention_den.get(j.job_id, 0.0) + 1.0
+
+            plan_map = decision.plan.job_gpu_map()
+            prev_gpus = dict(plan_map)
+            prev_plan = decision.plan.restricted_to(
+                [j for j in plan_map if not states[j].finished]
+            )
+            now += cfg.round_duration_s
+            rounds += 1
+
+        unfinished = [s for s in states.values() if not s.finished]
+        for s in unfinished:  # should not happen with max_time high enough
+            s.finish_time = cfg.max_time_s
+        makespan = max((s.finish_time for s in states.values()), default=0.0)
+        contention = {
+            j: contention_num[j] / contention_den[j]
+            for j in contention_num
+            if contention_den.get(j)
+        }
+        return SimResult(
+            states,
+            makespan,
+            rounds,
+            total_migrations,
+            overhead,
+            lp_refresh_s,
+            contention,
+        )
+
+    # ------------------------------------------------------------------ #
+    def _advance_round(
+        self,
+        decision: RoundDecision,
+        states: Dict[int, JobState],
+        now: float,
+        prev_gpus: Dict[int, frozenset],
+        num_gpus_of: Dict[int, int],
+    ) -> None:
+        cfg = self.config
+        plan_map = decision.plan.job_gpu_map()
+        packed_partner: Dict[int, int] = {}
+        for pending_id, placed_id in decision.packing.matches.items():
+            packed_partner[pending_id] = placed_id
+            packed_partner[placed_id] = pending_id
+
+        for jid, gpus in plan_map.items():
+            s = states[jid]
+            if s.finished:
+                continue
+            # strategy chosen by the packing matcher applies WHILE PACKED;
+            # an unpacked job reverts to its best isolated strategy (dp)
+            s.strategy = decision.packing.strategies.get(jid, "dp")
+            # migration / startup debt
+            if cfg.migration_penalty:
+                prev = prev_gpus.get(jid)
+                if prev is None:
+                    if s.executed_time == 0.0 or s.gpus:
+                        pass
+                    s.migration_debt += cfg.startup_fraction * migration_overhead_s(
+                        s.spec.model
+                    )
+                elif prev != gpus:
+                    s.migrations += 1
+                    s.migration_debt += migration_overhead_s(s.spec.model)
+            s.gpus = gpus
+
+            partner = packed_partner.get(jid)
+            factor = 1.0
+            if partner is not None and partner in plan_map:
+                me, other = s.spec.model, states[partner].spec.model
+                na, nb = self.true_profile.normalized_packed(
+                    me, other, strat_a=s.strategy, strat_b=states[partner].strategy
+                )
+                factor = na if na > 0 else 1.0
+            rate = (
+                self.true_profile.isolated(s.spec.model, s.num_gpus, s.strategy)
+                * factor
+            )
+
+            debt = min(s.migration_debt, cfg.round_duration_s)
+            s.migration_debt -= debt
+            run_time = cfg.round_duration_s - debt
+            if s.first_run_time is None:
+                s.first_run_time = now + debt
+            remaining = s.remaining_iters()
+            if rate * run_time >= remaining and rate > 0:
+                finish_delay = debt + remaining / rate
+                s.iters_done = s.spec.total_iters
+                s.finish_time = now + finish_delay
+                s.executed_time += remaining / rate
+                s.attained_service += s.num_gpus * (remaining / rate)
+            else:
+                s.iters_done += rate * run_time
+                s.executed_time += run_time
+                s.attained_service += s.num_gpus * run_time
+
+        # jobs not in the plan keep waiting (attain no service)
+        for jid, s in states.items():
+            if jid not in plan_map and not s.finished:
+                s.gpus = frozenset()

@@ -1,0 +1,135 @@
+"""Pallas kernel: flash-decoding — one query vs a long KV cache.
+
+The serving hot spot (decode_32k / long_500k): every step each sequence
+attends ONE query token against a 32k–524k entry cache.  The unfused path
+materialises (H, S) logits through HBM; this kernel streams the cache in
+(BLOCK_K x D) tiles with an online-softmax carry, touching each cache byte
+exactly once.
+
+GQA without materialisation: the grid runs one program per (batch x Q-head)
+and the K/V BlockSpec *index map* routes head h to its KV group h // (H/KV)
+— the repeated-KV tensor is never built.
+
+Ring-buffer semantics: ``valid_len`` (SMEM scalar) masks cache slots beyond
+the valid prefix, matching the model's ``kv_valid_len`` mask.  Validated
+against ``ref.flash_decode`` in interpret mode (CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+BLOCK_K = 512
+
+
+def _decode_kernel(
+    vl_ref,    # (1, 1) int32 in SMEM: number of valid cache slots
+    q_ref,     # (1, D)
+    k_ref,     # (1, BK, D)
+    v_ref,     # (1, BK, D)
+    o_ref,     # (1, D)
+    acc_ref,   # (1, D) f32 scratch
+    m_ref,     # (1, 1) f32 scratch
+    l_ref,     # (1, 1) f32 scratch
+    *,
+    scale: float,
+    block_k: int,
+):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    vl = vl_ref[0, 0]
+
+    @pl.when(ki * block_k < vl)  # skip tiles entirely past the valid prefix
+    def _step():
+        q = q_ref[...].astype(jnp.float32) * scale         # (1, D)
+        k = k_ref[0].astype(jnp.float32)                   # (BK, D)
+        v = v_ref[0].astype(jnp.float32)                   # (BK, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (1, BK)
+        cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols < vl, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)                              # (1, BK)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode_pallas(
+    q: jax.Array,          # (B, H, D)
+    k: jax.Array,          # (B, S, KV, D)
+    v: jax.Array,          # (B, S, KV, D)
+    valid_len: jax.Array,  # scalar int32
+    block_k: int = BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    """Single-token GQA attention over a (ring-buffer) cache; (B, H, D)."""
+    b, h, d = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+
+    s_pad = max((s + block_k - 1) // block_k * block_k, block_k)
+    block_k = min(block_k, s_pad)
+
+    # (B, KV, S, D) so a grid row can slice one kv head's cache
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if s_pad != s:
+        pad = ((0, 0), (0, 0), (0, s_pad - s), (0, 0))
+        kt = jnp.pad(kt, pad)
+        vt = jnp.pad(vt, pad)
+    kt = kt.reshape(b * kvh, s_pad, d)
+    vt = vt.reshape(b * kvh, s_pad, d)
+    qf = q.reshape(b * h, d)
+    vl = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (1, 1))
+
+    def kv_row(bh, ki):
+        return ((bh // h) * kvh + (bh % h) // g, ki, 0)
+
+    grid = (b * h, s_pad // block_k)
+    out = pl.pallas_call(
+        functools.partial(
+            _decode_kernel, scale=1.0 / (d**0.5), block_k=block_k
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, d), lambda bh, ki: (bh, 0)),
+            pl.BlockSpec((1, block_k, d), kv_row),
+            pl.BlockSpec((1, block_k, d), kv_row),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda bh, ki: (bh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(vl, qf, kt, vt)
+    return out.reshape(b, h, d)

@@ -1,0 +1,85 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this CPU container) and False on
+TPU; every wrapper has identical semantics to its ``ref.py`` oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lap_bid import lap_bid_pallas
+from repro.kernels.migration_cost import migration_cost_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def lap_bid_top2(vals: jax.Array):
+    """Auction bid step on a precomputed (benefit - price) matrix.
+
+    Drop-in replacement for ``ref.lap_bid_top2`` (used by
+    ``auction_lap(use_kernel=True)``).
+    """
+    return lap_bid_pallas(
+        vals, jnp.zeros((vals.shape[-1],), vals.dtype), interpret=_default_interpret()
+    )
+
+
+def lap_bid(a: jax.Array, prices: jax.Array):
+    return lap_bid_pallas(a, prices, interpret=_default_interpret())
+
+
+def migration_cost_matrix(
+    slots_u, slots_v, num_gpus_of: dict[int, int]
+) -> np.ndarray:
+    """Algorithm-3 cost matrix via the Pallas kernel.
+
+    ``slots_u``/``slots_v``: (U, MAX_PACK) int arrays of job ids (-1 empty).
+    """
+    slots_u = np.asarray(slots_u)
+    slots_v = np.asarray(slots_v)
+    max_id = max(num_gpus_of, default=0)
+    lookup = np.zeros(max_id + 2, dtype=np.float32)
+    for j, g in num_gpus_of.items():
+        lookup[j] = 1.0 / (2.0 * g)
+    w_u = lookup[slots_u]  # EMPTY=-1 hits the zero tail
+    w_v = lookup[slots_v]
+    out = migration_cost_pallas(
+        jnp.asarray(slots_u, jnp.int32),
+        jnp.asarray(slots_v, jnp.int32),
+        jnp.asarray(w_u),
+        jnp.asarray(w_v),
+        interpret=_default_interpret(),
+    )
+    return np.asarray(out, dtype=np.float64)
+
+
+def flash_decode(q, k, v, valid_len):
+    """Single-token GQA decode attention; q (B,H,D), cache k/v (B,S,KV,D)."""
+    from repro.kernels.flash_decode import flash_decode_pallas
+
+    return flash_decode_pallas(q, k, v, valid_len, interpret=_default_interpret())
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True
+) -> jax.Array:
+    """Causal flash attention; q/k/v (B, H, S, D) or (BH, S, D)."""
+    squeeze = False
+    if q.ndim == 4:
+        b, h, s, d = q.shape
+        q = q.reshape(b * h, s, d)
+        k = k.reshape(b * h, s, d)
+        v = v.reshape(b * h, s, d)
+        squeeze = True
+    out = flash_attention_pallas(q, k, v, causal=causal, interpret=_default_interpret())
+    if squeeze:
+        out = out.reshape(b, h, s, d)
+    return out

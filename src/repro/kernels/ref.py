@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+These are the semantics the kernels must reproduce; tests sweep shapes and
+dtypes asserting allclose between kernel (interpret mode) and oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def lap_bid_top2(vals: jnp.ndarray):
+    """Row-wise (best value, best index, second-best value).
+
+    ``vals``: (n, m) benefit-minus-price matrix.  Ties broken toward the
+    lowest column index (matching jnp.argmax).
+    """
+    best_j = jnp.argmax(vals, axis=-1)
+    best_v = jnp.take_along_axis(vals, best_j[..., None], axis=-1)[..., 0]
+    masked = jnp.where(
+        jax.nn.one_hot(best_j, vals.shape[-1], dtype=bool), NEG_INF, vals
+    )
+    second_v = jnp.max(masked, axis=-1)
+    return best_v, best_j.astype(jnp.int32), second_v
+
+
+def migration_cost(
+    slots_u: jnp.ndarray,
+    slots_v: jnp.ndarray,
+    w_u: jnp.ndarray,
+    w_v: jnp.ndarray,
+):
+    """Algorithm 3 cost matrix.
+
+    ``slots_u``: (U, P) int job ids (-1 empty), ``slots_v``: (V, P);
+    ``w_u``/``w_v``: per-slot weights 1/(2*num_gpus) with 0 for empty slots.
+    Returns (U, V):  C[u,v] = sum_a w_u[u,a]*[su[u,a] not in sv[v]]
+                             + sum_b w_v[v,b]*[sv[v,b] not in su[u]].
+    """
+    su = slots_u[:, None, :, None]  # (U,1,P,1)
+    sv = slots_v[None, :, None, :]  # (1,V,1,P)
+    eq = su == sv  # (U,V,P,P)
+    u_in_v = eq.any(axis=-1)  # (U,V,P)
+    v_in_u = eq.any(axis=-2)  # (U,V,P)
+    cost_out = (w_u[:, None, :] * (~u_in_v)).sum(-1)
+    cost_in = (w_v[None, :, :] * (~v_in_u)).sum(-1)
+    return cost_out + cost_in
+
+
+def flash_decode(
+    q: jnp.ndarray,          # (B, H, D)
+    k: jnp.ndarray,          # (B, S, KV, D)
+    v: jnp.ndarray,          # (B, S, KV, D)
+    valid_len,               # scalar int
+):
+    """Single-query GQA attention over a cache, slots >= valid_len masked."""
+    b, h, d = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    logits = logits / (d**0.5)
+    mask = jnp.arange(s)[None, None, None, :] < valid_len
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, causal: bool = True,
+    scale: float | None = None,
+):
+    """Naive softmax attention oracle.
+
+    q/k/v: (BH, S, D) — batch*heads flattened.  fp32 accumulation.
+    """
+    bh, s, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    logits = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

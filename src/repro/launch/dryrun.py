@@ -1,0 +1,400 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_XLA_FLAGS_OVERRIDE")
+    or "--xla_force_host_platform_device_count=512"
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+The two lines above run BEFORE any jax import (jax locks the device count
+on first init): 512 placeholder host devices back both the 16x16 single-pod
+mesh and the 2x16x16 multi-pod mesh.  Do NOT import this module from code
+that needs the real 1-device view (smoke tests / benches) — run it as
+``python -m repro.launch.dryrun --arch llama3-8b --shape train_4k``.
+
+For each combination we build abstract inputs (ShapeDtypeStruct — zero
+allocation), jit with explicit in/out shardings, ``.lower().compile()``,
+print ``memory_analysis()`` / ``cost_analysis()``, and emit the roofline
+terms as JSON for EXPERIMENTS.md.
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import dp_axes_of, make_production_mesh
+from repro.launch.pspec import ShardingRules, use_rules
+from repro.launch.specs import (
+    INPUT_SHAPES,
+    InputShape,
+    batch_logical_axes,
+    bytes_per_device,
+    cache_logical_axes,
+    input_specs,
+    logical_axes_for,
+    sharding_tree,
+)
+from repro.models import get_model
+from repro.roofline import RooflineReport, model_flops, parse_collectives
+from repro.serve.engine import ServeConfig
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import TrainConfig, make_train_step, train_state_init
+
+
+def dryrun_train_config(cfg: ModelConfig) -> TrainConfig:
+    """Microbatching + moment-dtype policy by model scale (DESIGN.md §3)."""
+    n = cfg.param_count()
+    if os.environ.get("REPRO_MICROBATCHES"):
+        mb = int(os.environ["REPRO_MICROBATCHES"])
+        return TrainConfig(
+            optimizer=AdamWConfig(
+                moment_dtype="bfloat16" if n > 30e9 else "float32"
+            ),
+            microbatches=mb,
+        )
+    if n > 100e9:
+        return TrainConfig(
+            optimizer=AdamWConfig(moment_dtype="bfloat16"), microbatches=16
+        )
+    if n > 30e9:
+        return TrainConfig(
+            optimizer=AdamWConfig(moment_dtype="bfloat16"), microbatches=16
+        )
+    if n > 5e9:
+        return TrainConfig(microbatches=8)
+    return TrainConfig(microbatches=1)
+
+
+def _smallest_divisor(n: int) -> int:
+    for d in range(2, n + 1):
+        if n % d == 0:
+            return d
+    return n
+
+
+def layer_trips(cfg: ModelConfig, kind: str) -> int:
+    """Static trip count of each scan-over-layers in the program."""
+    if cfg.arch_type == "hybrid" and cfg.hybrid_attn_every:
+        return cfg.hybrid_attn_every  # per-group scans
+    if cfg.is_encoder_decoder and kind != "decode":
+        assert cfg.encoder_layers == cfg.num_layers, (
+            "trip-count correction assumes equal enc/dec depth"
+        )
+    return cfg.num_layers
+
+
+def rules_for(cfg: ModelConfig, shape: InputShape, mesh) -> ShardingRules:
+    overrides: Dict[str, object] = {}
+    if shape.kind == "train" and cfg.param_count() > 30e9:
+        # Megatron-style sequence parallelism on the residual stream: scan
+        # carries shrink by the model-axis factor (needed to fit 340B remat
+        # boundaries in 16 GB HBM).
+        overrides["seq"] = "model"
+    if shape.kind == "decode" and shape.global_batch < 16:
+        # long_500k: batch of 1 cannot use the data axis -> context-parallel
+        # cache (sequence axis sharded over data).
+        overrides["cache_seq"] = "data"
+    if os.environ.get("REPRO_OPT_DECODE_CACHE") == "1" and shape.kind == "decode":
+        # Beyond-paper optimisation (EXPERIMENTS.md §Perf): GQA kv_heads
+        # (2-8) often don't divide the 16-way model axis, so baseline decode
+        # caches replicate over "model" and blow past HBM.  Shard the cache
+        # SEQUENCE axis over the model axis instead (flash-decoding style:
+        # XLA inserts the partial-softmax combine).  Archs whose kv_heads
+        # already shard (seamless kv=16, zamba2 kv=32) keep head sharding —
+        # context sharding measured slightly WORSE there (§Perf, refuted
+        # sub-iteration).
+        kv_shardable = (
+            cfg.num_kv_heads > 0
+            and not cfg.use_mla
+            and cfg.num_kv_heads % mesh.shape["model"] == 0
+        )
+        if not kv_shardable:
+            if shape.global_batch < 16:
+                overrides["cache_seq"] = ("data", "model")
+            else:
+                overrides["cache_seq"] = "model"
+    return ShardingRules(mesh, overrides, dp_axes=dp_axes_of(mesh))
+
+
+@dataclasses.dataclass
+class DryrunResult:
+    report: RooflineReport
+    memory_analysis: Optional[str]
+    compile_s: float
+    state_bytes_per_device: int
+    ok: bool
+    error: Optional[str] = None
+
+
+def run_dryrun(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    verbose: bool = True,
+    keep_hlo: bool = False,
+    correct_loops: bool = True,
+):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    mesh_name = "x".join(str(s) for s in mesh.shape.values())
+    rules = rules_for(cfg, shape, mesh)
+    model = get_model(cfg)
+    rng = jax.random.PRNGKey(0)
+
+    batch_specs = input_specs(cfg, shape)
+    t0 = time.perf_counter()
+    mb_trips = 1
+    dp_size = int(np.prod([mesh.shape[a] for a in dp_axes_of(mesh)]))
+
+    def _moe_groups(tokens_per_call: int) -> int:
+        return dp_size if (cfg.num_experts and tokens_per_call % dp_size == 0) else 1
+
+    env_backup = os.environ.get("REPRO_MOE_GROUPS")
+
+    with mesh, use_rules(rules):
+        if shape.kind == "train":
+            tc = dryrun_train_config(cfg)
+            # keep at least one sample per data shard
+            mb_cap = max(1, shape.global_batch // dp_size)
+            if tc.microbatches > mb_cap:
+                tc = dataclasses.replace(tc, microbatches=mb_cap)
+            os.environ["REPRO_MOE_GROUPS"] = str(
+                _moe_groups((shape.global_batch // tc.microbatches) * shape.seq_len)
+            )
+            state_shapes = jax.eval_shape(
+                lambda r: train_state_init(r, cfg, tc), rng
+            )
+            state_sh = sharding_tree(state_shapes, rules, logical_axes_for)
+            batch_sh = {
+                k: rules.sharding_for(v.shape, batch_logical_axes(k, len(v.shape)))
+                for k, v in batch_specs.items()
+            }
+            mb_trips = tc.microbatches
+
+            def make_lowered():
+                # fresh step closure per call: the unroll env knob is read at
+                # trace time, so the jit trace cache must not be reused.
+                step = make_train_step(cfg, tc)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(state_sh, batch_sh),
+                    out_shardings=(state_sh, None),
+                    donate_argnums=(0,),
+                )
+                return jitted.lower(state_shapes, batch_specs)
+
+            state_bytes = bytes_per_device(state_shapes, state_sh)
+            tokens = shape.global_batch * shape.seq_len
+            mflops = model_flops(cfg.active_param_count(), tokens, "train")
+        elif shape.kind == "prefill":
+            os.environ["REPRO_MOE_GROUPS"] = str(
+                _moe_groups(shape.global_batch * shape.seq_len)
+            )
+            params_shapes = jax.eval_shape(lambda r: model.init(r, cfg), rng)
+            params_sh = sharding_tree(params_shapes, rules, logical_axes_for)
+            batch_sh = {
+                k: rules.sharding_for(v.shape, batch_logical_axes(k, len(v.shape)))
+                for k, v in batch_specs.items()
+            }
+
+            def make_lowered():
+                def prefill(params, batch):
+                    logits, _ = model.forward(params, cfg, batch)
+                    return logits
+
+                jitted = jax.jit(prefill, in_shardings=(params_sh, batch_sh))
+                return jitted.lower(params_shapes, batch_specs)
+
+            state_bytes = bytes_per_device(params_shapes, params_sh)
+            tokens = shape.global_batch * shape.seq_len
+            mflops = model_flops(cfg.active_param_count(), tokens, "prefill")
+        else:  # decode
+            os.environ["REPRO_MOE_GROUPS"] = str(_moe_groups(shape.global_batch))
+            params_shapes = jax.eval_shape(lambda r: model.init(r, cfg), rng)
+            params_sh = sharding_tree(params_shapes, rules, logical_axes_for)
+            sc = ServeConfig(batch_size=shape.global_batch, context_len=shape.seq_len)
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(cfg, sc.batch_size, sc.cache_len(cfg))
+            )
+            cache_sh = sharding_tree(cache_shapes, rules, cache_logical_axes)
+            tok_spec = batch_specs["tokens"]
+            tok_sh = rules.sharding_for(tok_spec.shape, ("batch", None))
+            pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+            def make_lowered():
+                def serve_step(params, tokens, cache, pos):
+                    logits, new_cache = model.decode_step(
+                        params, cfg, {"tokens": tokens}, cache, pos
+                    )
+                    return logits, new_cache
+
+                jitted = jax.jit(
+                    serve_step,
+                    in_shardings=(params_sh, tok_sh, cache_sh, None),
+                    out_shardings=(None, cache_sh),
+                    donate_argnums=(2,),
+                )
+                return jitted.lower(params_shapes, tok_spec, cache_shapes, pos_spec)
+
+            state_bytes = bytes_per_device(params_shapes, params_sh) + bytes_per_device(
+                cache_shapes, cache_sh
+            )
+            tokens = shape.global_batch
+            mflops = model_flops(cfg.active_param_count(), tokens, "decode")
+
+        lowered = make_lowered()
+        compiled = lowered.compile()
+
+        # ---- trip-count correction for while-loop under-counting --------- #
+        # XLA's cost_analysis counts each while body ONCE; we isolate the
+        # per-body cost by compiling a partially-unrolled variant and
+        # differencing, then multiply by the known static trip counts
+        # (EXPERIMENTS.md §Roofline methodology).
+        def _metrics(comp):
+            c = comp.cost_analysis() or {}
+            if isinstance(c, list):
+                c = c[0] if c else {}
+            cs = parse_collectives(comp.as_text())
+            return (
+                float(c.get("flops", 0.0)),
+                float(c.get("bytes accessed", 0.0)),
+                float(cs.total_bytes),
+                cs.by_kind,
+            )
+
+        base_f, base_b, base_c, coll_kinds = _metrics(compiled)
+        trips = layer_trips(cfg, shape.kind)
+        layer_d = (0.0, 0.0, 0.0)
+        mb_d = (0.0, 0.0, 0.0)
+        if correct_loops and trips > 1:
+            u = _smallest_divisor(trips)
+            os.environ["REPRO_UNROLL_LAYERS"] = str(u)
+            try:
+                fu, bu, cu, _ = _metrics(make_lowered().compile())
+            finally:
+                os.environ.pop("REPRO_UNROLL_LAYERS", None)
+            layer_d = tuple(
+                max(0.0, (x - y) / (u - 1))
+                for x, y in ((fu, base_f), (bu, base_b), (cu, base_c))
+            )
+        if correct_loops and mb_trips > 1:
+            umb = _smallest_divisor(mb_trips)
+            os.environ["REPRO_UNROLL_MB"] = str(umb)
+            try:
+                fm, bm, cm, _ = _metrics(make_lowered().compile())
+            finally:
+                os.environ.pop("REPRO_UNROLL_MB", None)
+            mb_d = tuple(
+                max(0.0, (x - y) / (umb - 1))
+                for x, y in ((fm, base_f), (bm, base_b), (cm, base_c))
+            )
+
+        def _correct(base, ld, md):
+            # true = base + (mb-1)*mb_glue + (mb*trips - 1)*layer_bodies
+            # with mb_glue = mb_body - layer_bodies  (see DESIGN notes)
+            if mb_trips > 1:
+                mb_glue = max(0.0, md - ld)
+                return base + (mb_trips - 1) * mb_glue + (mb_trips * trips - 1) * ld
+            return base + (trips - 1) * ld
+
+        flops = _correct(base_f, layer_d[0], mb_d[0])
+        byts = _correct(base_b, layer_d[1], mb_d[1])
+        coll_bytes = _correct(base_c, layer_d[2], mb_d[2])
+
+    if env_backup is None:
+        os.environ.pop("REPRO_MOE_GROUPS", None)
+    else:
+        os.environ["REPRO_MOE_GROUPS"] = env_backup
+    compile_s = time.perf_counter() - t0
+    try:
+        mem = compiled.memory_analysis()
+        mem_str = str(mem)
+        peak = getattr(mem, "temp_size_in_bytes", None)
+        if peak is not None:
+            peak = float(peak) + float(getattr(mem, "argument_size_in_bytes", 0) or 0)
+    except Exception as e:  # pragma: no cover
+        mem_str, peak = f"<memory_analysis unavailable: {e}>", None
+
+    report = RooflineReport(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops_per_device=flops,
+        hlo_bytes_per_device=byts,
+        collective_bytes_per_device=coll_bytes,
+        collective_counts=coll_kinds,
+        model_flops_total=mflops,
+        peak_memory_per_device=peak,
+    )
+    result = DryrunResult(
+        report=report,
+        memory_analysis=mem_str,
+        compile_s=compile_s,
+        state_bytes_per_device=state_bytes,
+        ok=True,
+    )
+    if verbose:
+        print(f"== dryrun {arch} x {shape_name} on mesh {mesh_name} ==")
+        print(mem_str)
+        d = report.to_dict()
+        d["compile_s"] = compile_s
+        d["state_bytes_per_device"] = state_bytes
+        print(json.dumps(d))
+    if keep_hlo:
+        result.hlo = compiled.as_text()  # type: ignore[attr-defined]
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=list_archs() + ["all"])
+    ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES) + ["all"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument(
+        "--no-correct",
+        action="store_true",
+        help="skip the trip-count correction compiles (lower+compile proof only)",
+    )
+    ap.add_argument("--json-out", default=None, help="append one JSON line per run")
+    args = ap.parse_args()
+    # multi-pod runs prove the pod axis shards; the roofline table is
+    # single-pod, so corrections default off there.
+    correct = not (args.no_correct or args.multi_pod)
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            try:
+                res = run_dryrun(
+                    arch, shape, multi_pod=args.multi_pod, correct_loops=correct
+                )
+                if args.json_out:
+                    d = res.report.to_dict()
+                    d["compile_s"] = res.compile_s
+                    d["state_bytes_per_device"] = res.state_bytes_per_device
+                    with open(args.json_out, "a") as f:
+                        f.write(json.dumps(d) + "\n")
+            except Exception as e:  # noqa: BLE001
+                failures.append((arch, shape, repr(e)))
+                print(f"FAILED {arch} x {shape}: {e!r}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Logical-axis sharding: model code names axes, the launcher maps them.
+
+Model code calls ``constrain(x, "batch", "seq", "embed")`` with *logical*
+axis names; the launcher installs a :class:`ShardingRules` context mapping
+logical names to physical mesh axes (or None).  Outside any context (CPU
+smoke tests) ``constrain`` is a no-op, so the same model code runs
+unsharded on one device and sharded on the 512-chip dry-run mesh.
+
+Divisibility-safe: a logical axis is only sharded if its size divides the
+mesh-axis extent (e.g. qwen2-vl's 12 heads are NOT sharded over a 16-way
+model axis; its 8960-wide FFN is).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+#: default logical -> physical mapping for the production mesh.
+#: "dp" expands to ("pod", "data") when a pod axis exists.
+DEFAULT_RULES: Dict[str, AxisName] = {
+    "batch": "dp",
+    "seq": None,
+    "embed": None,
+    "ff": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "vocab": "model",
+    "expert": "model",
+    "expert_ff": None,
+    "fsdp": "dp",      # weight dim sharded ZeRO-3 style over the data axis
+    "heads_flat": "model",  # flattened H*head_dim dim (wo input)
+    "ssm_inner": "model",   # mamba d_inner projections
+    "ssm_heads": "model",   # mamba recurrent-state heads
+    "layers": None,
+    "state": None,
+    "cache_seq": None,  # decode KV-cache sequence axis (context parallel)
+    #: MoE dispatch buffers (E, C, D): experts over "model", capacity over
+    #: the data axes — without this every device computes the FULL capacity
+    #: of its expert shard (found via the H1 dot-level FLOPs audit,
+    #: EXPERIMENTS.md §Perf).
+    "capacity": "dp",
+}
+
+
+class ShardingRules:
+    def __init__(
+        self,
+        mesh: Mesh,
+        rules: Optional[Dict[str, AxisName]] = None,
+        dp_axes: Tuple[str, ...] = ("data",),
+    ):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+        self.dp_axes = dp_axes
+
+    def _physical(self, logical: str) -> AxisName:
+        phys = self.rules.get(logical)
+        if phys == "dp":
+            return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+        return phys
+
+    def axis_size(self, phys: AxisName) -> int:
+        if phys is None:
+            return 1
+        if isinstance(phys, tuple):
+            out = 1
+            for a in phys:
+                out *= self.mesh.shape[a]
+            return out
+        return self.mesh.shape[phys]
+
+    def spec_for(self, dim_sizes: Sequence[int], logical_axes: Sequence[Optional[str]]) -> P:
+        parts = []
+        used: set = set()
+        for size, name in zip(dim_sizes, logical_axes):
+            if name is None:
+                parts.append(None)
+                continue
+            phys = self._physical(name)
+            names = phys if isinstance(phys, tuple) else (phys,) if phys else ()
+            # a mesh axis may appear at most once per spec: first dim wins
+            # (e.g. seq-parallel "seq"->model beats "heads"->model inside one
+            # activation, because it comes first in the constrain() call)
+            if (
+                phys is None
+                or size % self.axis_size(phys) != 0
+                or any(n in used for n in names)
+            ):
+                parts.append(None)
+            else:
+                parts.append(phys)
+                used.update(names)
+        return P(*parts)
+
+    def sharding_for(self, dim_sizes, logical_axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(dim_sizes, logical_axes))
+
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Apply with_sharding_constraint per the active rules (no-op outside)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(
+            f"constrain: {len(logical_axes)} axes for rank-{x.ndim} array"
+        )
+    spec = rules.spec_for(x.shape, logical_axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec)
+    )

@@ -1,0 +1,195 @@
+"""Input shapes, ShapeDtypeStruct stand-ins, and per-leaf sharding rules.
+
+``input_specs(cfg, shape)`` builds weak-type-correct ShapeDtypeStructs for
+every model input — no device allocation; ``.lower()`` consumes them
+directly.  ``logical_axes_for(path, leaf)`` names each param/optimizer/cache
+leaf's logical axes; :class:`repro.launch.pspec.ShardingRules` maps those to
+mesh axes with divisibility fallbacks (e.g. qwen2-vl's 12 heads stay
+replicated on a 16-way model axis while its 8960-wide FFN shards).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+# --------------------------------------------------------------------------- #
+# The four assigned input shapes
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def token_dtype():
+    return jnp.int32
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model-input stand-ins for one (arch, shape) pair."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        return {"tokens": sds((b, 1), token_dtype())}
+
+    batch: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": sds((b, s), token_dtype()),
+    }
+    if shape.kind == "train":
+        batch["targets"] = sds((b, s), token_dtype())
+    if cfg.frontend == "vision":
+        batch["image_embeds"] = sds((b, cfg.frontend_len, cfg.d_model), jnp.float32)
+        if cfg.mrope:
+            batch["mrope_positions"] = sds(
+                (3, b, s + cfg.frontend_len), token_dtype()
+            )
+    elif cfg.frontend == "audio":
+        batch["audio_frames"] = sds((b, cfg.frontend_len, cfg.d_model), jnp.float32)
+    return batch
+
+
+def batch_logical_axes(name: str, ndim: int) -> Tuple[Optional[str], ...]:
+    if name == "mrope_positions":
+        return (None, "batch") + (None,) * (ndim - 2)
+    return ("batch",) + (None,) * (ndim - 1)
+
+
+# --------------------------------------------------------------------------- #
+# Parameter / optimizer / cache leaf -> logical axes
+# --------------------------------------------------------------------------- #
+_RULES = [
+    # (regex on the dict path, logical axes WITHOUT the stacked-layer dim)
+    (r"embed$", ("vocab", "fsdp")),
+    (r"lm_head$", ("fsdp", "vocab")),
+    (r"(final_norm|enc_norm|norm\d?|norm_x|q_norm|k_norm|kv_norm)$", None),  # 1-D: replicate
+    # attention
+    (r"attn.*wq$", ("fsdp", "heads", None)),
+    (r"attn.*w[kv]$", ("fsdp", "kv_heads", None)),
+    (r"attn.*wo$", ("heads_flat", "fsdp")),
+    (r"attn.*wkv_a$", ("fsdp", None)),
+    (r"attn.*wkv_b$", (None, "heads", None)),
+    # dense ffn
+    (r"(ffn|shared).*w_(gate|up)$", ("fsdp", "ff")),
+    (r"(ffn|shared).*w_down$", ("ff", "fsdp")),
+    # moe
+    (r"moe.*router$", ("fsdp", None)),
+    (r"moe\.w_(gate|up)$", ("expert", "fsdp", None)),
+    (r"moe\.w_down$", ("expert", None, "fsdp")),
+    # mamba
+    (r"mamba\.in_proj$", ("fsdp", "ssm_inner")),
+    (r"mamba\.out_proj$", ("ssm_inner", "fsdp")),
+    (r"mamba\.(conv_w|conv_b|a_log|d_skip|dt_bias|norm)$", None),
+    # zamba shared block concat projection
+    (r"shared_attn\.in_proj$", ("fsdp", None)),
+]
+
+
+def logical_axes_for(path: str, shape: Tuple[int, ...]) -> Tuple[Optional[str], ...]:
+    """Logical axes for a leaf.  Leaves under "layers"/"enc_layers"/...
+    carry a leading stacked-layer dim (never sharded)."""
+    stacked = bool(re.search(r"(^|\.)((dec_|enc_)?layers)\.", path))
+    ndim = len(shape)
+    body_ndim = ndim - 1 if stacked else ndim
+    axes: Tuple[Optional[str], ...] = (None,) * body_ndim
+    for pat, rule in _RULES:
+        if re.search(pat, path):
+            if rule is None:
+                axes = (None,) * body_ndim
+            else:
+                axes = tuple(rule)[:body_ndim]
+                if len(axes) < body_ndim:
+                    axes = axes + (None,) * (body_ndim - len(axes))
+            break
+    else:
+        axes = (None,) * body_ndim
+    if stacked:
+        axes = (None,) + axes
+    return axes
+
+
+def cache_logical_axes(path: str, shape: Tuple[int, ...]) -> Tuple[Optional[str], ...]:
+    ndim = len(shape)
+    if "cross_" in path:  # (L, B, F, KV, hd)
+        return (None, "batch", None, "kv_heads", None)
+    if path.endswith("state"):  # (L, B, H, P, N)
+        return (None, "batch", "ssm_heads", None, None)
+    if path.endswith("conv"):  # (L, B, W, CH)
+        return (None, "batch", None, None)
+    if path.endswith("ckv") or path.endswith("k_rope"):  # (L, B, S, r)
+        return (None, "batch", "cache_seq", None)
+    if path.endswith("k") or path.endswith("v"):  # (L, B, S, KV, hd)
+        return (None, "batch", "cache_seq", "kv_heads", None)
+    return (None,) * ndim
+
+
+def tree_paths_and_leaves(tree):
+    """[(dotted_path, leaf)] for a nested dict/pytree."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        out.append((".".join(parts), leaf))
+    return out
+
+
+def sharding_tree(tree, rules, axes_fn):
+    """NamedSharding pytree matching ``tree`` via ``axes_fn(path, shape)``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    shardings = []
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+        dotted = ".".join(parts)
+        axes = axes_fn(dotted, leaf.shape)
+        shardings.append(rules.sharding_for(leaf.shape, axes))
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def bytes_per_device(tree, sharding_tree_) -> int:
+    """Exact per-device bytes of a sharded pytree (shape/spec arithmetic)."""
+    total = 0
+    leaves = jax.tree.leaves(tree)
+    shards = jax.tree.leaves(sharding_tree_, is_leaf=lambda x: hasattr(x, "spec"))
+    for leaf, sh in zip(leaves, shards):
+        n = int(np.prod(leaf.shape)) if len(leaf.shape) else 1
+        denom = 1
+        mesh = sh.mesh
+        for dim_size, spec in zip(leaf.shape, tuple(sh.spec) + (None,) * len(leaf.shape)):
+            if spec is None:
+                continue
+            names = spec if isinstance(spec, tuple) else (spec,)
+            ax = 1
+            for nm in names:
+                ax *= dict(mesh.shape)[nm]
+            denom *= ax
+        total += n * np.dtype(leaf.dtype).itemsize // denom
+    return total

@@ -1,0 +1,22 @@
+"""Workload substrate: the 10 assigned architectures in pure JAX.
+
+``get_model(cfg)`` returns a functional model namespace with
+
+* ``init(rng, cfg)``                       -> params pytree
+* ``forward(params, cfg, batch)``          -> logits (training forward)
+* ``init_cache(cfg, batch, cache_len)``    -> decode cache pytree
+* ``decode_step(params, cfg, batch, cache, pos)`` -> (logits, new cache)
+
+Params are plain nested dicts of jnp arrays (no framework dependency);
+layers are stacked on a leading L axis and scanned with ``jax.lax.scan``
+(+remat) so a 96-layer model lowers as one layer body.
+"""
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+
+def get_model(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return encdec
+    return transformer

@@ -1,0 +1,287 @@
+"""Attention variants: GQA (llama/qwen/dbrx/nemotron), QK-norm (qwen3),
+M-RoPE (qwen2-vl), MLA (deepseek-v2), sliding-window decode, KV caches.
+
+All functions are pure; caches are explicit pytrees.  The scaled-dot-
+product core dispatches to the Pallas flash kernel when
+``REPRO_USE_FLASH=1`` (interpret off-TPU) and otherwise uses a fused-einsum
+reference path — both numerically validated against each other in tests.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.pspec import constrain
+from repro.models.layers import apply_mrope, apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+def use_flash() -> bool:
+    return os.environ.get("REPRO_USE_FLASH", "0") == "1"
+
+
+# --------------------------------------------------------------------------- #
+# Parameter init
+# --------------------------------------------------------------------------- #
+def init_gqa(rng, cfg: ModelConfig, dtype) -> Dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 6)
+    p = {
+        "wq": dense_init(ks[0], d, (h, hd), dtype),
+        "wk": dense_init(ks[1], d, (kv, hd), dtype),
+        "wv": dense_init(ks[2], d, (kv, hd), dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def init_mla(rng, cfg: ModelConfig, dtype) -> Dict:
+    """DeepSeek-V2 multi-head latent attention parameters."""
+    d = cfg.d_model
+    h = cfg.num_heads
+    r = cfg.kv_lora_rank
+    qn, qr, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(rng, 5)
+    return {
+        # queries (undecomposed; deepseek also low-ranks Q but cache-wise
+        # only the KV path matters)
+        "wq": dense_init(ks[0], d, (h, qn + qr), dtype),
+        # compressed KV latent + decoupled rope key
+        "wkv_a": dense_init(ks[1], d, (r + qr,), dtype),
+        "kv_norm": jnp.zeros((r,), dtype),
+        # up-projection from latent to per-head K_nope and V
+        "wkv_b": dense_init(ks[2], r, (h, qn + vd), dtype),
+        "wo": dense_init(ks[3], h * vd, d, dtype),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# SDPA core (GQA-aware)
+# --------------------------------------------------------------------------- #
+def sdpa(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, T, KV, D)
+    v: jax.Array,  # (B, T, KV, D)
+    causal: bool,
+    q_offset: Optional[jax.Array] = None,  # scalar: absolute pos of q[0]
+    kv_valid_len: Optional[jax.Array] = None,  # scalar: #valid cache slots
+) -> jax.Array:
+    b, s, h, d = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+
+    if use_flash() and causal and s == t and q_offset is None and kv_valid_len is None:
+        from repro.kernels.ops import flash_attention
+
+        kr = jnp.repeat(k, g, axis=2)
+        vr = jnp.repeat(v, g, axis=2)
+        qt = q.transpose(0, 2, 1, 3)
+        out = flash_attention(qt, kr.transpose(0, 2, 1, 3), vr.transpose(0, 2, 1, 3))
+        return out.transpose(0, 2, 1, 3)
+
+    if os.environ.get("REPRO_ABLATE_ATTN") == "1":
+        # profiling bisection knob: shape-preserving stand-in for SDPA
+        return jnp.repeat(v.mean(axis=1, keepdims=True), g, axis=2).astype(
+            q.dtype
+        ) + 0 * q
+
+    qg = q.reshape(b, s, kvh, g, d)
+    scale = 1.0 / (d**0.5)
+    logits = jnp.einsum(
+        "bskgd,btkd->bkgst",
+        qg.astype(jnp.float32),
+        k.astype(jnp.float32),
+    ) * scale  # (B, KV, G, S, T)
+
+    if causal or kv_valid_len is not None:
+        rows = jnp.arange(s)[:, None]
+        if q_offset is not None:
+            rows = rows + q_offset
+        cols = jnp.arange(t)[None, :]
+        ok = jnp.ones((s, t), bool) if not causal else rows >= cols
+        if kv_valid_len is not None:
+            ok &= cols < kv_valid_len
+        logits = jnp.where(ok[None, None, None], logits, NEG_INF)
+
+    probs = jax.nn.softmax(logits, axis=-1)
+    # Perf knob (EXPERIMENTS.md §Perf H3): the (B,KV,G,S,T) probs tensor is
+    # the largest HBM buffer in the unfused path; bf16 halves its traffic
+    # (row stats stay f32 inside softmax).  On real TPU the Pallas flash
+    # kernel replaces this path entirely.
+    if os.environ.get("REPRO_ATTN_DTYPE", "f32") == "bf16":
+        probs = probs.astype(jnp.bfloat16)
+        out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.bfloat16))
+    else:
+        out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    # v's head dim may differ from q/k's (MLA: qk 192, v 128)
+    return out.reshape(b, s, h, v.shape[-1]).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# GQA attention: train forward + decode step
+# --------------------------------------------------------------------------- #
+def _project_qkv(p, cfg: ModelConfig, x, positions, mrope_positions):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dke->bske", x, p["wk"])
+    v = jnp.einsum("bsd,dke->bske", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.rope_theta)
+        k = apply_mrope(k, mrope_positions, cfg.rope_theta)
+    elif cfg.num_heads > 0 and cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, D)
+    positions: jax.Array,  # (B, S)
+    mrope_positions: Optional[jax.Array] = None,  # (3, B, S)
+    causal: bool = True,
+) -> jax.Array:
+    q, k, v = _project_qkv(p, cfg, x, positions, mrope_positions)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    out = sdpa(q, k, v, causal=causal)
+    out = out.reshape(*x.shape[:2], -1)
+    return jnp.einsum("bsf,fd->bsd", out, p["wo"])
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> Dict:
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, cache_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, kv, hd), dtype),
+    }
+
+
+def gqa_decode_step(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,        # (B, 1, D) new-token hidden
+    cache: Dict,
+    pos: jax.Array,      # scalar int: absolute position of the new token
+) -> Tuple[jax.Array, Dict]:
+    """One decode step.  With ``cfg.attention_window`` the cache is a ring
+    buffer of window length (sub-quadratic long-context decode); otherwise
+    the cache covers the full context."""
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos, (b, 1))
+    mpos = jnp.broadcast_to(pos, (3, b, 1)) if cfg.mrope else None
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions, mpos)
+
+    cache_len = cache["k"].shape[1]
+    slot = pos % cache_len  # ring-buffer slot (== pos when cache covers ctx)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    k = constrain(k, "batch", "cache_seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "cache_seq", "kv_heads", "head_dim")
+    valid = jnp.minimum(pos + 1, cache_len)
+    out = sdpa(q, k, v, causal=False, kv_valid_len=valid)
+    out = out.reshape(b, 1, -1)
+    return jnp.einsum("bsf,fd->bsd", out, p["wo"]), {"k": k, "v": v}
+
+
+# --------------------------------------------------------------------------- #
+# MLA (deepseek-v2)
+# --------------------------------------------------------------------------- #
+def mla_forward(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    mrope_positions=None,
+    causal: bool = True,
+) -> jax.Array:
+    b, s, d = x.shape
+    h = cfg.num_heads
+    qn, qr, vd, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])  # (B,S,H,qn+qr)
+    q_nope, q_rope = q[..., :qn], q[..., qn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = jnp.einsum("bsd,de->bse", x, p["wkv_a"])  # (B,S,r+qr)
+    ckv = rms_norm(kv_a[..., :r], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv_a[..., None, r:], positions, cfg.rope_theta)  # (B,S,1,qr)
+
+    kv_up = jnp.einsum("bsr,rhe->bshe", ckv, p["wkv_b"])  # (B,S,H,qn+vd)
+    k_nope, v = kv_up[..., :qn], kv_up[..., qn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, qr))], axis=-1
+    )
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+    qq = constrain(qq, "batch", "seq", "heads", "head_dim")
+    out = sdpa(qq, k, v, causal=causal)
+    return jnp.einsum("bsf,fd->bsd", out.reshape(b, s, h * vd), p["wo"])
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> Dict:
+    """MLA's memory win: the cache holds the r-dim latent + rope key, NOT
+    per-head K/V — (r + qr) vs 2*H*hd floats per token (9x smaller here)."""
+    return {
+        "ckv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode_step(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,   # (B, 1, D)
+    cache: Dict,
+    pos: jax.Array,
+) -> Tuple[jax.Array, Dict]:
+    b = x.shape[0]
+    h = cfg.num_heads
+    qn, qr, vd, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    positions = jnp.broadcast_to(pos, (b, 1))
+
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    q_nope, q_rope = q[..., :qn], q[..., qn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = jnp.einsum("bsd,de->bse", x, p["wkv_a"])
+    ckv_new = rms_norm(kv_a[..., :r], p["kv_norm"], cfg.norm_eps)
+    k_rope_new = apply_rope(kv_a[..., None, r:], positions, cfg.rope_theta)[:, :, 0]
+
+    cache_len = cache["ckv"].shape[1]
+    slot = pos % cache_len
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, slot, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new, (0, slot, 0))
+    ckv = constrain(ckv, "batch", "cache_seq", None)
+    valid = jnp.minimum(pos + 1, cache_len)
+
+    # Absorbed attention: score = q_nope^T (W_b^K ckv_t) + q_rope^T k_rope_t
+    wkb_k = p["wkv_b"][..., :qn]  # (r, H, qn)
+    q_latent = jnp.einsum("bshe,rhe->bshr", q_nope, wkb_k)  # (B,1,H,r)
+    logits = jnp.einsum("bshr,btr->bhst", q_latent, ckv)
+    logits = logits + jnp.einsum("bshe,bte->bhst", q_rope, k_rope)
+    scale = 1.0 / ((qn + qr) ** 0.5)
+    logits = (logits.astype(jnp.float32)) * scale
+    mask = jnp.arange(cache_len)[None, None, None, :] < valid
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # out = probs @ V where V = W_b^V ckv  (absorbed: latent first)
+    lat = jnp.einsum("bhst,btr->bshr", probs, ckv.astype(jnp.float32))
+    wkb_v = p["wkv_b"][..., qn:]  # (r, H, vd)
+    out = jnp.einsum("bshr,rhe->bshe", lat, wkb_v.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(b, 1, h * vd)
+    return (
+        jnp.einsum("bsf,fd->bsd", out, p["wo"]),
+        {"ckv": ckv, "k_rope": k_rope},
+    )

@@ -1,0 +1,188 @@
+"""Encoder-decoder transformer (SeamlessM4T backbone).
+
+Encoder: bidirectional self-attention over (stubbed) audio-frame
+embeddings.  Decoder: causal self-attention + cross-attention to the
+encoder output, standard teacher-forced training.
+
+Batch dict:
+  audio_frames (B, F, D)   — frontend stub output (encoder input)
+  tokens       (B, S) int  — decoder input (targets shifted by caller)
+
+Decode cache: per-decoder-layer self-attn KV ring + precomputed
+cross-attention K/V over the encoder output (computed once at prefill; the
+dry-run treats it as part of the cache input).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.pspec import constrain
+from repro.models import attention as attn_lib
+from repro.models import mlp as mlp_lib
+from repro.models.layers import dtype_of, embed_init, dense_init, rms_norm
+from repro.models.scan_util import remat_policy, scan_layers
+
+
+def _enc_layer_init(rng, cfg, dtype):
+    ks = jax.random.split(rng, 2)
+    return {
+        "norm1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": attn_lib.init_gqa(ks[0], cfg, dtype),
+        "norm2": jnp.zeros((cfg.d_model,), dtype),
+        "ffn": mlp_lib.init_ffn(ks[1], cfg, cfg.d_ff, dtype),
+    }
+
+
+def _dec_layer_init(rng, cfg, dtype):
+    ks = jax.random.split(rng, 3)
+    return {
+        "norm1": jnp.zeros((cfg.d_model,), dtype),
+        "self_attn": attn_lib.init_gqa(ks[0], cfg, dtype),
+        "norm_x": jnp.zeros((cfg.d_model,), dtype),
+        "cross_attn": attn_lib.init_gqa(ks[1], cfg, dtype),
+        "norm2": jnp.zeros((cfg.d_model,), dtype),
+        "ffn": mlp_lib.init_ffn(ks[2], cfg, cfg.d_ff, dtype),
+    }
+
+
+def init(rng, cfg: ModelConfig) -> Dict:
+    dtype = dtype_of(cfg.dtype)
+    ks = jax.random.split(rng, 5)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "embed": embed_init(ks[2], cfg.vocab_size, cfg.d_model, dtype),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype))(dec_keys),
+        "enc_norm": jnp.zeros((cfg.d_model,), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": dense_init(ks[3], cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+# --------------------------------------------------------------------------- #
+def encode(params, cfg: ModelConfig, audio_frames: jax.Array) -> jax.Array:
+    x = audio_frames.astype(dtype_of(cfg.dtype))
+    x = constrain(x, "batch", "seq", "embed")
+    b, f = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(f)[None], (b, f))
+
+    def body(carry, layer_p):
+        h = rms_norm(carry, layer_p["norm1"], cfg.norm_eps)
+        a = attn_lib.gqa_forward(layer_p["attn"], cfg, h, positions, causal=False)
+        y = carry + a
+        h = rms_norm(y, layer_p["norm2"], cfg.norm_eps)
+        return y + mlp_lib.ffn(layer_p["ffn"], cfg, h), None
+
+    x, _ = scan_layers(
+        jax.checkpoint(body, policy=remat_policy()),
+        x,
+        params["enc_layers"],
+    )
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_attention(p, cfg, h, enc_out):
+    """Cross-attention: queries from decoder, K/V from encoder output."""
+    q = jnp.einsum("bsd,dhe->bshe", h, p["wq"])
+    k = jnp.einsum("bfd,dke->bfke", enc_out, p["wk"])
+    v = jnp.einsum("bfd,dke->bfke", enc_out, p["wv"])
+    out = attn_lib.sdpa(q, k, v, causal=False)
+    out = out.reshape(*h.shape[:2], -1)
+    return jnp.einsum("bsf,fd->bsd", out, p["wo"])
+
+
+def forward(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, jax.Array]:
+    enc_out = encode(params, cfg, batch["audio_frames"])
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]
+    x = constrain(x, "batch", "seq", "embed")
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(carry, layer_p):
+        h = rms_norm(carry, layer_p["norm1"], cfg.norm_eps)
+        a = attn_lib.gqa_forward(layer_p["self_attn"], cfg, h, positions)
+        y = carry + a
+        h = rms_norm(y, layer_p["norm_x"], cfg.norm_eps)
+        y = y + _cross_attention(layer_p["cross_attn"], cfg, h, enc_out)
+        h = rms_norm(y, layer_p["norm2"], cfg.norm_eps)
+        return y + mlp_lib.ffn(layer_p["ffn"], cfg, h), None
+
+    x, _ = scan_layers(
+        jax.checkpoint(body, policy=remat_policy()),
+        x,
+        params["dec_layers"],
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# --------------------------------------------------------------------------- #
+# Decode
+# --------------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch_size: int, cache_len: int) -> Dict:
+    dtype = dtype_of(cfg.dtype)
+    l = cfg.num_layers
+    kv, hd, f = cfg.num_kv_heads, cfg.head_dim, cfg.frontend_len
+
+    def stack(a):
+        return jnp.broadcast_to(a, (l, *a.shape))
+
+    self_c = attn_lib.init_gqa_cache(cfg, batch_size, cache_len, dtype)
+    return {
+        "layers": jax.tree.map(stack, self_c),
+        # precomputed cross K/V over the encoder output (prefill artifact)
+        "cross_k": jnp.zeros((l, batch_size, f, kv, hd), dtype),
+        "cross_v": jnp.zeros((l, batch_size, f, kv, hd), dtype),
+    }
+
+
+def prefill_cross(params, cfg: ModelConfig, enc_out: jax.Array):
+    """Compute per-layer cross-attention K/V once from the encoder output."""
+    def per_layer(layer_p):
+        k = jnp.einsum("bfd,dke->bfke", enc_out, layer_p["cross_attn"]["wk"])
+        v = jnp.einsum("bfd,dke->bfke", enc_out, layer_p["cross_attn"]["wv"])
+        return k, v
+
+    ks, vs = jax.vmap(per_layer)(params["dec_layers"])
+    return ks, vs
+
+
+def decode_step(
+    params, cfg: ModelConfig, batch, cache: Dict, pos: jax.Array
+) -> Tuple[jax.Array, Dict]:
+    tokens = batch["tokens"]  # (B, 1)
+    x = params["embed"][tokens]
+    b = x.shape[0]
+
+    def body(carry, xs):
+        layer_p, layer_c, ck, cv = xs
+        h = rms_norm(carry, layer_p["norm1"], cfg.norm_eps)
+        a, new_c = attn_lib.gqa_decode_step(layer_p["self_attn"], cfg, h, layer_c, pos)
+        y = carry + a
+        h = rms_norm(y, layer_p["norm_x"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhe->bshe", h, layer_p["cross_attn"]["wq"])
+        co = attn_lib.sdpa(q, ck, cv, causal=False)
+        co = co.reshape(b, 1, -1)
+        y = y + jnp.einsum("bsf,fd->bsd", co, layer_p["cross_attn"]["wo"])
+        h = rms_norm(y, layer_p["norm2"], cfg.norm_eps)
+        return y + mlp_lib.ffn(layer_p["ffn"], cfg, h), new_c
+
+    x, new_layers = scan_layers(
+        body,
+        x,
+        (params["dec_layers"], cache["layers"], cache["cross_k"], cache["cross_v"]),
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    new_cache = dict(cache)
+    new_cache["layers"] = new_layers
+    return logits, new_cache

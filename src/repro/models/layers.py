@@ -1,0 +1,105 @@
+"""Shared primitive layers: norms, init helpers, rotary embeddings (+M-RoPE)."""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[
+        name
+    ]
+
+
+# --------------------------------------------------------------------------- #
+# Init helpers
+# --------------------------------------------------------------------------- #
+def dense_init(rng, in_dim: int, out_shape, dtype) -> jax.Array:
+    """Truncated-normal fan-in init, shape (in_dim, *out_shape)."""
+    if isinstance(out_shape, int):
+        out_shape = (out_shape,)
+    scale = 1.0 / np.sqrt(in_dim)
+    return (
+        jax.random.truncated_normal(rng, -2.0, 2.0, (in_dim, *out_shape)) * scale
+    ).astype(dtype)
+
+
+def embed_init(rng, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(rng, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale) + bias).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Rotary embeddings
+# --------------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+
+
+def apply_rope(
+    x: jax.Array,  # (B, S, H, D)
+    positions: jax.Array,  # (B, S) int
+    theta: float,
+) -> jax.Array:
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d, theta))  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_sections(head_dim: int) -> Tuple[int, int, int]:
+    """Split of the half-dim rotary channels across (t, h, w) position
+    streams; Qwen2-VL uses (16, 24, 24) for head_dim=128."""
+    half = head_dim // 2
+    a = half // 3
+    return (half - 2 * a, a, a)
+
+
+def apply_mrope(
+    x: jax.Array,          # (B, S, H, D)
+    positions: jax.Array,  # (3, B, S) int — temporal / height / width
+    theta: float,
+) -> jax.Array:
+    """Qwen2-VL multimodal rotary: rotary channel groups are driven by
+    different position streams (text tokens use identical streams)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d, theta))  # (d/2,)
+    secs = mrope_sections(d)
+    # pick the position stream per rotary channel
+    stream_of = np.concatenate(
+        [np.full(s, i, dtype=np.int32) for i, s in enumerate(secs)]
+    )  # (d/2,)
+    pos = positions.astype(jnp.float32)  # (3, B, S)
+    pos_per_chan = pos[stream_of]  # (d/2, B, S)
+    angles = jnp.moveaxis(pos_per_chan, 0, -1) * freqs  # (B, S, d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,43 @@
+"""Scan helpers with env-controlled unroll (dry-run cost accounting).
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE, not trip-count
+times (verified empirically — see EXPERIMENTS.md §Roofline "methodology").
+The dry-run therefore compiles each program twice: once normally and once
+with the layer/microbatch scans partially unrolled via these knobs; the
+difference isolates the per-body cost, which is then multiplied by the
+known static trip counts.  Env knobs (read at TRACE time):
+
+    REPRO_UNROLL_LAYERS=<u>   unroll factor for scan-over-layers
+    REPRO_UNROLL_MB=<u>       unroll factor for the microbatch grad-accum scan
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def _env_unroll(name: str) -> int:
+    return max(1, int(os.environ.get(name, "1")))
+
+
+def remat_policy():
+    """Remat policy knob (perf iteration H3, EXPERIMENTS.md §Perf).
+
+    REPRO_REMAT_POLICY = "nothing" (baseline: recompute everything) |
+    "dots" (save dot/matmul outputs — cheaper backward at higher live
+    memory).
+    """
+    name = os.environ.get("REPRO_REMAT_POLICY", "nothing")
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def scan_layers(body, init, xs):
+    return jax.lax.scan(body, init, xs, unroll=_env_unroll("REPRO_UNROLL_LAYERS"))
+
+
+def scan_microbatches(body, init, xs):
+    return jax.lax.scan(body, init, xs, unroll=_env_unroll("REPRO_UNROLL_MB"))

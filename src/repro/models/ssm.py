@@ -1,0 +1,184 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: within a chunk of Q
+tokens the recurrence is materialised as a masked (Q x Q) matmul (the
+"attention-like" dual form, MXU-friendly); across chunks the (H, P, N)
+states follow a linear recurrence evaluated with ``lax.scan``.  Decode is
+the pure recurrence: O(1) state update per token — this is why the SSM and
+hybrid architectures run the ``long_500k`` shape natively.
+
+Shapes: d_inner = expand*d_model, H = d_inner/head_dim heads, state N,
+single B/C group (G=1).  A short depthwise conv (width 4) precedes the SSM
+on the x/B/C channels, as in the reference implementation.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.pspec import constrain
+from repro.models.layers import dense_init, rms_norm
+
+
+def init_mamba2(rng, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_ch = di + 2 * n
+    ks = jax.random.split(rng, 6)
+    return {
+        # fused input projection -> [z (di), x (di), B (n), C (n), dt (h)]
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h)
+        ).astype(jnp.float32),  # A = -exp(a_log)
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01))).astype(jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di : 2 * di]
+    b = zxbcdt[..., 2 * di : 2 * di + n]
+    c = zxbcdt[..., 2 * di + n : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    return z, x, b, c, dt
+
+
+def _conv(p: Dict, xbc: jax.Array) -> jax.Array:
+    """Causal depthwise conv over seq: xbc (B, S, CH)."""
+    w = p["conv_w"]  # (W, CH)
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return jax.nn.silu((out + p["conv_b"]).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def mamba2_forward(p: Dict, cfg: ModelConfig, u: jax.Array) -> jax.Array:
+    """u: (B, S, D) -> (B, S, D).  S must be a multiple of ssm_chunk."""
+    bsz, s, _ = u.shape
+    di, n, h, pd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    q = cfg.ssm_chunk
+    assert s % q == 0, f"seq {s} not a multiple of ssm_chunk {q}"
+    nc = s // q
+
+    zxbcdt = jnp.einsum("bsd,de->bse", u, p["in_proj"])
+    z, x, b, c, dt = _split_proj(cfg, zxbcdt)
+    xbc = _conv(p, jnp.concatenate([x, b, c], axis=-1))
+    x, b, c = xbc[..., :di], xbc[..., di : di + n], xbc[..., di + n :]
+
+    x = x.reshape(bsz, nc, q, h, pd)
+    x = constrain(x, "batch", None, None, "heads", None)
+    b = b.reshape(bsz, nc, q, n).astype(jnp.float32)
+    c = c.reshape(bsz, nc, q, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"]).reshape(bsz, nc, q, h)
+    a = -jnp.exp(p["a_log"])  # (H,)
+
+    da = dt * a  # (B, NC, Q, H), negative
+    cum = jnp.cumsum(da, axis=2)  # inclusive cumsum over chunk positions
+
+    xf = x.astype(jnp.float32)
+    # ---- intra-chunk (dual / attention-like form) ----------------------- #
+    scores = jnp.einsum("bcin,bcjn->bcij", c, b)  # (B,NC,Q,Q)
+    decay = jnp.exp(
+        cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    )  # (B,NC,Q,Q,H): exp(cum_i - cum_j)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], decay, 0.0)
+    y_intra = jnp.einsum(
+        "bcij,bcijh,bcjh,bcjhp->bcihp", scores, decay, dt, xf
+    )
+
+    # ---- chunk states and inter-chunk recurrence ------------------------- #
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,NC,Q,H)
+    chunk_state = jnp.einsum(
+        "bcjh,bcjn,bcjhp->bchpn", decay_to_end * dt, b, xf
+    )  # (B,NC,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,NC,H)
+
+    def scan_fn(carry, inp):
+        state_c, decay_c = inp  # (B,H,P,N), (B,H)
+        out = carry  # state entering this chunk
+        new = carry * decay_c[:, :, None, None] + state_c
+        return new, out
+
+    init = jnp.zeros((bsz, h, pd, n), jnp.float32)
+    _, states_in = jax.lax.scan(
+        scan_fn,
+        init,
+        (chunk_state.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+    )
+    states_in = states_in.swapaxes(0, 1)  # (B,NC,H,P,N): state BEFORE chunk
+
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchpn->bcihp", c, jnp.exp(cum), states_in
+    )
+
+    y = y_intra + y_inter + p["d_skip"][None, None, None, :, None] * xf
+    y = y.reshape(bsz, s, di).astype(u.dtype)
+
+    # gated RMSNorm then output projection (mamba2 ordering)
+    zf = z.reshape(bsz, s, di)
+    y = y * jax.nn.silu(zf.astype(jnp.float32)).astype(u.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return jnp.einsum("bsd,de->bse", y, p["out_proj"])
+
+
+# --------------------------------------------------------------------------- #
+# Decode (recurrent form)
+# --------------------------------------------------------------------------- #
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    di, n = cfg.ssm_d_inner, cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, di + 2 * n), dtype),
+    }
+
+
+def mamba2_decode_step(
+    p: Dict, cfg: ModelConfig, u: jax.Array, cache: Dict, pos: jax.Array
+) -> Tuple[jax.Array, Dict]:
+    """u: (B, 1, D); O(1) per-token state update."""
+    bsz = u.shape[0]
+    di, n, h, pd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", u, p["in_proj"])[:, 0]
+    z, x, b, c, dt = _split_proj(cfg, zxbcdt)
+    xbc_new = jnp.concatenate([x, b, c], axis=-1)  # (B, CH)
+
+    # conv ring: window = [conv_cache, new]
+    window = jnp.concatenate([cache["conv"], xbc_new[:, None, :]], axis=1)
+    w = p["conv_w"]
+    conv_out = jnp.einsum("bwc,wc->bc", window, w) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out.astype(jnp.float32))
+    x = xbc[:, :di].reshape(bsz, h, pd)
+    b = xbc[:, di : di + n]
+    c = xbc[:, di + n :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a)  # (B, H)
+
+    state = cache["state"] * da[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, b, x
+    )
+    y = jnp.einsum("bn,bhpn->bhp", c, state) + p["d_skip"][None, :, None] * x
+    y = y.reshape(bsz, 1, di).astype(u.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype)[:, None, :]
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    new_cache = {"state": state, "conv": window[:, 1:, :]}
+    return out, new_cache

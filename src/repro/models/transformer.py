@@ -1,0 +1,299 @@
+"""Generic decoder-only model covering dense / MoE / VLM / SSM / hybrid.
+
+One parameterised implementation: per-layer params are stacked on a
+leading L axis and the layer body is ``lax.scan``-ed with ``jax.checkpoint``
+(remat) so deep models (96L nemotron) lower as a single layer program.
+
+Batch dict keys:
+  tokens            (B, S) int32            — always
+  image_embeds      (B, P, D)               — vlm frontend stub (prepended)
+  mrope_positions   (3, B, S_total) int32   — optional (vlm)
+
+Decode caches: ``{"layers": stacked-per-layer cache, "shared": ...}``; the
+cache length is the serving context (ring-buffer for sliding-window archs).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.pspec import constrain
+from repro.models import attention as attn_lib
+from repro.models import mlp as mlp_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import dtype_of, embed_init, dense_init, rms_norm
+from repro.models.scan_util import remat_policy, scan_layers
+
+
+# --------------------------------------------------------------------------- #
+# Init
+# --------------------------------------------------------------------------- #
+def _layer_init(rng, cfg: ModelConfig, dtype) -> Dict:
+    ks = jax.random.split(rng, 4)
+    if cfg.arch_type in ("ssm", "hybrid"):
+        return {
+            "norm1": jnp.zeros((cfg.d_model,), dtype),
+            "mamba": ssm_lib.init_mamba2(ks[0], cfg, dtype),
+        }
+    p = {
+        "norm1": jnp.zeros((cfg.d_model,), dtype),
+        "norm2": jnp.zeros((cfg.d_model,), dtype),
+        "attn": (
+            attn_lib.init_mla(ks[0], cfg, dtype)
+            if cfg.use_mla
+            else attn_lib.init_gqa(ks[0], cfg, dtype)
+        ),
+    }
+    if cfg.num_experts:
+        p["moe"] = mlp_lib.init_moe(ks[1], cfg, dtype)
+    else:
+        p["ffn"] = mlp_lib.init_ffn(ks[1], cfg, cfg.d_ff, dtype)
+    return p
+
+
+def _shared_block_init(rng, cfg: ModelConfig, dtype) -> Dict:
+    """Zamba2's weight-shared attention+MLP block (consumes concat(x, x0))."""
+    ks = jax.random.split(rng, 4)
+    return {
+        "in_proj": dense_init(ks[0], 2 * cfg.d_model, cfg.d_model, dtype),
+        "norm1": jnp.zeros((2 * cfg.d_model,), dtype),
+        "attn": attn_lib.init_gqa(ks[1], cfg, dtype),
+        "norm2": jnp.zeros((cfg.d_model,), dtype),
+        "ffn": mlp_lib.init_ffn(ks[2], cfg, cfg.d_ff, dtype),
+    }
+
+
+def init(rng, cfg: ModelConfig) -> Dict:
+    dtype = dtype_of(cfg.dtype)
+    ks = jax.random.split(rng, 4)
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg, dtype))(layer_keys)
+    params = {
+        "embed": embed_init(ks[1], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.arch_type == "hybrid" and cfg.hybrid_attn_every:
+        params["shared_attn"] = _shared_block_init(ks[3], cfg, dtype)
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# Layer bodies
+# --------------------------------------------------------------------------- #
+def _attn_layer(p, cfg: ModelConfig, x, positions, mrope_positions):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if cfg.use_mla:
+        a = attn_lib.mla_forward(p["attn"], cfg, h, positions, mrope_positions)
+    else:
+        a = attn_lib.gqa_forward(p["attn"], cfg, h, positions, mrope_positions)
+    x = x + a
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.num_experts:
+        import os
+
+        from repro.launch.pspec import current_rules
+
+        if os.environ.get("REPRO_MOE_SHARDMAP") == "1" and current_rules() is not None:
+            f, aux = mlp_lib.moe_ffn_sharded(p["moe"], cfg, h)
+        else:
+            f, aux = mlp_lib.moe_ffn(p["moe"], cfg, h)
+    else:
+        f = mlp_lib.ffn(p["ffn"], cfg, h)
+    return x + f, aux
+
+
+def _ssm_layer(p, cfg: ModelConfig, x):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    return x + ssm_lib.mamba2_forward(p["mamba"], cfg, h)
+
+
+def _shared_block(p, cfg: ModelConfig, x, x0, positions):
+    h = rms_norm(jnp.concatenate([x, x0], axis=-1), p["norm1"], cfg.norm_eps)
+    h = jnp.einsum("bsd,de->bse", h, p["in_proj"])
+    a = attn_lib.gqa_forward(p["attn"], cfg, h, positions)
+    x = x + a
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    return x + mlp_lib.ffn(p["ffn"], cfg, h)
+
+
+# --------------------------------------------------------------------------- #
+# Forward (train / full-sequence)
+# --------------------------------------------------------------------------- #
+def embed_inputs(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]
+    if cfg.frontend == "vision" and "image_embeds" in batch:
+        x = jnp.concatenate([batch["image_embeds"].astype(x.dtype), x], axis=1)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    mrope_positions = batch.get("mrope_positions")
+    if cfg.mrope and mrope_positions is None:
+        mrope_positions = jnp.broadcast_to(positions[None], (3, b, s))
+    return x, positions, mrope_positions
+
+
+def forward(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S_total, V), aux_loss scalar)."""
+    x, positions, mrope_positions = embed_inputs(params, cfg, batch)
+    x = constrain(x, "batch", "seq", "embed")
+
+    if cfg.arch_type in ("ssm", "hybrid"):
+        x = _forward_ssm_stack(params, cfg, x, positions)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        def body2(carry, layer_p):
+            y, aux_l = _attn_layer(layer_p, cfg, carry, positions, mrope_positions)
+            return y, aux_l
+
+        x, auxes = scan_layers(
+            jax.checkpoint(body2, policy=remat_policy()),
+            x,
+            params["layers"],
+        )
+        aux = auxes.sum()
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+def _forward_ssm_stack(params, cfg: ModelConfig, x, positions):
+    body = jax.checkpoint(
+        lambda carry, layer_p: (_ssm_layer(layer_p, cfg, carry), None),
+        policy=remat_policy(),
+    )
+    if cfg.arch_type == "ssm" or not cfg.hybrid_attn_every:
+        x, _ = scan_layers(body, x, params["layers"])
+        return x
+    # hybrid: groups of `hybrid_attn_every` ssm layers + one SHARED block
+    x0 = x
+    per = cfg.hybrid_attn_every
+    groups = cfg.num_layers // per
+    layers = params["layers"]
+    for g in range(groups):
+        group_p = jax.tree.map(lambda a: a[g * per : (g + 1) * per], layers)
+        x, _ = scan_layers(body, x, group_p)
+        x = _shared_block(params["shared_attn"], cfg, x, x0, positions)
+    rem = cfg.num_layers - groups * per
+    if rem:
+        tail_p = jax.tree.map(lambda a: a[groups * per :], layers)
+        x, _ = scan_layers(body, x, tail_p)
+    return x
+
+
+# --------------------------------------------------------------------------- #
+# Decode
+# --------------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch_size: int, cache_len: int) -> Dict:
+    """cache_len: serving context (for sliding-window archs pass the window)."""
+    dtype = dtype_of(cfg.dtype)
+    l = cfg.num_layers
+
+    def stack(tree):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (l, *a.shape)), tree)
+
+    if cfg.arch_type in ("ssm", "hybrid"):
+        layer_cache = stack(ssm_lib.init_mamba2_cache(cfg, batch_size, dtype))
+        cache = {"layers": layer_cache}
+        if cfg.arch_type == "hybrid" and cfg.hybrid_attn_every:
+            groups = cfg.num_layers // cfg.hybrid_attn_every
+            shared = attn_lib.init_gqa_cache(cfg, batch_size, cache_len, dtype)
+            cache["shared"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (groups, *a.shape)), shared
+            )
+        return cache
+    if cfg.use_mla:
+        base = attn_lib.init_mla_cache(cfg, batch_size, cache_len, dtype)
+    else:
+        base = attn_lib.init_gqa_cache(cfg, batch_size, cache_len, dtype)
+    return {"layers": stack(base)}
+
+
+def decode_step(
+    params, cfg: ModelConfig, batch, cache: Dict, pos: jax.Array
+) -> Tuple[jax.Array, Dict]:
+    """One new token for every sequence.  batch: {"tokens": (B, 1)}.
+
+    ``pos`` is the absolute position (cache slot = pos % cache_len for
+    sliding-window ring buffers)."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]  # (B, 1, D)
+    x = constrain(x, "batch", None, "embed")
+
+    if cfg.arch_type in ("ssm", "hybrid"):
+        x, new_cache = _decode_ssm_stack(params, cfg, x, cache, pos)
+    else:
+        def body(carry, xs):
+            layer_p, layer_c = xs
+            h = rms_norm(carry, layer_p["norm1"], cfg.norm_eps)
+            if cfg.use_mla:
+                a, new_c = attn_lib.mla_decode_step(layer_p["attn"], cfg, h, layer_c, pos)
+            else:
+                a, new_c = attn_lib.gqa_decode_step(layer_p["attn"], cfg, h, layer_c, pos)
+            y = carry + a
+            h = rms_norm(y, layer_p["norm2"], cfg.norm_eps)
+            if cfg.num_experts:
+                f, _ = mlp_lib.moe_ffn(layer_p["moe"], cfg, h)
+            else:
+                f = mlp_lib.ffn(layer_p["ffn"], cfg, h)
+            return y + f, new_c
+
+        x, new_layers = scan_layers(body, x, (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_layers}
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, new_cache
+
+
+def _decode_ssm_stack(params, cfg: ModelConfig, x, cache, pos):
+    def body(carry, xs):
+        layer_p, layer_c = xs
+        h = rms_norm(carry, layer_p["norm1"], cfg.norm_eps)
+        out, new_c = ssm_lib.mamba2_decode_step(layer_p["mamba"], cfg, h, layer_c, pos)
+        return carry + out, new_c
+
+    if cfg.arch_type == "ssm" or not cfg.hybrid_attn_every:
+        x, new_layers = scan_layers(body, x, (params["layers"], cache["layers"]))
+        return x, {"layers": new_layers}
+
+    x0 = x
+    per = cfg.hybrid_attn_every
+    groups = cfg.num_layers // per
+    layers, layer_caches = params["layers"], cache["layers"]
+    new_layer_caches = []
+    new_shared = []
+    b = x.shape[0]
+    positions = None
+    for g in range(groups):
+        gp = jax.tree.map(lambda a: a[g * per : (g + 1) * per], layers)
+        gc = jax.tree.map(lambda a: a[g * per : (g + 1) * per], layer_caches)
+        x, nc = scan_layers(body, x, (gp, gc))
+        new_layer_caches.append(nc)
+        # shared attention block with its g-th cache
+        sp = params["shared_attn"]
+        sc = jax.tree.map(lambda a: a[g], cache["shared"])
+        h = rms_norm(jnp.concatenate([x, x0], axis=-1), sp["norm1"], cfg.norm_eps)
+        h = jnp.einsum("bsd,de->bse", h, sp["in_proj"])
+        a_out, nsc = attn_lib.gqa_decode_step(sp["attn"], cfg, h, sc, pos)
+        x = x + a_out
+        h = rms_norm(x, sp["norm2"], cfg.norm_eps)
+        x = x + mlp_lib.ffn(sp["ffn"], cfg, h)
+        new_shared.append(nsc)
+    new_cache = {
+        "layers": jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_layer_caches),
+        "shared": jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *new_shared),
+    }
+    return x, new_cache

@@ -1,0 +1,5 @@
+"""Serving substrate: KV-cache decode steps and batched request serving."""
+
+from repro.serve.engine import ServeConfig, make_serve_step, init_serving_cache
+
+__all__ = ["ServeConfig", "make_serve_step", "init_serving_cache"]

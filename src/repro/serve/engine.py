@@ -1,0 +1,79 @@
+"""Batched decode serving.
+
+``make_serve_step`` builds the jit-able step the dry-run lowers for the
+``decode_32k`` / ``long_500k`` shapes: ONE new token per sequence against a
+cache of ``cache_len`` positions.  For sliding-window archs the cache is a
+ring buffer of the window length; SSM archs carry O(1) recurrent state.
+
+``greedy_generate`` (used by the serving example) loops decode steps with
+greedy sampling on the host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_size: int
+    #: logical context length the service promises
+    context_len: int
+
+    def cache_len(self, cfg: ModelConfig) -> int:
+        """Physical cache length: full context, or the attention window for
+        sliding-window archs (the sub-quadratic long_500k path)."""
+        if cfg.arch_type in ("ssm",):
+            return 1  # recurrent state only; no positional cache
+        if cfg.attention_window and cfg.attention_window < self.context_len:
+            return cfg.attention_window
+        return self.context_len
+
+
+def init_serving_cache(cfg: ModelConfig, serve_cfg: ServeConfig):
+    model = get_model(cfg)
+    return model.init_cache(cfg, serve_cfg.batch_size, serve_cfg.cache_len(cfg))
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """serve_step(params, tokens (B,1), cache, pos) -> (logits, new_cache)."""
+    model = get_model(cfg)
+
+    def serve_step(params, tokens, cache, pos):
+        logits, new_cache = model.decode_step(
+            params, cfg, {"tokens": tokens}, cache, pos
+        )
+        return logits, new_cache
+
+    return serve_step
+
+
+def greedy_generate(
+    params,
+    cfg: ModelConfig,
+    prompt: jax.Array,  # (B, P) int32
+    num_tokens: int,
+    serve_cfg: ServeConfig,
+) -> jax.Array:
+    """Prefill by stepping the prompt, then greedy-decode num_tokens."""
+    step = jax.jit(make_serve_step(cfg))
+    cache = init_serving_cache(cfg, serve_cfg)
+    b, p = prompt.shape
+    tok = prompt[:, :1]
+    out = [prompt]
+    logits = None
+    for i in range(p + num_tokens - 1):
+        if i < p:
+            tok = prompt[:, i : i + 1]
+        logits, cache = step(params, tok, cache, jnp.asarray(i))
+        if i >= p - 1:
+            tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+            out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,14 @@
+"""Training substrate: synthetic data pipeline, AdamW, train step, checkpointing."""
+
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.step import TrainConfig, loss_fn, make_train_step, train_state_init
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "TrainConfig",
+    "loss_fn",
+    "make_train_step",
+    "train_state_init",
+]

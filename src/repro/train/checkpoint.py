@@ -1,0 +1,66 @@
+"""Checkpointing: flat-npz save/restore for params + optimizer state.
+
+The migration overheads Tesserae minimises (Fig. 3) are exactly
+checkpoint-save + checkpoint-load + warmup; this module is the substrate's
+real implementation of that path (used by launch/train.py and the
+examples).  Format: one ``.npz`` with dotted-path keys plus a tiny JSON
+sidecar for step/metadata — dependency-free and portable.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype == np.dtype("bfloat16"):
+            out[key + "::bf16"] = arr.astype(np.float32)
+        else:
+            out[key] = arr
+    return out
+
+
+def save_checkpoint(path: str, state: Any, step: int, metadata: Dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(state))
+    with open(path + ".meta.json", "w") as f:
+        json.dump({"step": step, **(metadata or {})}, f)
+
+
+def restore_checkpoint(path: str, state_template: Any) -> Tuple[Any, int]:
+    """Restore into the structure of ``state_template`` (same treedef)."""
+    import jax.numpy as jnp
+
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_template)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(
+            str(x.key) if hasattr(x, "key") else str(getattr(x, "idx", x)) for x in p
+        )
+        if key + "::bf16" in data:
+            arr = jnp.asarray(data[key + "::bf16"], jnp.bfloat16)
+        else:
+            arr = jnp.asarray(data[key], leaf.dtype)
+        if arr.shape != leaf.shape:
+            raise ValueError(f"checkpoint leaf {key}: {arr.shape} != {leaf.shape}")
+        leaves.append(arr)
+    meta_path = path + ".meta.json"  # same rule as save_checkpoint
+    step = 0
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            step = json.load(f).get("step", 0)
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves]), step

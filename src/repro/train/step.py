@@ -1,0 +1,123 @@
+"""Train step: loss, grad accumulation (microbatching), remat, AdamW apply.
+
+``make_train_step`` builds the jit-able function the launcher lowers for
+the dry-run and the examples execute for real (reduced) training.  With
+``microbatches > 1`` the global batch is split on the batch axis and
+gradients accumulate through ``lax.scan`` — the standard activation-memory
+lever for the frontier-size configs (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.scan_util import scan_microbatches
+from repro.models import get_model
+from repro.train.optimizer import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    microbatches: int = 1
+    grad_clip: float = 1.0
+    #: cross-entropy z-loss coefficient (stabilises large-vocab logits)
+    z_loss: float = 1e-4
+
+
+def loss_fn(
+    params, cfg: ModelConfig, batch: Dict[str, jax.Array], train_cfg: TrainConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    model = get_model(cfg)
+    logits, aux = model.forward(params, cfg, batch)
+    targets = batch["targets"]
+    # frontend positions (vision patches) carry no LM loss: logits for the
+    # prepended P embeddings are sliced off.
+    if logits.shape[1] != targets.shape[1]:
+        logits = logits[:, logits.shape[1] - targets.shape[1] :]
+    logits_f = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits_f, axis=-1)
+    tgt_logit = jnp.take_along_axis(logits_f, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - tgt_logit).mean()
+    zl = train_cfg.z_loss * (logz**2).mean()
+    loss = nll + aux + zl
+    return loss, {"nll": nll, "aux": aux, "z_loss": zl}
+
+
+def train_state_init(rng, cfg: ModelConfig, train_cfg: TrainConfig):
+    model = get_model(cfg)
+    params = model.init(rng, cfg)
+    opt = adamw_init(train_cfg.optimizer, params)
+    return {"params": params, "opt": opt}
+
+
+def make_train_step(
+    cfg: ModelConfig, train_cfg: TrainConfig
+) -> Callable[[Dict, Dict[str, jax.Array]], Tuple[Dict, Dict[str, jax.Array]]]:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, batch, train_cfg
+        )
+        return loss, metrics, grads
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        mb = train_cfg.microbatches
+        if mb == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            bsz = batch["tokens"].shape[0]
+
+            def split(k, v):
+                if k == "mrope_positions":  # (3, B, S): batch on axis 1
+                    r = v.reshape(v.shape[0], mb, bsz // mb, *v.shape[2:])
+                    return jnp.moveaxis(r, 1, 0)
+                return v.reshape(mb, bsz // mb, *v.shape[1:])
+
+            split_keys = [
+                k
+                for k, v in batch.items()
+                if (v.shape[0] == bsz or k == "mrope_positions")
+            ]
+            static = {k: v for k, v in batch.items() if k not in split_keys}
+            stacked = {k: split(k, batch[k]) for k in split_keys}
+
+            def acc_fn(carry, mb_batch):
+                full = dict(static)
+                full.update(mb_batch)
+                loss, metrics, grads = grads_of(params, full)
+                acc_g, acc_l = carry
+                acc_g = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc_g, grads
+                )
+                return (acc_g, acc_l + loss), metrics
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (acc_g, acc_l), metrics_all = scan_microbatches(
+                acc_fn, (zero_g, jnp.zeros((), jnp.float32)), stacked
+            )
+            grads = jax.tree.map(lambda g: g / mb, acc_g)
+            loss = acc_l / mb
+            metrics = jax.tree.map(lambda m: m[-1], metrics_all)
+
+        grads, gnorm = clip_by_global_norm(grads, train_cfg.grad_clip)
+        new_params, new_opt = adamw_update(train_cfg.optimizer, grads, params, opt)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = gnorm
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

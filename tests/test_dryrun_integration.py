@@ -1,0 +1,53 @@
+"""Dry-run integration: run the real 512-device lower+compile in a
+subprocess (keeps this test process at 1 device, per the brief)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=env,
+        cwd=REPO,
+    )
+
+
+@pytest.mark.parametrize(
+    "arch,shape",
+    [
+        ("mamba2-780m", "decode_32k"),     # SSM serve_step
+        ("qwen2-vl-2b", "prefill_32k"),    # VLM frontend stub + M-RoPE
+    ],
+)
+def test_single_pod_dryrun_compiles(arch, shape):
+    res = _run(["--arch", arch, "--shape", shape, "--no-correct"])
+    assert res.returncode == 0, res.stderr[-2000:]
+    line = [l for l in res.stdout.splitlines() if l.startswith("{")][-1]
+    d = json.loads(line)
+    assert d["chips"] == 256 and d["mesh"] == "16x16"
+    assert d["hlo_flops_per_device"] > 0
+    assert d["bottleneck"] in ("compute", "memory", "collective")
+
+
+def test_multi_pod_dryrun_compiles():
+    res = _run(
+        ["--arch", "mamba2-780m", "--shape", "decode_32k", "--multi-pod", "--no-correct"]
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    line = [l for l in res.stdout.splitlines() if l.startswith("{")][-1]
+    d = json.loads(line)
+    assert d["chips"] == 512 and d["mesh"] == "2x16x16"
+    # cross-pod data parallelism must produce collectives
+    assert d["collective_bytes_per_device"] > 0

@@ -1,0 +1,63 @@
+"""Gavel / POP LP baseline sanity tests."""
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import ClusterSpec
+from repro.core.policies.gavel import GavelPolicy, PopPolicy, solve_gavel_lp
+from repro.core.profiler import ThroughputProfile
+from repro.core.scheduler import TesseraeScheduler
+from repro.core.simulator import SimConfig, Simulator
+from repro.core.traces import shockwave_trace, synthetic_active_jobs
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return ThroughputProfile()
+
+
+class TestGavelLp:
+    def test_lp_respects_capacity(self, profile):
+        cluster = ClusterSpec(4, 4)
+        jobs = synthetic_active_jobs(20, seed=0, profile=profile)
+        sol = solve_gavel_lp(jobs, profile, cluster)
+        # per-job fractions within [0,1]
+        used = 0.0
+        for j in jobs:
+            frac = sol.solo[j.job_id] + sum(
+                f for (a, b), f in sol.pairs.items() if j.job_id in (a, b)
+            )
+            assert frac <= 1.0 + 1e-6
+            used += sol.solo[j.job_id] * j.num_gpus
+        for (a, b), f in sol.pairs.items():
+            ga = next(j.num_gpus for j in jobs if j.job_id == a)
+            used += f * ga
+        assert used <= cluster.num_gpus + 1e-4
+
+    def test_variable_count_grows_quadratically(self, profile):
+        cluster = ClusterSpec(4, 4)
+        j10 = synthetic_active_jobs(10, seed=1, profile=profile)
+        j40 = synthetic_active_jobs(40, seed=1, profile=profile)
+        s10 = solve_gavel_lp(j10, profile, cluster)
+        s40 = solve_gavel_lp(j40, profile, cluster)
+        assert s40.num_variables > 6 * s10.num_variables  # ~quadratic
+
+    def test_pop_faster_than_gavel_large(self, profile):
+        cluster = ClusterSpec(16, 4)
+        jobs = synthetic_active_jobs(300, seed=2, profile=profile)
+        g = GavelPolicy(profile)
+        p = PopPolicy(profile, partition_size=64)
+        tg = g.refresh(jobs, cluster)
+        tp = p.refresh(jobs, cluster)
+        assert tp < tg
+
+    def test_gavel_end_to_end_sim(self, profile):
+        cluster = ClusterSpec(2, 4)
+        trace = shockwave_trace(num_jobs=12, seed=3, profile=profile)
+        pol = GavelPolicy(profile)
+        sched = TesseraeScheduler(
+            cluster, pol, profile, migration_algorithm="none"
+        )
+        res = Simulator(cluster, trace, sched, profile, SimConfig()).run()
+        assert all(s.finished for s in res.jobs.values())
+        assert res.lp_refresh_s > 0

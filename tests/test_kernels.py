@@ -1,0 +1,135 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode, CPU).
+
+Per the kernel contract: sweep shapes & dtypes, assert allclose vs ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lap_bid import lap_bid_pallas
+from repro.kernels.migration_cost import migration_cost_pallas
+
+
+class TestLapBidKernel:
+    @pytest.mark.parametrize("n,m", [(4, 4), (7, 13), (64, 64), (130, 300), (5, 520), (257, 1100)])
+    @pytest.mark.parametrize("dtype", [jnp.float32])
+    def test_matches_ref(self, n, m, dtype):
+        rng = np.random.default_rng(n * 1000 + m)
+        a = jnp.asarray(rng.normal(size=(n, m)), dtype)
+        p = jnp.asarray(rng.normal(size=(m,)), dtype)
+        bv, bj, sv = lap_bid_pallas(a, p, interpret=True)
+        rv, rj, rsv = ref.lap_bid_top2(a - p[None, :])
+        np.testing.assert_allclose(bv, rv, rtol=1e-6)
+        np.testing.assert_array_equal(bj, rj)
+        np.testing.assert_allclose(sv, rsv, rtol=1e-6)
+
+    def test_ties_and_duplicates(self):
+        # duplicate best values -> second == best; argmax = first occurrence
+        a = jnp.asarray([[1.0, 5.0, 5.0, 0.0], [2.0, 2.0, 2.0, 2.0]])
+        p = jnp.zeros((4,))
+        bv, bj, sv = lap_bid_pallas(a, p, interpret=True)
+        rv, rj, rsv = ref.lap_bid_top2(a)
+        np.testing.assert_allclose(bv, rv)
+        np.testing.assert_array_equal(bj, rj)
+        np.testing.assert_allclose(sv, rsv)
+
+    def test_cross_tile_ties(self):
+        # identical maxima in different column tiles: first tile must win
+        m = 1100  # spans 3 column tiles at BLOCK_COLS=512
+        a = np.zeros((3, m), np.float32)
+        a[0, 10] = 7.0
+        a[0, 700] = 7.0  # tie across tiles
+        a[1, 600] = 3.0
+        a[2, 1050] = 9.0
+        bv, bj, sv = lap_bid_pallas(jnp.asarray(a), jnp.zeros((m,)), interpret=True)
+        rv, rj, rsv = ref.lap_bid_top2(jnp.asarray(a))
+        np.testing.assert_array_equal(bj, rj)
+        np.testing.assert_allclose(sv, rsv)
+
+
+class TestMigrationCostKernel:
+    @pytest.mark.parametrize("u,v", [(4, 4), (8, 8), (130, 70), (256, 256)])
+    def test_matches_ref(self, u, v):
+        rng = np.random.default_rng(u * 7 + v)
+        # random job ids incl. empties
+        slots_u = rng.integers(-1, 20, size=(u, 2)).astype(np.int32)
+        slots_v = rng.integers(-1, 20, size=(v, 2)).astype(np.int32)
+        lookup = rng.uniform(0.1, 0.5, size=21).astype(np.float32)
+        w_u = np.where(slots_u >= 0, lookup[np.maximum(slots_u, 0)], 0.0).astype(np.float32)
+        w_v = np.where(slots_v >= 0, lookup[np.maximum(slots_v, 0)], 0.0).astype(np.float32)
+        got = migration_cost_pallas(
+            jnp.asarray(slots_u), jnp.asarray(slots_v),
+            jnp.asarray(w_u), jnp.asarray(w_v), interpret=True,
+        )
+        want = ref.migration_cost(
+            jnp.asarray(slots_u), jnp.asarray(slots_v),
+            jnp.asarray(w_u), jnp.asarray(w_v),
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_agrees_with_numpy_path(self):
+        """Kernel vs the numpy implementation used by plan_migration."""
+        from repro.core.migration import _weight_lookup, pairwise_migration_cost
+        from repro.kernels.ops import migration_cost_matrix
+
+        rng = np.random.default_rng(0)
+        slots_u = rng.integers(-1, 10, size=(16, 2))
+        slots_v = rng.integers(-1, 10, size=(16, 2))
+        num_gpus_of = {j: int(g) for j, g in enumerate(rng.choice([1, 2, 4, 8], 10))}
+        want = pairwise_migration_cost(slots_u, slots_v, _weight_lookup(num_gpus_of))
+        got = migration_cost_matrix(slots_u, slots_v, num_gpus_of)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize("bh,s,d", [(2, 128, 64), (1, 256, 128), (3, 384, 64), (2, 1024, 128)])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref_f32(self, bh, s, d, causal):
+        rng = np.random.default_rng(s + d)
+        q = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.float32)
+        got = flash_attention_pallas(q, k, v, causal=causal, interpret=True)
+        want = ref.flash_attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("s", [128, 512])
+    def test_bf16(self, s):
+        rng = np.random.default_rng(s)
+        q = jnp.asarray(rng.normal(size=(2, s, 64)), jnp.bfloat16)
+        k = jnp.asarray(rng.normal(size=(2, s, 64)), jnp.bfloat16)
+        v = jnp.asarray(rng.normal(size=(2, s, 64)), jnp.bfloat16)
+        got = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+        want = ref.flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            got.astype(jnp.float32), want.astype(jnp.float32), rtol=3e-2, atol=3e-2
+        )
+
+    def test_unaligned_seq(self):
+        """Sequence not a multiple of the block size (padding path)."""
+        rng = np.random.default_rng(9)
+        q = jnp.asarray(rng.normal(size=(1, 200, 64)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 200, 64)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, 200, 64)), jnp.float32)
+        got = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+        want = ref.flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+class TestAuctionWithKernel:
+    def test_auction_kernel_path(self):
+        from repro.core.matching.auction import auction_lap
+        from repro.core.matching.hungarian import assignment_cost
+        from scipy.optimize import linear_sum_assignment as scipy_lsa
+
+        rng = np.random.default_rng(0)
+        benefit = rng.integers(0, 20, size=(8, 8)).astype(np.float32)
+        res = auction_lap(jnp.asarray(benefit), use_kernel=True)
+        col = np.asarray(res.col_of)
+        got = benefit[np.arange(8), col].sum()
+        r, c = scipy_lsa(benefit, maximize=True)
+        assert np.isclose(got, benefit[r, c].sum())

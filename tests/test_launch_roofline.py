@@ -1,0 +1,156 @@
+"""Launch-layer tests: sharding rules, input specs, HLO collective parser."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_reduced, list_archs
+from repro.launch.mesh import make_smoke_mesh
+from repro.launch.pspec import ShardingRules, constrain, use_rules
+from repro.launch.specs import (
+    INPUT_SHAPES,
+    batch_logical_axes,
+    bytes_per_device,
+    input_specs,
+    logical_axes_for,
+    sharding_tree,
+)
+from repro.roofline import bytes_of_type, parse_collectives
+
+
+class TestShardingRules:
+    def _rules(self):
+        return ShardingRules(make_smoke_mesh())
+
+    def test_divisibility_fallback(self):
+        rules = self._rules()
+        # fake a 16-way model axis by monkeypatching axis_size
+        rules.axis_size = lambda phys: 16 if phys else 1
+        spec = rules.spec_for((12, 128), ("heads", "ff"))
+        assert spec[0] is None  # 12 heads don't divide 16
+        assert spec[1] == "model"
+
+    def test_duplicate_mesh_axis_suppressed(self):
+        rules = ShardingRules(make_smoke_mesh(), {"seq": "model"})
+        rules.axis_size = lambda phys: 16 if phys else 1
+        spec = rules.spec_for((256, 4096, 32, 128), ("batch", "seq", "heads", None))
+        # seq takes "model"; heads must NOT also get it
+        assert spec[1] == "model"
+        assert spec[2] is None
+
+    def test_constrain_noop_outside_context(self):
+        x = jnp.ones((4, 4))
+        assert constrain(x, "batch", None) is x
+
+    def test_constrain_rank_mismatch(self):
+        rules = self._rules()
+        with use_rules(rules):
+            with pytest.raises(ValueError):
+                constrain(jnp.ones((4, 4)), "batch")
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("arch", list_archs())
+    @pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+    def test_specs_exist_and_are_abstract(self, arch, shape_name):
+        cfg = get_config(arch)
+        specs = input_specs(cfg, INPUT_SHAPES[shape_name])
+        assert "tokens" in specs
+        for v in specs.values():
+            assert isinstance(v, jax.ShapeDtypeStruct)
+        shp = INPUT_SHAPES[shape_name]
+        if shp.kind == "decode":
+            assert specs["tokens"].shape == (shp.global_batch, 1)
+        else:
+            assert specs["tokens"].shape == (shp.global_batch, shp.seq_len)
+        if cfg.frontend == "vision" and shp.kind != "decode":
+            assert "image_embeds" in specs
+        if cfg.frontend == "audio" and shp.kind != "decode":
+            assert "audio_frames" in specs
+
+    def test_param_logical_axes_patterns(self):
+        assert logical_axes_for("embed", (1000, 64)) == ("vocab", "fsdp")
+        assert logical_axes_for("layers.attn.wq", (4, 64, 8, 16)) == (
+            None,
+            "fsdp",
+            "heads",
+            None,
+        )
+        assert logical_axes_for("layers.moe.w_gate", (4, 8, 64, 128)) == (
+            None,
+            "expert",
+            "fsdp",
+            None,
+        )
+        # shared experts are dense ffn, not expert-parallel
+        assert logical_axes_for("layers.moe.shared.w_gate", (4, 64, 128)) == (
+            None,
+            "fsdp",
+            "ff",
+        )
+        assert logical_axes_for("layers.norm1", (4, 64)) == (None, None)
+        assert logical_axes_for("layers.mamba.in_proj", (4, 64, 300)) == (
+            None,
+            "fsdp",
+            "ssm_inner",
+        )
+
+    def test_bytes_per_device_unsharded(self):
+        rules = ShardingRules(make_smoke_mesh())
+        tree = {"a": jax.ShapeDtypeStruct((8, 8), jnp.float32)}
+        sh = sharding_tree(tree, rules, lambda p, s: (None, None))
+        assert bytes_per_device(tree, sh) == 8 * 8 * 4
+
+
+class TestCollectiveParser:
+    HLO = """
+HloModule jit_step
+
+fused_computation {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  ROOT %add.1 = f32[128,256]{1,0} add(%p0, %p0)
+}
+
+ENTRY main {
+  %arg0 = f32[128,256]{1,0} parameter(0)
+  %arg1 = bf16[64,64]{1,0} parameter(1)
+  %all-gather.1 = f32[2048,256]{1,0} all-gather(%arg0), replica_groups={}, dimensions={0}
+  %all-reduce.2 = f32[128,256]{1,0} all-reduce(%arg0), to_apply=%fused_computation
+  %ar-start = f32[128,256]{1,0} all-reduce-start(%arg0), to_apply=%fused_computation
+  %ar-done = f32[128,256]{1,0} all-reduce-done(%ar-start)
+  %cp = bf16[64,64]{1,0} collective-permute(%arg1), source_target_pairs={{0,1}}
+  ROOT %t = (f32[2048,256]{1,0}) tuple(%all-gather.1)
+}
+"""
+
+    def test_bytes_of_type(self):
+        assert bytes_of_type("f32[128,256]{1,0}") == 128 * 256 * 4
+        assert bytes_of_type("bf16[64,64]") == 64 * 64 * 2
+        assert bytes_of_type("(f32[8], bf16[4])") == 8 * 4 + 4 * 2
+        assert bytes_of_type("pred[]") == 1
+
+    def test_parse_collectives(self):
+        stats = parse_collectives(self.HLO)
+        assert stats.by_kind["all-gather"][0] == 1
+        assert stats.by_kind["all-gather"][1] == 128 * 256 * 4  # operand size
+        # all-reduce counted twice (plain + -start), -done skipped
+        assert stats.by_kind["all-reduce"][0] == 2
+        assert stats.by_kind["collective-permute"] == (1, 64 * 64 * 2)
+
+
+class TestShardedSmoke:
+    def test_sharded_forward_on_smoke_mesh(self):
+        """The constrain() path executes under a real (1x1) mesh."""
+        from repro.launch.mesh import dp_axes_of
+        from repro.models import get_model
+
+        cfg = get_reduced("llama3-8b")
+        model = get_model(cfg)
+        mesh = make_smoke_mesh()
+        rules = ShardingRules(mesh, dp_axes=("data",))
+        params = model.init(jax.random.PRNGKey(0), cfg)
+        batch = {"tokens": jnp.zeros((2, 16), jnp.int32)}
+        with mesh, use_rules(rules):
+            logits, _ = jax.jit(lambda p, b: model.forward(p, cfg, b))(params, batch)
+        assert logits.shape == (2, 16, cfg.vocab_size)

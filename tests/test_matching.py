@@ -1,0 +1,144 @@
+"""Unit + property tests for the LAP solvers (hungarian, scipy, auction)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.matching.auction import auction_assignment, auction_lap
+from repro.core.matching.hungarian import (
+    assignment_cost,
+    linear_sum_assignment,
+    solve_lap,
+)
+
+scipy_lsa = pytest.importorskip("scipy.optimize").linear_sum_assignment
+
+
+def _rand_cost(rng, n, m, integer=False):
+    if integer:
+        return rng.integers(0, 50, size=(n, m)).astype(float)
+    return rng.uniform(0, 10, size=(n, m))
+
+
+class TestHungarian:
+    def test_identity(self):
+        cost = np.array([[0.0, 1.0], [1.0, 0.0]])
+        r, c = linear_sum_assignment(cost)
+        assert list(r) == [0, 1] and list(c) == [0, 1]
+
+    def test_matches_scipy_square(self):
+        rng = np.random.default_rng(0)
+        for n in [1, 2, 3, 5, 8, 17, 40]:
+            cost = _rand_cost(rng, n, n)
+            r1, c1 = linear_sum_assignment(cost)
+            r2, c2 = scipy_lsa(cost)
+            assert np.isclose(
+                assignment_cost(cost, r1, c1), assignment_cost(cost, r2, c2)
+            )
+
+    def test_matches_scipy_rect(self):
+        rng = np.random.default_rng(1)
+        for n, m in [(2, 5), (5, 2), (7, 13), (13, 7), (1, 9)]:
+            cost = _rand_cost(rng, n, m)
+            r1, c1 = linear_sum_assignment(cost)
+            r2, c2 = scipy_lsa(cost)
+            assert len(r1) == min(n, m)
+            assert np.isclose(
+                assignment_cost(cost, r1, c1), assignment_cost(cost, r2, c2)
+            )
+
+    def test_maximize(self):
+        rng = np.random.default_rng(2)
+        cost = _rand_cost(rng, 6, 6)
+        r1, c1 = linear_sum_assignment(cost, maximize=True)
+        r2, c2 = scipy_lsa(cost, maximize=True)
+        assert np.isclose(
+            assignment_cost(cost, r1, c1), assignment_cost(cost, r2, c2)
+        )
+
+    def test_forbidden_edges(self):
+        cost = np.array([[np.inf, 1.0], [1.0, np.inf]])
+        r, c = linear_sum_assignment(cost)
+        assert assignment_cost(cost, r, c) == 2.0
+
+    @given(
+        st.integers(1, 12),
+        st.integers(1, 12),
+        st.integers(0, 2**32 - 1),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_property_optimal_vs_scipy(self, n, m, seed):
+        rng = np.random.default_rng(seed)
+        cost = _rand_cost(rng, n, m)
+        r1, c1 = linear_sum_assignment(cost)
+        r2, c2 = scipy_lsa(cost)
+        # permutation validity
+        assert len(set(r1)) == len(r1) and len(set(c1)) == len(c1)
+        assert np.isclose(
+            assignment_cost(cost, r1, c1), assignment_cost(cost, r2, c2)
+        )
+
+    def test_solve_lap_backends_agree(self):
+        rng = np.random.default_rng(3)
+        cost = _rand_cost(rng, 30, 30)
+        r1, c1 = solve_lap(cost, backend="numpy")
+        r2, c2 = solve_lap(cost, backend="scipy")
+        assert np.isclose(
+            assignment_cost(cost, r1, c1), assignment_cost(cost, r2, c2)
+        )
+
+
+class TestAuction:
+    def test_small_exact(self):
+        rng = np.random.default_rng(0)
+        for n in [1, 2, 4, 8, 16]:
+            cost = rng.integers(0, 20, size=(n, n)).astype(float)
+            r, c = auction_assignment(cost)
+            r2, c2 = scipy_lsa(cost)
+            assert np.isclose(
+                assignment_cost(cost, r, c), assignment_cost(cost, r2, c2)
+            ), f"n={n}"
+
+    def test_maximize(self):
+        rng = np.random.default_rng(1)
+        cost = rng.integers(0, 20, size=(8, 8)).astype(float)
+        r, c = auction_assignment(cost, maximize=True)
+        r2, c2 = scipy_lsa(cost, maximize=True)
+        assert np.isclose(
+            assignment_cost(cost, r, c), assignment_cost(cost, r2, c2)
+        )
+
+    def test_converged_flag_and_permutation(self):
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(2)
+        b = jnp.asarray(rng.integers(0, 30, size=(12, 12)).astype(np.float32))
+        res = auction_lap(b)
+        assert bool(res.converged)
+        col = np.asarray(res.col_of)
+        assert sorted(col.tolist()) == list(range(12))
+
+    @given(st.integers(1, 9), st.integers(0, 2**32 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_property_integer_optimal(self, n, seed):
+        rng = np.random.default_rng(seed)
+        cost = rng.integers(0, 15, size=(n, n)).astype(float)
+        r, c = auction_assignment(cost)
+        r2, c2 = scipy_lsa(cost)
+        assert np.isclose(
+            assignment_cost(cost, r, c), assignment_cost(cost, r2, c2)
+        )
+
+    def test_batched(self):
+        import jax.numpy as jnp
+
+        from repro.core.matching.auction import auction_lap_batched
+
+        rng = np.random.default_rng(3)
+        batch = rng.integers(0, 25, size=(6, 5, 5)).astype(np.float32)
+        res = auction_lap_batched(jnp.asarray(batch))
+        for i in range(6):
+            col = np.asarray(res.col_of[i])
+            got = batch[i][np.arange(5), col].sum()
+            r2, c2 = scipy_lsa(batch[i], maximize=True)
+            assert np.isclose(got, batch[i][r2, c2].sum()), f"instance {i}"

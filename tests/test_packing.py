@@ -1,0 +1,104 @@
+"""Packing (Algorithm 4) tests: constraints, optimality, strategy lift."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.jobs import JobSpec, JobState
+from repro.core.packing import build_packing_graph, pack_jobs
+from repro.core.profiler import ThroughputProfile
+
+MODELS = ["resnet50", "vgg19", "dcgan", "pointnet", "gpt3-medium", "gpt3-xl"]
+
+
+def _job(jid, model="resnet50", gpus=1, packable=True):
+    spec = JobSpec(
+        job_id=jid,
+        model=model,
+        num_gpus=gpus,
+        total_iters=1000,
+        arrival_time=0.0,
+        packable=packable,
+        is_llm=model.startswith("gpt3"),
+    )
+    return JobState(spec=spec)
+
+
+@pytest.fixture
+def profile():
+    return ThroughputProfile()
+
+
+class TestPackingConstraints:
+    def test_gpu_count_must_match(self, profile):
+        placed = [_job(0, gpus=2)]
+        pending = [_job(1, gpus=1)]
+        res = pack_jobs(placed, pending, profile)
+        assert res.matches == {}
+
+    def test_non_packable_bypassed(self, profile):
+        placed = [_job(0, packable=False)]
+        pending = [_job(1)]
+        res = pack_jobs(placed, pending, profile)
+        assert res.matches == {}
+
+    def test_simple_match(self, profile):
+        placed = [_job(0, "resnet50")]
+        pending = [_job(1, "pointnet")]
+        res = pack_jobs(placed, pending, profile)
+        assert res.matches == {1: 0}
+        assert res.total_weight > 1.0  # compute+memory-bound pair packs well
+
+    def test_oom_pair_gets_no_edge(self):
+        # v100 (16 GB): two 15 GB vgg19 cannot pack
+        profile = ThroughputProfile(gpu_type="v100")
+        placed = [_job(0, "vgg19")]
+        pending = [_job(1, "vgg19")]
+        res = pack_jobs(placed, pending, profile)
+        assert res.matches == {}
+
+    def test_at_most_one_partner(self, profile):
+        placed = [_job(0, "resnet50")]
+        pending = [_job(1, "pointnet"), _job(2, "dcgan")]
+        res = pack_jobs(placed, pending, profile)
+        assert len(res.matches) == 1
+
+
+class TestPackingOptimality:
+    @given(st.integers(0, 2**32 - 1), st.integers(1, 4), st.integers(1, 4))
+    @settings(max_examples=40, deadline=None)
+    def test_matches_bruteforce(self, seed, n_placed, n_pending):
+        rng = np.random.default_rng(seed)
+        profile = ThroughputProfile()
+        placed = [
+            _job(i, MODELS[rng.integers(len(MODELS))], gpus=int(rng.choice([1, 2])))
+            for i in range(n_placed)
+        ]
+        pending = [
+            _job(
+                100 + i,
+                MODELS[rng.integers(len(MODELS))],
+                gpus=int(rng.choice([1, 2])),
+            )
+            for i in range(n_pending)
+        ]
+        w = build_packing_graph(placed, pending, profile)
+        res = pack_jobs(placed, pending, profile)
+        # brute force maximum-weight matching
+        best = 0.0
+        cols = list(range(n_pending))
+        for k in range(min(n_placed, n_pending) + 1):
+            for rows in itertools.permutations(range(n_placed), k):
+                for cc in itertools.permutations(cols, k):
+                    tot = sum(w[r, c] for r, c in zip(rows, cc))
+                    best = max(best, tot)
+        assert res.total_weight == pytest.approx(best, abs=1e-9)
+
+    def test_strategy_optimisation_lifts_weight(self, profile):
+        placed = [_job(0, "gpt3-3b", gpus=2)]
+        pending = [_job(1, "resnet50", gpus=2)]
+        res_plain = pack_jobs(placed, pending, profile, optimize_strategy=False)
+        res_opt = pack_jobs(placed, pending, profile, optimize_strategy=True)
+        assert res_opt.total_weight >= res_plain.total_weight

@@ -1,0 +1,163 @@
+"""System-level invariants (hypothesis property tests) + analytic checks."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, get_reduced
+from repro.core.cluster import ClusterSpec, MAX_PACK
+from repro.core.placement import place_without_packing
+from repro.core.policies import TiresiasPolicy
+from repro.core.profiler import ThroughputProfile
+from repro.core.scheduler import TesseraeScheduler
+from repro.core.simulator import SimConfig, Simulator
+from repro.core.traces import shockwave_trace, synthetic_active_jobs
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return ThroughputProfile()
+
+
+class TestPlacementInvariants:
+    @given(st.integers(0, 2**32 - 1), st.integers(1, 8), st.integers(2, 8))
+    @settings(max_examples=30, deadline=None)
+    def test_no_overallocation_and_consolidation(self, seed, nodes, gpn_half):
+        gpn = 2 * gpn_half  # even node sizes so 8-GPU jobs fit whole nodes
+        profile = ThroughputProfile()
+        cluster = ClusterSpec(nodes, gpn)
+        jobs = synthetic_active_jobs(30, seed=seed, profile=profile)
+        jobs = [j for j in jobs if j.num_gpus <= gpn or j.num_gpus % gpn == 0]
+        plan, placed, pending = place_without_packing(cluster, jobs)
+        # every GPU holds at most one job before packing
+        for n in range(nodes):
+            for l in range(gpn):
+                assert len(plan.jobs_on_gpu(n, l)) <= 1
+        # placed jobs got exactly their GPU count, consolidated
+        gmap = plan.job_gpu_map()
+        for j in placed:
+            assert len(gmap[j.job_id]) == j.num_gpus
+            assert plan.is_consolidated(j.job_id)
+        # placed + pending = input
+        assert len(placed) + len(pending) == len(jobs)
+
+
+class TestSimulatorInvariants:
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=8, deadline=None)
+    def test_conservation(self, seed):
+        profile = ThroughputProfile()
+        cluster = ClusterSpec(2, 4)
+        trace = shockwave_trace(num_jobs=15, seed=seed, profile=profile)
+        sched = TesseraeScheduler(cluster, TiresiasPolicy(profile), profile)
+        res = Simulator(cluster, trace, sched, profile, SimConfig()).run()
+        for s in res.jobs.values():
+            # finished after arrival; executed no longer than wall time
+            assert s.finish_time > s.spec.arrival_time
+            assert s.executed_time <= (s.finish_time - s.spec.arrival_time) + 1e-6
+            # 2D service bounded by gpus * executed time
+            assert s.attained_service <= s.num_gpus * s.executed_time + 1e-6
+        # aggregate service can't exceed cluster capacity * makespan
+        # (packing shares GPUs, each packed job still occupies the GPU set,
+        # so the bound is capacity * makespan * MAX_PACK)
+        total_service = sum(s.attained_service for s in res.jobs.values())
+        assert total_service <= cluster.num_gpus * res.makespan_s * MAX_PACK
+
+    def test_jct_at_least_isolated_runtime(self, profile):
+        cluster = ClusterSpec(2, 4)
+        trace = shockwave_trace(num_jobs=10, seed=5, profile=profile)
+        sched = TesseraeScheduler(cluster, TiresiasPolicy(profile), profile)
+        res = Simulator(cluster, trace, sched, profile, SimConfig()).run()
+        for s in res.jobs.values():
+            iso = s.spec.total_iters / profile.isolated(
+                s.spec.model, s.num_gpus, "dp"
+            )
+            # strategy factors can speed a job up by <=~1.25x; JCT can't be
+            # meaningfully below isolated runtime
+            assert s.finish_time - s.spec.arrival_time >= 0.75 * iso
+
+
+class TestMoEShardMapParity:
+    def test_matches_reference_on_one_device(self):
+        from repro.launch.mesh import make_smoke_mesh
+        from repro.launch.pspec import ShardingRules, use_rules
+        from repro.models.mlp import init_moe, moe_ffn, moe_ffn_sharded
+
+        cfg = get_reduced("dbrx-132b")
+        p = init_moe(jax.random.PRNGKey(0), cfg, jnp.bfloat16)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.bfloat16)
+        ref, aux_ref = jax.jit(lambda p, x: moe_ffn(p, cfg, x))(p, x)
+        mesh = make_smoke_mesh()
+        with mesh, use_rules(ShardingRules(mesh)):
+            got, aux_got = jax.jit(lambda p, x: moe_ffn_sharded(p, cfg, x))(p, x)
+        assert float(aux_ref) == pytest.approx(float(aux_got), rel=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(ref, np.float32), np.asarray(got, np.float32),
+            rtol=3e-2, atol=3e-2,
+        )
+
+    def test_shared_experts_arch(self):
+        from repro.launch.mesh import make_smoke_mesh
+        from repro.launch.pspec import ShardingRules, use_rules
+        from repro.models.mlp import init_moe, moe_ffn, moe_ffn_sharded
+
+        cfg = get_reduced("deepseek-v2-236b")
+        p = init_moe(jax.random.PRNGKey(0), cfg, jnp.bfloat16)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model), jnp.bfloat16)
+        ref, _ = jax.jit(lambda p, x: moe_ffn(p, cfg, x))(p, x)
+        mesh = make_smoke_mesh()
+        with mesh, use_rules(ShardingRules(mesh)):
+            got, _ = jax.jit(lambda p, x: moe_ffn_sharded(p, cfg, x))(p, x)
+        np.testing.assert_allclose(
+            np.asarray(ref, np.float32), np.asarray(got, np.float32),
+            rtol=3e-2, atol=3e-2,
+        )
+
+
+class TestParamCounts:
+    """Analytic counts must land on the published model sizes."""
+
+    @pytest.mark.parametrize(
+        "arch,expected_b,tol",
+        [
+            ("llama3-8b", 8.0, 0.1),
+            ("qwen3-14b", 14.8, 0.15),
+            ("mamba2-780m", 0.78, 0.15),
+            ("deepseek-67b", 67.4, 0.1),
+            ("dbrx-132b", 132.0, 0.1),
+            ("nemotron-4-340b", 340.0, 0.1),
+            ("deepseek-v2-236b", 236.0, 0.15),
+            ("zamba2-2.7b", 2.7, 0.25),
+        ],
+    )
+    def test_param_count(self, arch, expected_b, tol):
+        got = get_config(arch).param_count() / 1e9
+        assert abs(got - expected_b) / expected_b <= tol, got
+
+    def test_moe_active_smaller(self):
+        for arch in ["dbrx-132b", "deepseek-v2-236b"]:
+            cfg = get_config(arch)
+            assert cfg.active_param_count() < 0.4 * cfg.param_count()
+
+
+class TestLoopCorrectionFormula:
+    @given(
+        st.integers(2, 16),     # mb
+        st.integers(2, 96),     # layer trips
+        st.floats(0, 1e9),      # glue_out
+        st.floats(0, 1e9),      # mb_glue
+        st.floats(1, 1e9),      # layer body
+    )
+    @settings(max_examples=100, deadline=None)
+    def test_reconstructs_truth(self, mb, trips, glue_out, mb_glue, body):
+        """base/diff measurements reconstruct the true loop-expanded cost."""
+        base = glue_out + mb_glue + body          # each while body counted once
+        layer_d = body                            # unroll diff isolates bodies
+        mb_d = mb_glue + body
+        truth = glue_out + mb * (mb_glue + trips * body)
+        corrected = base + (mb - 1) * (mb_d - layer_d) + (mb * trips - 1) * layer_d
+        assert corrected == pytest.approx(truth, rel=1e-9)

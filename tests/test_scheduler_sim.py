@@ -1,0 +1,187 @@
+"""End-to-end scheduler + simulator behaviour tests."""
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import ClusterSpec
+from repro.core.policies import FifoPolicy, TiresiasPolicy, ThemisFtfPolicy
+from repro.core.profiler import ThroughputProfile
+from repro.core.scheduler import TesseraeScheduler, tiresias_single_packed_ok
+from repro.core.simulator import SimConfig, Simulator
+from repro.core.traces import gavel_trace, shockwave_trace, synthetic_active_jobs
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return ThroughputProfile()
+
+
+def _sim(cluster, trace, scheduler, profile, **cfg):
+    return Simulator(cluster, trace, scheduler, profile, SimConfig(**cfg)).run()
+
+
+class TestSchedulerRound:
+    def test_placement_respects_capacity(self, profile):
+        cluster = ClusterSpec(2, 4)
+        jobs = synthetic_active_jobs(30, seed=0, profile=profile)
+        sched = TesseraeScheduler(cluster, TiresiasPolicy(profile), profile)
+        dec = sched.decide(jobs, now=0.0)
+        used = sum(len(g) for g in dec.plan.job_gpu_map().values())
+        # each GPU holds at most 2 jobs
+        assert all(
+            len(dec.plan.jobs_on_gpu(n, l)) <= 2
+            for n in range(2)
+            for l in range(4)
+        )
+        placed_ids = {j.job_id for j in dec.placed}
+        pend_ids = {j.job_id for j in dec.pending}
+        assert placed_ids.isdisjoint(pend_ids)
+
+    def test_consolidation_all_jobs(self, profile):
+        cluster = ClusterSpec(4, 4)
+        jobs = synthetic_active_jobs(40, seed=1, profile=profile)
+        sched = TesseraeScheduler(cluster, TiresiasPolicy(profile), profile)
+        dec = sched.decide(jobs, now=0.0)
+        for j in dec.plan.job_gpu_map():
+            assert dec.plan.is_consolidated(j), f"job {j} not consolidated"
+
+    def test_packed_jobs_share_exact_gpus(self, profile):
+        cluster = ClusterSpec(2, 4)
+        jobs = synthetic_active_jobs(30, seed=2, profile=profile)
+        sched = TesseraeScheduler(cluster, TiresiasPolicy(profile), profile)
+        dec = sched.decide(jobs, now=0.0)
+        gmap = dec.plan.job_gpu_map()
+        for pending_id, placed_id in dec.packing.matches.items():
+            assert gmap[pending_id] == gmap[placed_id]
+
+    def test_migration_round_to_round(self, profile):
+        cluster = ClusterSpec(2, 4)
+        jobs = synthetic_active_jobs(12, seed=3, profile=profile)
+        sched = TesseraeScheduler(cluster, TiresiasPolicy(profile), profile)
+        d1 = sched.decide(jobs, now=0.0)
+        # identical job set next round -> zero migrations expected
+        d2 = sched.decide(jobs, now=360.0, prev_plan=d1.plan)
+        assert d2.migration is not None
+        assert d2.migration.num_migrations == 0
+
+
+class TestSimulator:
+    def test_all_jobs_finish(self, profile):
+        cluster = ClusterSpec(4, 4)
+        trace = shockwave_trace(num_jobs=25, seed=0, profile=profile)
+        sched = TesseraeScheduler(cluster, TiresiasPolicy(profile), profile)
+        res = _sim(cluster, trace, sched, profile)
+        assert all(s.finished for s in res.jobs.values())
+        assert res.makespan_s > 0
+        assert np.all(res.jcts > 0)
+
+    def test_deterministic(self, profile):
+        cluster = ClusterSpec(2, 4)
+        trace = shockwave_trace(num_jobs=15, seed=1, profile=profile)
+        r1 = _sim(
+            cluster,
+            trace,
+            TesseraeScheduler(cluster, TiresiasPolicy(profile), profile),
+            profile,
+        )
+        r2 = _sim(
+            cluster,
+            trace,
+            TesseraeScheduler(cluster, TiresiasPolicy(profile), profile),
+            profile,
+        )
+        assert r1.avg_jct_s == r2.avg_jct_s
+        assert r1.makespan_s == r2.makespan_s
+
+    def test_packing_improves_jct_under_contention(self, profile):
+        cluster = ClusterSpec(2, 4)
+        trace = shockwave_trace(num_jobs=40, seed=2, profile=profile)
+        base = _sim(
+            cluster,
+            trace,
+            TesseraeScheduler(
+                cluster, TiresiasPolicy(profile), profile, enable_packing=False
+            ),
+            profile,
+        )
+        packed = _sim(
+            cluster,
+            trace,
+            TesseraeScheduler(
+                cluster, TiresiasPolicy(profile), profile, enable_packing=True
+            ),
+            profile,
+        )
+        assert packed.avg_jct_s < base.avg_jct_s
+
+    def test_migration_remap_reduces_migrations(self, profile):
+        cluster = ClusterSpec(4, 4)
+        trace = shockwave_trace(num_jobs=40, seed=3, profile=profile)
+        none = _sim(
+            cluster,
+            trace,
+            TesseraeScheduler(
+                cluster,
+                TiresiasPolicy(profile),
+                profile,
+                migration_algorithm="none",
+            ),
+            profile,
+        )
+        node = _sim(
+            cluster,
+            trace,
+            TesseraeScheduler(
+                cluster,
+                TiresiasPolicy(profile),
+                profile,
+                migration_algorithm="node",
+            ),
+            profile,
+        )
+        assert node.total_migrations < none.total_migrations
+
+    def test_tiresias_single_packs_less(self, profile):
+        cluster = ClusterSpec(2, 4)
+        trace = shockwave_trace(num_jobs=40, seed=4, profile=profile)
+        full = _sim(
+            cluster,
+            trace,
+            TesseraeScheduler(cluster, TiresiasPolicy(profile), profile),
+            profile,
+        )
+        single = _sim(
+            cluster,
+            trace,
+            TesseraeScheduler(
+                cluster,
+                TiresiasPolicy(profile),
+                profile,
+                packed_ok=tiresias_single_packed_ok,
+            ),
+            profile,
+        )
+        assert full.avg_jct_s <= single.avg_jct_s * 1.05
+
+    def test_ftf_policy_runs(self, profile):
+        cluster = ClusterSpec(2, 4)
+        trace = gavel_trace(num_jobs=15, seed=5, profile=profile)
+        res = _sim(
+            cluster,
+            trace,
+            TesseraeScheduler(cluster, ThemisFtfPolicy(profile), profile),
+            profile,
+        )
+        rho = res.ftf_ratios(profile)
+        assert len(rho) == 15 and np.all(np.isfinite(rho))
+
+    def test_fifo_orders_by_arrival(self, profile):
+        cluster = ClusterSpec(1, 4)
+        trace = shockwave_trace(num_jobs=8, seed=6, profile=profile)
+        res = _sim(
+            cluster,
+            trace,
+            TesseraeScheduler(cluster, FifoPolicy(profile), profile),
+            profile,
+        )
+        assert all(s.finished for s in res.jobs.values())

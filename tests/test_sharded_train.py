@@ -1,0 +1,83 @@
+"""End-to-end SHARDED train step on a real (1x1) mesh, incl. shard_map MoE.
+
+Exercises the exact code path the dry-run lowers — sharding rules active,
+in_shardings from the spec tree, shard_map expert parallelism — but on the
+single CPU device, executing for real and checking numerics.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.launch.mesh import make_smoke_mesh
+from repro.launch.pspec import ShardingRules, use_rules
+from repro.launch.specs import (
+    batch_logical_axes,
+    logical_axes_for,
+    sharding_tree,
+)
+from repro.train.data import batch_for
+from repro.train.step import TrainConfig, make_train_step, train_state_init
+
+
+def _batch(cfg, b=2, s=32):
+    raw = batch_for(
+        cfg.vocab_size, b, s, seed=0,
+        frontend=cfg.frontend, frontend_len=cfg.frontend_len, d_model=cfg.d_model,
+    )
+    return {k: jnp.asarray(v) for k, v in raw.items()}
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "dbrx-132b"])
+def test_sharded_train_step_executes(arch):
+    cfg = get_reduced(arch)
+    tc = TrainConfig(microbatches=2)
+    mesh = make_smoke_mesh()
+    rules = ShardingRules(mesh)
+    os.environ["REPRO_MOE_SHARDMAP"] = "1"
+    try:
+        with mesh, use_rules(rules):
+            state = train_state_init(jax.random.PRNGKey(0), cfg, tc)
+            state_sh = sharding_tree(state, rules, logical_axes_for)
+            batch = _batch(cfg)
+            batch_sh = {
+                k: rules.sharding_for(v.shape, batch_logical_axes(k, v.ndim))
+                for k, v in batch.items()
+            }
+            step = jax.jit(
+                make_train_step(cfg, tc),
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+            )
+            new_state, metrics = step(state, batch)
+        assert np.isfinite(float(metrics["loss"]))
+        assert float(metrics["grad_norm"]) > 0
+    finally:
+        os.environ.pop("REPRO_MOE_SHARDMAP", None)
+
+
+def test_shardmap_moe_loss_matches_reference_path():
+    """Same seed, same batch: shard_map-MoE train loss == pjit-MoE loss on
+    one device (dispatch semantics identical at G=1)."""
+    cfg = get_reduced("dbrx-132b")
+    tc = TrainConfig()
+    mesh = make_smoke_mesh()
+    rules = ShardingRules(mesh)
+    batch = _batch(cfg)
+
+    losses = {}
+    for flag in ("0", "1"):
+        os.environ["REPRO_MOE_SHARDMAP"] = flag
+        try:
+            with mesh, use_rules(rules):
+                state = train_state_init(jax.random.PRNGKey(0), cfg, tc)
+                step = jax.jit(make_train_step(cfg, tc))
+                _, metrics = step(state, batch)
+            losses[flag] = float(metrics["loss"])
+        finally:
+            os.environ.pop("REPRO_MOE_SHARDMAP", None)
+    assert losses["0"] == pytest.approx(losses["1"], rel=2e-2)

@@ -1,0 +1,94 @@
+"""Trace-generator and profiler-model statistical sanity tests."""
+
+import numpy as np
+import pytest
+
+from repro.core.profiler import (
+    MODEL_CATALOG,
+    ThroughputProfile,
+    linear_bo_estimate,
+    oracle_table,
+)
+from repro.core.traces import TABLE1_MODELS, gavel_trace, shockwave_trace
+
+
+class TestShockwaveTrace:
+    def test_gpu_distribution(self):
+        trace = shockwave_trace(num_jobs=4000, seed=0)
+        gpus = np.array([t.num_gpus for t in trace])
+        # paper: 1/2/4/8 with 0.60/0.30/0.09/0.01
+        for g, p in [(1, 0.60), (2, 0.30), (4, 0.09), (8, 0.01)]:
+            frac = (gpus == g).mean()
+            assert abs(frac - p) < 0.03, (g, frac)
+
+    def test_arrival_rate(self):
+        trace = shockwave_trace(num_jobs=2000, seed=1, arrival_rate_per_hour=80)
+        arrivals = np.array([t.arrival_time for t in trace])
+        gaps = np.diff(np.sort(arrivals))
+        assert abs(gaps.mean() - 3600 / 80) < 4.0
+
+    def test_models_from_table1(self):
+        trace = shockwave_trace(num_jobs=200, seed=2)
+        assert {t.model for t in trace} <= set(TABLE1_MODELS)
+
+
+class TestGavelTrace:
+    def test_duration_split(self):
+        profile = ThroughputProfile()
+        trace = gavel_trace(num_jobs=3000, seed=3, profile=profile)
+        durations = np.array(
+            [
+                t.total_iters / profile.isolated(t.model, t.num_gpus)
+                for t in trace
+            ]
+        )
+        # 80% short (10^[1.5,3] min), 20% long (10^[3,4] min)
+        long_frac = (durations > 1000 * 60).mean()
+        assert 0.1 < long_frac < 0.3
+
+    def test_gpu_distribution(self):
+        trace = gavel_trace(num_jobs=4000, seed=4)
+        gpus = np.array([t.num_gpus for t in trace])
+        for g, p in [(1, 0.70), (2, 0.10), (4, 0.15), (8, 0.05)]:
+            assert abs((gpus == g).mean() - p) < 0.03
+
+
+class TestProfilerModel:
+    def test_compute_memory_pairs_pack_best(self):
+        """Roofline grounding: compute-bound + memory-bound packs better
+        than two compute-bound jobs (the Fig. 7 structure)."""
+        prof = ThroughputProfile()
+        # resnet50 ci=0.82 (compute-bound), pointnet ci=0.25 (memory-bound)
+        mix, _ = prof.combined_weight("resnet50", "pointnet", optimize_strategy=False)
+        same, _ = prof.combined_weight("resnet50", "resnet50", optimize_strategy=False)
+        assert mix > same
+
+    def test_oom_pairs_have_zero_weight_on_v100(self):
+        prof = ThroughputProfile(gpu_type="v100")  # 16 GB
+        w, _ = prof.combined_weight("vgg19", "vgg19", optimize_strategy=False)
+        assert w == 0.0
+
+    def test_strategy_unlocks_oom_pair(self):
+        """Fig.-8 mechanism: a lower-memory parallelism strategy makes an
+        OOM pair packable and lifts the edge weight above zero."""
+        prof = ThroughputProfile()  # a100, 40 GB
+        # gpt3-3b (33 GB) + vgg19 (15 GB) OOMs at dp...
+        na, _ = prof.normalized_packed("gpt3-3b", "vgg19", strat_a="dp")
+        assert na == 0.0
+        # ...but packs under tp (33*0.62 + 15 < 40)
+        w, s = prof.combined_weight("gpt3-3b", "vgg19", optimize_strategy=True)
+        assert w > 0.0 and s != "dp"
+
+    def test_estimator_monotone_budget(self):
+        """More BO probes never leave the estimator with a WORSE best-known
+        strategy for the pair it optimises."""
+        truth = ThroughputProfile()
+        models = TABLE1_MODELS
+        t_small = linear_bo_estimate(truth, models, strategy_budget=1, seed=0)
+        t_big = linear_bo_estimate(truth, models, strategy_budget=5, seed=0)
+        a, b = "gpt3-xl", "resnet50"
+        w_small, _ = t_small.combined_weight(a, b)
+        w_big, _ = t_big.combined_weight(a, b)
+        truth_w, _ = truth.combined_weight(a, b)
+        # bigger budget estimate is closer to (or as close to) the truth
+        assert abs(w_big - truth_w) <= abs(w_small - truth_w) + 0.15
