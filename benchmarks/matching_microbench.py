@@ -1,64 +1,140 @@
 """LAP-solver microbenchmarks (beyond-paper §Perf evidence).
 
-Compares the paper-faithful scipy Hungarian path against our numpy
-implementation and the batched JAX auction solver on the Algorithm-2
-node-pair fan-out (k_c^2 independent k_l x k_l LAPs).
+Two parts:
+
+1. The original single-instance comparisons (our numpy Hungarian vs scipy)
+   — kept as CSV rows for continuity with the other paper-figure benches.
+2. The **engine scale sweep**: the Algorithm-2 node-pair fan-out solved
+   through ``solve_lap_batched`` with every registered backend, over batch
+   sizes {1, 16, 64, 256} plus cluster-scale batches up to 512 node-pair
+   instances (a 2048-GPU cluster: 512 nodes x 4 GPUs gives k_c = 512 and
+   512-instance LAP batches per fan-out row).  Timings land in a JSON perf
+   record for regression tracking:
+
+       PYTHONPATH=src python benchmarks/matching_microbench.py \\
+           --backend all --json matching_microbench.json
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
-from typing import List
+from typing import Dict, List
 
 import numpy as np
 
 from benchmarks.common import csv_row, timed
-from repro.core.matching.auction import auction_lap_batched
+from repro.core.matching import solve_lap_batched
 from repro.core.matching.hungarian import solve_lap
 
+#: Acceptance sweep: per-backend timings for these batch sizes ...
+BATCH_SIZES = [1, 16, 64, 256]
+#: ... plus the cluster-scale fan-out (>= 2048 GPUs -> 512-instance batches).
+SCALE_BATCH_SIZES = [512]
+#: node sizes k_l of the per-pair LAPs (4 = every evaluated cluster; 8
+#: exercises the non-smallperm path).
+NODE_SIZES = [4, 8]
 
-def main(print_csv: bool = True) -> List[str]:
-    rows: List[str] = []
+SWEEP_BACKENDS = ["scipy", "numpy", "smallperm", "auction", "auction_kernel"]
+
+
+def bench_single(rows: List[str], records: List[Dict]) -> None:
     rng = np.random.default_rng(0)
-
     for n in [16, 64, 256]:
         cost = rng.integers(0, 64, size=(n, n)).astype(float)
         _, t_np = timed(solve_lap, cost, backend="numpy")
         _, t_sp = timed(solve_lap, cost, backend="scipy")
         rows.append(csv_row(f"matching/numpy_n{n}", t_np * 1e6, f"n={n}"))
         rows.append(csv_row(f"matching/scipy_n{n}", t_sp * 1e6, f"n={n}"))
+        records.append({"bench": "single", "backend": "numpy", "n": n, "time_s": t_np})
+        records.append({"bench": "single", "backend": "scipy", "n": n, "time_s": t_sp})
 
-    # Algorithm-2 fan-out: 64 nodes -> 4096 node-pair 4x4 LAPs
-    import jax.numpy as jnp
 
-    for kc, kl in [(16, 4), (64, 4)]:
-        costs = rng.integers(0, 16, size=(kc * kc, kl, kl)).astype(np.float32)
+def bench_scale_sweep(
+    backends: List[str], rows: List[str], records: List[Dict], repeats: int = 3
+) -> None:
+    """Batched fan-out sweep: every backend x batch size x node size."""
+    rng = np.random.default_rng(1)
+    for k in NODE_SIZES:
+        for batch in BATCH_SIZES + SCALE_BATCH_SIZES:
+            costs = rng.integers(0, 16, size=(batch, k, k)).astype(np.float64)
+            for backend in backends:
+                if backend == "smallperm" and k > 6:
+                    continue
+                # warm-up outside the timed region (jit compile for the
+                # auction backends, BLAS init for scipy)
+                solve_lap_batched(costs, backend=backend)
+                best = float("inf")
+                for _ in range(repeats):
+                    t0 = time.perf_counter()
+                    res = solve_lap_batched(costs, backend=backend)
+                    best = min(best, time.perf_counter() - t0)
+                gpus = batch * k  # one GPU per LAP row at k GPUs/node
+                rows.append(
+                    csv_row(
+                        f"matching/sweep_{backend}_b{batch}_k{k}",
+                        best * 1e6,
+                        f"batch={batch};k={k};per_instance_us={best / batch * 1e6:.1f}",
+                    )
+                )
+                records.append(
+                    {
+                        "bench": "scale_sweep",
+                        "backend": backend,
+                        "batch": batch,
+                        "k": k,
+                        "gpus_equivalent": gpus,
+                        "time_s": best,
+                        "per_instance_us": best / batch * 1e6,
+                        "fallbacks": int(res.used_fallback.sum()),
+                    }
+                )
 
-        def scipy_loop():
-            for i in range(kc * kc):
-                solve_lap(costs[i], backend="scipy")
 
-        _, t_loop = timed(scipy_loop)
-        benefits = jnp.asarray(-costs)
-        res = auction_lap_batched(benefits)  # warm up / compile
-        res.col_of.block_until_ready()
-        _, t_batch = timed(
-            lambda: auction_lap_batched(benefits).col_of.block_until_ready()
-        )
-        rows.append(
-            csv_row(
-                f"matching/alg2_fanout_scipy_kc{kc}",
-                t_loop * 1e6,
-                f"pairs={kc * kc}",
-            )
-        )
-        rows.append(
-            csv_row(
-                f"matching/alg2_fanout_auction_kc{kc}",
-                t_batch * 1e6,
-                f"pairs={kc * kc};speedup_x={t_loop / t_batch:.2f}",
-            )
-        )
+def main(argv=None, print_csv: bool = True) -> List[str]:
+    """``argv``: CLI arg list; ``None`` when driven programmatically by
+    ``benchmarks/run.py`` — that path drops the ``auction_kernel`` backend
+    off-TPU (interpret mode adds minutes; its timings are an explicit-CLI
+    feature via ``--backend all`` / ``--backend auction_kernel``)."""
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--backend",
+        default="all",
+        choices=SWEEP_BACKENDS + ["all"],
+        help="engine backend to sweep ('all' = every registered backend)",
+    )
+    parser.add_argument(
+        "--json",
+        default="matching_microbench.json",
+        help="path of the JSON perf record (written at the end of the run)",
+    )
+    parser.add_argument("--repeats", type=int, default=3)
+    from_cli = argv is not None
+    args = parser.parse_args(list(argv) if from_cli else [])
+    backends = SWEEP_BACKENDS if args.backend == "all" else [args.backend]
+    if not from_cli:
+        import jax
+
+        if jax.default_backend() != "tpu":
+            backends = [b for b in backends if b != "auction_kernel"]
+
+    rows: List[str] = []
+    records: List[Dict] = []
+    bench_single(rows, records)
+    bench_scale_sweep(backends, rows, records, repeats=args.repeats)
+
+    report = {
+        "benchmark": "matching_microbench",
+        "backends": backends,
+        "batch_sizes": BATCH_SIZES + SCALE_BATCH_SIZES,
+        "node_sizes": NODE_SIZES,
+        "records": records,
+    }
+    with open(args.json, "w") as f:
+        json.dump(report, f, indent=2)
+    rows.append(csv_row("matching/json_report", 0.0, f"path={args.json}"))
+
     if print_csv:
         for r in rows:
             print(r)
@@ -66,4 +142,6 @@ def main(print_csv: bool = True) -> List[str]:
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(sys.argv[1:])

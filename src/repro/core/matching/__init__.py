@@ -1,25 +1,53 @@
 """Assignment (linear-sum-assignment / LAP) solvers used by Tesserae.
 
-Three interchangeable backends:
+The public entry points are the **unified batched matching engine**
+(:mod:`repro.core.matching.engine`):
 
-* :func:`repro.core.matching.hungarian.linear_sum_assignment` — our own
-  numpy-vectorised Jonker-Volgenant-style shortest-augmenting-path solver
-  (no scipy dependency), used for small/medium problems and as a second
-  oracle in tests.
-* ``scipy.optimize.linear_sum_assignment`` — the backend the paper itself
-  uses (§5 "We use Scipy to generate the migration plan ... and solve the
-  weighted bipartite graph matching problem").  Default for large n.
-* :func:`repro.core.matching.auction.auction_lap` — a jit/vmap-able JAX
-  auction-algorithm solver (beyond-paper): Algorithm 2 solves k_c**2
-  independent node-level LAPs, which we batch with ``jax.vmap``.
+* :func:`solve_lap_batched` — one call for a whole batch of (rectangular,
+  masked, forbidden-edge) LAP instances, dispatched through a backend
+  registry (``scipy`` / ``numpy`` / ``smallperm`` / ``auction`` /
+  ``auction_kernel`` / ``auto``) with per-instance convergence tracking
+  and a scipy fallback for non-converged auction instances.
+* :func:`solve_lap` — single-instance wrapper with the same backend knob.
+* :func:`register_backend` / :func:`available_backends` — plug-in points.
+
+Underlying solvers (importable directly when needed):
+
+* :mod:`repro.core.matching.hungarian` — numpy-vectorised Jonker-Volgenant
+  shortest-augmenting-path solver (no scipy dependency) plus the
+  scipy dispatcher the paper itself uses (§5 "We use Scipy to ... solve
+  the weighted bipartite graph matching problem").
+* :mod:`repro.core.matching.auction` — jit/vmap-able JAX auction solver
+  (beyond-paper): Algorithm 2 solves k_c**2 independent node-level LAPs,
+  which batch into ONE XLA program, with the bid step optionally lowered
+  to the Pallas ``lap_bid`` kernel.
 """
 
-from repro.core.matching.hungarian import linear_sum_assignment, solve_lap
-from repro.core.matching.auction import auction_lap, auction_lap_batched
+from repro.core.matching.auction import (
+    auction_assignment,
+    auction_lap,
+    auction_lap_batched,
+    masked_square_benefit,
+)
+from repro.core.matching.engine import (
+    BatchedMatchResult,
+    available_backends,
+    register_backend,
+    solve_lap,
+    solve_lap_batched,
+)
+from repro.core.matching.hungarian import assignment_cost, linear_sum_assignment
 
 __all__ = [
-    "linear_sum_assignment",
-    "solve_lap",
+    "BatchedMatchResult",
+    "assignment_cost",
+    "auction_assignment",
     "auction_lap",
     "auction_lap_batched",
+    "available_backends",
+    "linear_sum_assignment",
+    "masked_square_benefit",
+    "register_backend",
+    "solve_lap",
+    "solve_lap_batched",
 ]

@@ -31,6 +31,17 @@ import numpy as np
 
 _NEG = -1e18
 
+#: Instance size at which the Pallas bid kernel becomes the default bid
+#: path on TPU (one (n, n) VMEM-tiled top-2 sweep per round beats the XLA
+#: argmax/one-hot lowering).  Off-TPU the kernel only runs in interpret
+#: mode, which is strictly slower than jnp — so auto mode never picks it
+#: there; tests opt in explicitly with ``use_kernel=True``.
+KERNEL_MIN_N = 256
+
+
+def _auto_use_kernel(n: int) -> bool:
+    return n >= KERNEL_MIN_N and jax.default_backend() == "tpu"
+
 
 class AuctionResult(NamedTuple):
     # col_of[i]  = object assigned to person (row) i
@@ -54,26 +65,40 @@ def _top2(vals: jax.Array):
     return best_v, best_j, second_v
 
 
-@functools.partial(jax.jit, static_argnames=("max_iters", "use_kernel"))
 def auction_lap(
     benefit: jax.Array,
     eps_min: float | jax.Array | None = None,
     max_iters: int = 20_000,
-    use_kernel: bool = False,
+    use_kernel: bool | None = None,
 ) -> AuctionResult:
     """Maximise ``sum_i benefit[i, col_of[i]]`` over permutations.
 
     Args:
       benefit: (n, n) float matrix.  Use ``-cost`` to minimise.  Forbidden
         edges should be a large negative number (not -inf, to keep bids
-        finite).
+        finite) — see :func:`masked_square_benefit` for the embedding that
+        handles rectangular / masked instances.
       eps_min: final epsilon of the scaling schedule.  Defaults to
-        ``1 / (n + 1)`` scaled by the benefit range — exact for integer
-        benefits.
+        ``1 / (n + 1)`` — exact for integer benefits (only the STARTING
+        epsilon is scaled by the benefit range).
       max_iters: safety cap on total bid rounds.
-      use_kernel: route the bid top-2 through the Pallas kernel
-        (interpret mode on CPU).
+      use_kernel: route the bid top-2 through the Pallas kernel.  ``None``
+        (default) picks the kernel automatically for instances with
+        ``n >= KERNEL_MIN_N`` on TPU; off-TPU the kernel runs in interpret
+        mode and is only used when explicitly requested.
     """
+    if use_kernel is None:
+        use_kernel = _auto_use_kernel(int(benefit.shape[-1]))
+    return _auction_lap_jit(benefit, eps_min, max_iters=max_iters, use_kernel=use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "use_kernel"))
+def _auction_lap_jit(
+    benefit: jax.Array,
+    eps_min: float | jax.Array | None = None,
+    max_iters: int = 20_000,
+    use_kernel: bool = False,
+) -> AuctionResult:
     benefit = jnp.asarray(benefit, dtype=jnp.float32)
     n = benefit.shape[-1]
     if benefit.shape != (n, n):
@@ -145,7 +170,11 @@ def auction_lap(
         jnp.asarray(False),
     )
     prices, col_of, eps, iters, _ = jax.lax.while_loop(cond, body, init)
-    converged = jnp.all(col_of >= 0)
+    # Converged = completed the FULL epsilon schedule with everyone
+    # assigned.  All-assigned alone is not enough: an instance cut off by
+    # ``max_iters`` mid-scaling can hold a complete but far-from-optimal
+    # assignment (eps still large) — the engine must know to re-solve it.
+    converged = jnp.all(col_of >= 0) & (eps <= eps_min * (1 + 1e-6))
     row_of = _row_of_from_col_of(col_of, n)
     return AuctionResult(col_of, row_of, prices, iters, converged)
 
@@ -168,31 +197,111 @@ def _col_of_from_row_of(row_of: jax.Array, n: int) -> jax.Array:
     )
 
 
-@functools.partial(jax.jit, static_argnames=("max_iters",))
-def auction_lap_batched(benefits: jax.Array, max_iters: int = 20_000) -> AuctionResult:
+def auction_lap_batched(
+    benefits: jax.Array,
+    max_iters: int = 20_000,
+    eps_min: float | jax.Array | None = None,
+    use_kernel: bool | None = None,
+) -> AuctionResult:
     """vmap'd auction over a batch of (n, n) benefit matrices.
 
     This is the Algorithm-2 fan-out: all k_c^2 node-pair LAPs solve in one
-    XLA program instead of k_c^2 sequential scipy calls.
+    XLA program instead of k_c^2 sequential scipy calls.  Every result
+    field gains a leading batch axis — in particular ``converged`` is
+    per-instance, which the matching engine uses to re-solve stragglers
+    with scipy.  With ``use_kernel`` the bid top-2 lowers to ONE batched
+    Pallas call per round: ``vmap``'s pallas batching rule lifts the 2-D
+    kernel by prepending a batch grid axis (equivalent to the explicit
+    ``lap_bid_pallas_batched``, which parity tests pin against it).
     """
-    return jax.vmap(lambda b: auction_lap(b, max_iters=max_iters))(benefits)
+    if use_kernel is None:
+        use_kernel = _auto_use_kernel(int(benefits.shape[-1]))
+    return _auction_lap_batched_jit(
+        benefits, eps_min, max_iters=max_iters, use_kernel=use_kernel
+    )
 
 
-def auction_assignment(cost: np.ndarray, maximize: bool = False):
-    """Numpy-friendly wrapper returning (row_ind, col_ind) like scipy."""
+@functools.partial(jax.jit, static_argnames=("max_iters", "use_kernel"))
+def _auction_lap_batched_jit(
+    benefits: jax.Array,
+    eps_min=None,
+    max_iters: int = 20_000,
+    use_kernel: bool = False,
+) -> AuctionResult:
+    return jax.vmap(
+        lambda b: _auction_lap_jit(
+            b, eps_min, max_iters=max_iters, use_kernel=use_kernel
+        )
+    )(benefits)
+
+
+def masked_square_benefit(
+    cost: np.ndarray,
+    maximize: bool = False,
+    row_mask: np.ndarray | None = None,
+    col_mask: np.ndarray | None = None,
+) -> np.ndarray:
+    """Embed (possibly rectangular / masked / forbidden-edge) cost instances
+    into square benefit matrices the auction can solve.
+
+    ``cost``: (..., n, m).  ``row_mask``/``col_mask``: (..., n) / (..., m)
+    bool, True = real.  Non-finite entries are forbidden edges.
+
+    Padding / forbidden cells get a constant benefit low enough that no
+    optimal assignment ever trades a (real, real) pair for a padded one —
+    i.e. *padding never wins*: the square optimum restricted to real rows
+    x real cols is the rectangular optimum.  The pad must scale with the
+    instance SIZE, not just the value span: displacing a pad edge can
+    rearrange every real edge of the assignment (an augmenting cycle), and
+    each rearranged edge can swing the total by up to 2*span — a constant
+    pad of -(2*span+1) provably fails on mixed-sign costs (e.g. minimise
+    [[2, inf], [-2, 2]]: the forbidden cell at -(2*span+1) beats the
+    complete finite matching).  Callers drop pairs whose original entry is
+    padded or non-finite.
+    """
+    cost = np.asarray(cost, dtype=np.float64)
+    n, m = cost.shape[-2], cost.shape[-1]
+    size = max(n, m)
+    benefit = cost if maximize else -cost
+    finite = np.isfinite(benefit)
+    span = float(np.abs(benefit[finite]).max()) if finite.any() else 0.0
+    pad = -(2.0 * size * span + 1.0)
+    sq = np.full((*cost.shape[:-2], size, size), pad, dtype=np.float64)
+    sq[..., :n, :m] = np.where(finite, benefit, pad)
+    if row_mask is not None:
+        rm = np.asarray(row_mask, bool)[..., :, None]  # (..., n, 1)
+        sq[..., :n, :] = np.where(rm, sq[..., :n, :], pad)
+    if col_mask is not None:
+        cm = np.asarray(col_mask, bool)[..., None, :]  # (..., 1, m)
+        sq[..., :, :m] = np.where(cm, sq[..., :, :m], pad)
+    return sq
+
+
+def auction_assignment(
+    cost: np.ndarray,
+    maximize: bool = False,
+    row_mask: np.ndarray | None = None,
+    col_mask: np.ndarray | None = None,
+    use_kernel: bool | None = None,
+):
+    """Numpy-friendly wrapper returning (row_ind, col_ind) like scipy.
+
+    Handles rectangular instances, ``row_mask``/``col_mask`` padding, and
+    non-finite (forbidden) entries via the square embedding of
+    :func:`masked_square_benefit`; pairs landing on padded / forbidden
+    cells are dropped from the returned assignment.
+    """
     cost = np.asarray(cost, dtype=np.float64)
     n, m = cost.shape
-    if n != m:
-        # Pad to square with worst-case entries so padding never wins.
-        size = max(n, m)
-        pad_val = cost[np.isfinite(cost)].max() + 1.0 if np.isfinite(cost).any() else 0.0
-        sq = np.full((size, size), pad_val, dtype=np.float64)
-        sq[:n, :m] = cost
-        row, col = auction_assignment(sq, maximize=maximize)
-        keep = (row < n) & (col < m)
-        return row[keep], col[keep]
-    benefit = cost if maximize else -cost
-    res = auction_lap(jnp.asarray(benefit))
+    sq = masked_square_benefit(cost, maximize, row_mask, col_mask)
+    res = auction_lap(jnp.asarray(sq), use_kernel=use_kernel)
     col_of = np.asarray(res.col_of)
-    row_ind = np.arange(n)
-    return row_ind, col_of
+    row_ind = np.arange(sq.shape[0])
+    ok = (row_ind < n) & (col_of < m) & (col_of >= 0)
+    if row_mask is not None:
+        ok &= np.asarray(row_mask, bool)[np.minimum(row_ind, n - 1)]
+    if col_mask is not None:
+        ok &= np.asarray(col_mask, bool)[np.minimum(col_of, m - 1)]
+    row_ind, col_ind = row_ind[ok], col_of[ok]
+    real = np.isfinite(cost[row_ind, col_ind])
+    return row_ind[real], col_ind[real]

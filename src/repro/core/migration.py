@@ -40,7 +40,8 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core.cluster import EMPTY, MAX_PACK, PlacementPlan, count_migrations
-from repro.core.matching.hungarian import solve_lap
+from repro.core.matching import solve_lap, solve_lap_batched
+from repro.core.matching.engine import APPROX_BACKENDS
 
 
 # --------------------------------------------------------------------------- #
@@ -80,27 +81,18 @@ def pairwise_migration_cost(
     return cost_out + cost_in
 
 
-def solve_small_laps(costs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-    """Exact batched LAP for tiny square instances by permutation search.
+def _cost_scale(num_gpus_of: Dict[int, int], backend: str) -> float:
+    """Quantisation scale for the approximate (auction) backends.
 
-    ``costs``: (B, k, k) with k <= 6 (k! <= 720).  Returns
-    ``(best_cost (B,), row_to_col (B, k))``.  This replaces the k_c^2
-    sequential Hungarian calls in Algorithm 2's node-pair fan-out with one
-    vectorised numpy pass — the node size k_l is 4-8 in every evaluated
-    cluster, where brute force beats O(k^3) with Python overhead by ~100x
-    (EXPERIMENTS.md §Perf, scheduler iteration 2).
+    Migration costs are multiples of ``1/(2*num_gpus)``; multiplying by the
+    lcm of the ``2*g`` values makes every cost an integer, for which the
+    auction's final epsilon guarantees exact optimality.  Exact backends
+    need no scaling.
     """
-    import itertools
-
-    b, k, _ = costs.shape
-    if k > 6:
-        raise ValueError("solve_small_laps: k must be <= 6")
-    perms = np.array(list(itertools.permutations(range(k))), dtype=np.int64)
-    # total[b, p] = sum_i costs[b, i, perms[p, i]]
-    picked = costs[:, np.arange(k)[None, :], perms]  # (B, P, k)
-    totals = picked.sum(axis=-1)  # (B, P)
-    best = np.argmin(totals, axis=-1)
-    return totals[np.arange(b), best], perms[best]
+    if backend not in APPROX_BACKENDS:
+        return 1.0
+    gs = sorted(set(num_gpus_of.values())) or [1]
+    return float(np.lcm.reduce([2 * g for g in gs]))
 
 
 def node_level_matching(
@@ -116,7 +108,9 @@ def node_level_matching(
     """
     weights = _weight_lookup(num_gpus_of)
     cost = pairwise_migration_cost(node_slots_i, node_slots_j, weights)
-    rows, cols = solve_lap(cost, backend=backend)
+    rows, cols = solve_lap(
+        cost * _cost_scale(num_gpus_of, backend), backend=backend
+    )
     assign = np.empty(cost.shape[0], dtype=np.int64)
     assign[cols] = rows
     return float(cost[rows, cols].sum()), assign
@@ -150,7 +144,12 @@ def plan_migration(
 ) -> MigrationResult:
     """Compute the relabelling that minimises migrations, then apply it to
     the *full* new plan (jobs unique to one round are excluded from the cost
-    computation — Algorithm 2 line 2 — but follow their logical GPU)."""
+    computation — Algorithm 2 line 2 — but follow their logical GPU).
+
+    ``backend`` is any engine backend (``auto`` / ``numpy`` / ``scipy`` /
+    ``auction`` / ``auction_kernel``) — one knob selects the solver for
+    both the node-pair fan-out and the final node-level match.
+    """
     t0 = time.perf_counter()
     cluster = prev.cluster
     if algorithm == "none":
@@ -169,7 +168,9 @@ def plan_migration(
         flat_i = pi.slots.reshape(-1, MAX_PACK)
         flat_j = pj.slots.reshape(-1, MAX_PACK)
         cost = pairwise_migration_cost(flat_i, flat_j, weights)
-        rows, cols = solve_lap(cost, backend=backend)
+        rows, cols = solve_lap(
+            cost * _cost_scale(num_gpus_of, backend), backend=backend
+        )
         gpu_of_logical = np.empty(cluster.num_gpus, dtype=np.int64)
         gpu_of_logical[cols] = rows
         phys_slots = np.full_like(new_logical.slots, EMPTY)
@@ -192,27 +193,24 @@ def plan_migration(
         raise ValueError(f"unknown migration algorithm {algorithm!r}")
 
     # --- Algorithm 2: node-pair costs via vectorised Algorithm 3 --------- #
+    # The k_c^2 independent k_l x k_l LAPs solve as ONE batched engine call;
+    # the backend knob picks smallperm/scipy ("auto") or the JAX auction
+    # ("auction"/"auction_kernel", quantised to integers so the final
+    # epsilon guarantees per-instance optimality).
     kc = cluster.num_nodes
     kl = cluster.gpus_per_node
     # (kc, kc, kl, kl): cost matrix for every (node_i, node_j) pair.
     all_costs = pairwise_migration_cost(
         pi.slots[:, None, :, :], pj.slots[None, :, :, :], weights
     )
-    node_cost = np.empty((kc, kc), dtype=np.float64)
-    gpu_assign = np.empty((kc, kc, kl), dtype=np.int64)  # [k, l, v] -> u
-    if kl <= 6:
-        flat = all_costs.reshape(kc * kc, kl, kl)
-        best_cost, row_to_col = solve_small_laps(flat)
-        node_cost = best_cost.reshape(kc, kc)
-        # row_to_col[b, u] = v  ->  gpu_assign[.., v] = u
-        gpu_assign = np.argsort(row_to_col, axis=-1).reshape(kc, kc, kl)
-    else:
-        for k in range(kc):
-            for l in range(kc):
-                rows, cols = solve_lap(all_costs[k, l], backend=backend)
-                node_cost[k, l] = all_costs[k, l][rows, cols].sum()
-                gpu_assign[k, l][cols] = rows
-    n_rows, n_cols = solve_lap(node_cost, backend=backend)
+    scale = _cost_scale(num_gpus_of, backend)
+    res = solve_lap_batched(
+        all_costs.reshape(kc * kc, kl, kl) * scale, backend=backend
+    )
+    node_cost = (res.total_cost / scale).reshape(kc, kc)
+    # res.col_of[b, u] = v  ->  gpu_assign[.., v] = u
+    gpu_assign = np.argsort(res.col_of, axis=-1).reshape(kc, kc, kl)
+    n_rows, n_cols = solve_lap(node_cost * scale, backend=backend)
     node_assignment = np.empty(kc, dtype=np.int64)
     node_assignment[n_cols] = n_rows  # logical node l -> physical node k
 
@@ -238,56 +236,22 @@ def plan_migration_batched_auction(
     prev: PlacementPlan,
     new_logical: PlacementPlan,
     num_gpus_of: Dict[int, int],
+    use_kernel: bool = False,
 ) -> MigrationResult:
     """Beyond-paper: Algorithm 2 with the k_c^2 node-pair LAPs solved as ONE
-    batched JAX auction (``vmap``) instead of k_c^2 sequential Hungarian
-    calls.  Exactness: costs are multiples of 1/(2*max_gpus); we scale to
-    integers so the final epsilon guarantees optimality per instance.
+    batched JAX auction instead of k_c^2 sequential Hungarian calls.
+
+    Now a thin wrapper over :func:`plan_migration` with the engine's
+    ``auction`` backend (``auction_kernel`` routes the bid top-2 through
+    the Pallas kernel).  Exactness: costs are multiples of
+    ``1/(2*num_gpus)`` and are scaled to integers before solving, so the
+    auction's final epsilon guarantees optimality per instance.
     """
-    import jax.numpy as jnp
-
-    from repro.core.matching.auction import auction_lap_batched
-
-    t0 = time.perf_counter()
-    cluster = prev.cluster
-    common = prev.job_ids() & new_logical.job_ids()
-    pi = prev.restricted_to(common)
-    pj = new_logical.restricted_to(common)
-    weights = _weight_lookup(num_gpus_of)
-    kc, kl = cluster.num_nodes, cluster.gpus_per_node
-
-    all_costs = pairwise_migration_cost(
-        pi.slots[:, None, :, :], pj.slots[None, :, :, :], weights
-    )  # (kc, kc, kl, kl)
-    # Scale: costs are multiples of 1/(2*g), g in {1..max}; lcm scale -> int.
-    gs = sorted(set(num_gpus_of.values())) or [1]
-    scale = float(np.lcm.reduce([2 * g for g in gs]))
-    benefits = jnp.asarray(-(all_costs * scale).reshape(kc * kc, kl, kl))
-    res = auction_lap_batched(benefits)
-    col_of = np.asarray(res.col_of).reshape(kc, kc, kl)  # row u -> col v
-    # node_cost[k, l] = assignment cost of pair (k, l)
-    node_cost = (
-        np.take_along_axis(all_costs, col_of[..., None], axis=-1)
-        .squeeze(-1)
-        .sum(axis=-1)
+    res = plan_migration(
+        prev,
+        new_logical,
+        num_gpus_of,
+        algorithm="node",
+        backend="auction_kernel" if use_kernel else "auction",
     )
-    n_rows, n_cols = solve_lap(node_cost)
-    node_assignment = np.empty(kc, dtype=np.int64)
-    node_assignment[n_cols] = n_rows
-
-    phys_slots = np.full_like(new_logical.slots, EMPTY)
-    for l in range(kc):
-        k = node_assignment[l]
-        for u in range(kl):
-            v = col_of[k, l, u]
-            phys_slots[k, u] = new_logical.slots[l, v]
-    phys = PlacementPlan(cluster, phys_slots)
-    n_mig = count_migrations(prev, phys)
-    return MigrationResult(
-        phys,
-        n_mig,
-        float(node_cost[n_rows, n_cols].sum()),
-        node_assignment,
-        time.perf_counter() - t0,
-        "node-auction",
-    )
+    return dataclasses.replace(res, algorithm="node-auction")

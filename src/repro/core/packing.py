@@ -25,7 +25,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.jobs import JobState
-from repro.core.matching.hungarian import solve_lap
+from repro.core.matching import solve_lap
 from repro.core.profiler import ThroughputProfile
 
 
@@ -97,7 +97,14 @@ def pack_jobs(
     backend: str = "auto",
     packed_ok=None,
 ) -> PackingResult:
-    """Algorithm 4."""
+    """Algorithm 4.
+
+    ``backend`` is any matching-engine backend; the rectangular max-weight
+    matching dispatches through :func:`repro.core.matching.solve_lap`, so
+    the same config knob that batches migration LAPs also selects the
+    packing solver (``auction`` is near-optimal within ``n*eps`` on these
+    float throughput weights; the default ``auto`` stays exact).
+    """
     t0 = time.perf_counter()
     if not placed or not pending:
         return PackingResult({}, {}, 0.0, time.perf_counter() - t0, 0)

@@ -53,6 +53,9 @@ class TesseraeScheduler:
         enable_packing: bool = True,
         optimize_strategy: bool = True,
         migration_algorithm: str = "node",  # node | flat | none
+        # matching-engine backend for packing + migration LAPs:
+        # auto | numpy | scipy | auction | auction_kernel (one knob,
+        # dispatched through repro.core.matching.solve_lap[_batched])
         lap_backend: str = "auto",
         packed_ok: Optional[Callable[[JobState, JobState], bool]] = None,
     ):

@@ -30,6 +30,45 @@ NEG_INF = -1e30
 BLOCK_ROWS = 128
 BLOCK_COLS = 512
 
+# f32 min tile is (8, 128) (sublane x lane); small instances — the k_l x k_l
+# node-pair LAPs are 4x4-8x8 — shrink to one min tile instead of padding to
+# the full (128, 512) block (a 4096x compute blowup per instance).
+MIN_BLOCK_ROWS = 8
+MIN_BLOCK_COLS = 128
+
+
+def _block_dims(n: int, m: int) -> tuple[int, int]:
+    """Largest-useful (block_rows, block_cols) for an (n, m) instance:
+    tile-aligned, never larger than the default blocks, never smaller than
+    the f32 min tile."""
+    br = min(BLOCK_ROWS, max(MIN_BLOCK_ROWS, -(-n // MIN_BLOCK_ROWS) * MIN_BLOCK_ROWS))
+    bc = min(BLOCK_COLS, max(MIN_BLOCK_COLS, -(-m // MIN_BLOCK_COLS) * MIN_BLOCK_COLS))
+    return br, bc
+
+
+def _tile_top2(vals, col_offset):
+    """(best, arg, second) of one (BR, BC) tile, args in global columns."""
+    col_ids = jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1) + col_offset
+    tile_best = jnp.max(vals, axis=1, keepdims=True)  # (BR, 1)
+    tile_arg = (jnp.argmax(vals, axis=1) + col_offset).astype(jnp.int32)[:, None]
+    masked = jnp.where(col_ids == tile_arg, NEG_INF, vals)
+    tile_second = jnp.max(masked, axis=1, keepdims=True)
+    return tile_best, tile_arg, tile_second
+
+
+def _merge_top2(run, tile):
+    """Merge two (top1, arg, top2) summaries; the RUNNING (earlier-tile)
+    summary wins ties so the argmax matches jnp.argmax's
+    first-occurrence rule."""
+    run_best, run_arg, run_second = run
+    tile_best, tile_arg, tile_second = tile
+    new_best = jnp.where(tile_best > run_best, tile_best, run_best)
+    new_arg = jnp.where(tile_best > run_best, tile_arg, run_arg)
+    # second = max of the loser's best and both seconds
+    loser_best = jnp.where(tile_best > run_best, run_best, tile_best)
+    new_second = jnp.maximum(loser_best, jnp.maximum(run_second, tile_second))
+    return new_best, new_arg, new_second
+
 
 def _bid_kernel(
     a_ref,      # (BR, BC) benefit tile
@@ -41,38 +80,89 @@ def _bid_kernel(
     block_cols: int,
 ):
     ci = pl.program_id(1)
-    ncols = pl.num_programs(1)
-
-    vals = a_ref[...] - p_ref[...]  # (BR, BC)
-    col_ids = jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1) + ci * block_cols
-
-    tile_best = jnp.max(vals, axis=1, keepdims=True)  # (BR, 1)
-    tile_arg_local = jnp.argmax(vals, axis=1)
-    tile_arg = (tile_arg_local + ci * block_cols).astype(jnp.int32)[:, None]
-    masked = jnp.where(col_ids == tile_arg, NEG_INF, vals)
-    tile_second = jnp.max(masked, axis=1, keepdims=True)
+    summary = _tile_top2(a_ref[...] - p_ref[...], ci * block_cols)
 
     @pl.when(ci == 0)
     def _init():
-        best_v_ref[...] = tile_best
-        best_j_ref[...] = tile_arg
-        second_ref[...] = tile_second
+        best_v_ref[...], best_j_ref[...], second_ref[...] = summary
 
     @pl.when(ci > 0)
     def _accum():
-        run_best = best_v_ref[...]
-        run_arg = best_j_ref[...]
-        run_second = second_ref[...]
-        # merge two (top1, top2) summaries; earlier tile wins ties so the
-        # argmax matches jnp.argmax's first-occurrence rule.
-        new_best = jnp.where(tile_best > run_best, tile_best, run_best)
-        new_arg = jnp.where(tile_best > run_best, tile_arg, run_arg)
-        # second = max of the losers' best and both seconds
-        loser_best = jnp.where(tile_best > run_best, run_best, tile_best)
-        new_second = jnp.maximum(loser_best, jnp.maximum(run_second, tile_second))
-        best_v_ref[...] = new_best
-        best_j_ref[...] = new_arg
-        second_ref[...] = new_second
+        run = (best_v_ref[...], best_j_ref[...], second_ref[...])
+        best_v_ref[...], best_j_ref[...], second_ref[...] = _merge_top2(
+            run, summary
+        )
+
+
+def _bid_kernel_batched(
+    a_ref,      # (1, BR, BC) benefit tile of one batch instance
+    p_ref,      # (1, 1, BC) price tile
+    best_v_ref,  # (1, BR, 1) out
+    best_j_ref,  # (1, BR, 1) out int32
+    second_ref,  # (1, BR, 1) out
+    *,
+    block_cols: int,
+):
+    """Batched variant of :func:`_bid_kernel` (same tile summary + merge).
+
+    The grid is (batch, rows/BLOCK_ROWS, cols/BLOCK_COLS) with the column
+    axis minor; the leading batch axis maps one grid step per instance so a
+    single ``pallas_call`` covers a whole instance stack.  This is the
+    explicit counterpart of what ``jax.vmap`` over :func:`lap_bid_pallas`
+    produces via the lifted pallas batching rule (the path the batched
+    auction actually takes); it exists for direct 3-D callers and as a
+    parity oracle for that lifted path.
+    """
+    ci = pl.program_id(2)
+    summary = _tile_top2(a_ref[0] - p_ref[0], ci * block_cols)
+
+    @pl.when(ci == 0)
+    def _init():
+        best_v_ref[0], best_j_ref[0], second_ref[0] = summary
+
+    @pl.when(ci > 0)
+    def _accum():
+        run = (best_v_ref[0], best_j_ref[0], second_ref[0])
+        best_v_ref[0], best_j_ref[0], second_ref[0] = _merge_top2(run, summary)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lap_bid_pallas_batched(a: jax.Array, prices: jax.Array, interpret: bool = True):
+    """Batched bid step: ``a`` (B, n, m), ``prices`` (B, m).
+
+    Returns (best_v, best_j, second_v), each (B, n).  Same padding contract
+    as :func:`lap_bid_pallas`; the batch axis becomes the leading (major)
+    grid dimension, so column tiles still run sequentially per instance and
+    the running top-2 carry in the output refs stays per-instance.
+    """
+    b, n, m = a.shape
+    br, bc = _block_dims(n, m)
+    n_pad = (n + br - 1) // br * br
+    m_pad = (m + bc - 1) // bc * bc
+    a_p = jnp.full((b, n_pad, m_pad), NEG_INF, a.dtype).at[:, :n, :m].set(a)
+    p_p = jnp.zeros((b, 1, m_pad), a.dtype).at[:, 0, :m].set(prices)
+
+    grid = (b, n_pad // br, m_pad // bc)
+    best_v, best_j, second = pl.pallas_call(
+        functools.partial(_bid_kernel_batched, block_cols=bc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, br, bc), lambda bi, ri, ci: (bi, ri, ci)),
+            pl.BlockSpec((1, 1, bc), lambda bi, ri, ci: (bi, 0, ci)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, br, 1), lambda bi, ri, ci: (bi, ri, 0)),
+            pl.BlockSpec((1, br, 1), lambda bi, ri, ci: (bi, ri, 0)),
+            pl.BlockSpec((1, br, 1), lambda bi, ri, ci: (bi, ri, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_pad, 1), a.dtype),
+            jax.ShapeDtypeStruct((b, n_pad, 1), jnp.int32),
+            jax.ShapeDtypeStruct((b, n_pad, 1), a.dtype),
+        ],
+        interpret=interpret,
+    )(a_p, p_p)
+    return best_v[:, :n, 0], best_j[:, :n, 0], second[:, :n, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -83,11 +173,12 @@ def lap_bid_pallas(a: jax.Array, prices: jax.Array, interpret: bool = True):
     never wins; callers guarantee m >= 2 real columns).
     """
     n, m = a.shape
-    br, bc = BLOCK_ROWS, BLOCK_COLS
+    br, bc = _block_dims(n, m)
     n_pad = (n + br - 1) // br * br
     m_pad = (m + bc - 1) // bc * bc
     a_p = jnp.full((n_pad, m_pad), NEG_INF, a.dtype).at[:n, :m].set(a)
-    # padded columns get +inf price so (a - p) stays NEG-ish even if a=0
+    # padded columns are guarded by the NEG_INF fill of `a_p` alone; their
+    # price entries are zero and contribute nothing.
     p_p = jnp.zeros((1, m_pad), a.dtype).at[0, :m].set(prices)
 
     grid = (n_pad // br, m_pad // bc)

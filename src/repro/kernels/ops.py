@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.lap_bid import lap_bid_pallas
+from repro.kernels.lap_bid import lap_bid_pallas, lap_bid_pallas_batched
 from repro.kernels.migration_cost import migration_cost_pallas
 
 
@@ -25,14 +25,27 @@ def lap_bid_top2(vals: jax.Array):
     """Auction bid step on a precomputed (benefit - price) matrix.
 
     Drop-in replacement for ``ref.lap_bid_top2`` (used by
-    ``auction_lap(use_kernel=True)``).
+    ``auction_lap(use_kernel=True)``).  Accepts (n, m) or an explicit
+    (B, n, m) stack, which routes to :func:`lap_bid_pallas_batched`.
+    NOTE: the auction fan-out does NOT reach the 3-D branch — under
+    ``jax.vmap`` each instance is a 2-D tracer and vmap's pallas batching
+    rule lifts the 2-D kernel into one batched ``pallas_call`` itself;
+    the explicit branch serves direct 3-D callers and parity tests.
     """
+    if vals.ndim == 3:
+        return lap_bid_pallas_batched(
+            vals,
+            jnp.zeros(vals.shape[::2], vals.dtype),
+            interpret=_default_interpret(),
+        )
     return lap_bid_pallas(
         vals, jnp.zeros((vals.shape[-1],), vals.dtype), interpret=_default_interpret()
     )
 
 
 def lap_bid(a: jax.Array, prices: jax.Array):
+    if a.ndim == 3:
+        return lap_bid_pallas_batched(a, prices, interpret=_default_interpret())
     return lap_bid_pallas(a, prices, interpret=_default_interpret())
 
 

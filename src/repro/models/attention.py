@@ -266,13 +266,21 @@ def mla_decode_step(
     ckv = constrain(ckv, "batch", "cache_seq", None)
     valid = jnp.minimum(pos + 1, cache_len)
 
-    # Absorbed attention: score = q_nope^T (W_b^K ckv_t) + q_rope^T k_rope_t
-    wkb_k = p["wkv_b"][..., :qn]  # (r, H, qn)
-    q_latent = jnp.einsum("bshe,rhe->bshr", q_nope, wkb_k)  # (B,1,H,r)
-    logits = jnp.einsum("bshr,btr->bhst", q_latent, ckv)
-    logits = logits + jnp.einsum("bshe,bte->bhst", q_rope, k_rope)
+    # Absorbed attention: score = q_nope^T (W_b^K ckv_t) + q_rope^T k_rope_t.
+    # The whole score path runs in f32: the forward pass casts q/k to f32
+    # before its logits einsum (see sdpa), and letting the absorbed
+    # intermediates round to bf16 loses prefill parity (~1% of logits move
+    # past rtol=0.05 through the softmax).
+    wkb_k = p["wkv_b"][..., :qn].astype(jnp.float32)  # (r, H, qn)
+    q_latent = jnp.einsum(
+        "bshe,rhe->bshr", q_nope.astype(jnp.float32), wkb_k
+    )  # (B,1,H,r)
+    logits = jnp.einsum("bshr,btr->bhst", q_latent, ckv.astype(jnp.float32))
+    logits = logits + jnp.einsum(
+        "bshe,bte->bhst", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32)
+    )
     scale = 1.0 / ((qn + qr) ** 0.5)
-    logits = (logits.astype(jnp.float32)) * scale
+    logits = logits * scale
     mask = jnp.arange(cache_len)[None, None, None, :] < valid
     logits = jnp.where(mask, logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)

@@ -1,0 +1,6 @@
+"""Test-support utilities shipped with the package.
+
+Currently: :mod:`repro.testing.hypothesis_fallback`, a minimal
+hypothesis-compatible property-testing shim used when the real
+``hypothesis`` package is unavailable (hermetic containers).
+"""

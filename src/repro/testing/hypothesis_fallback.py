@@ -1,0 +1,206 @@
+"""Minimal hypothesis-compatible fallback for hermetic environments.
+
+The tier-1 suite property-tests the matching engine, migration planner and
+simulator with `hypothesis <https://hypothesis.readthedocs.io>`_.  Some
+build containers cannot install packages, which previously left 4 test
+modules failing at *collection*.  This module implements just enough of
+the hypothesis API surface used by this repo — ``given`` / ``settings`` /
+``assume`` and the ``integers`` / ``floats`` / ``booleans`` /
+``sampled_from`` / ``lists`` / ``tuples`` strategies — to run the same
+tests as seeded random property checks.
+
+It is installed by ``tests/conftest.py`` ONLY when the real package is
+missing (``requirements.txt`` declares hypothesis, so CI always gets the
+real engine with shrinking and database-backed edge-case search).  Draws
+are deterministic (fixed per-test seed) and boundary values are
+over-weighted, but there is no shrinking: a falsifying example is reported
+as-is.
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+import types
+from functools import wraps
+from typing import Any, Callable, List
+
+DEFAULT_MAX_EXAMPLES = 50
+
+#: Probability that a bounded strategy draws one of its boundary values
+#: instead of a uniform sample (cheap stand-in for hypothesis' bias
+#: toward edge cases).
+BOUNDARY_P = 0.2
+
+
+class _AssumeFailed(Exception):
+    """Raised by :func:`assume`; the wrapper discards the example."""
+
+
+def assume(condition: Any) -> bool:
+    if not condition:
+        raise _AssumeFailed()
+    return True
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example_for(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def map(self, fn: Callable) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred: Callable) -> "SearchStrategy":
+        def draw(rng):
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate rejected 1000 consecutive draws")
+
+        return SearchStrategy(draw)
+
+
+def _bounded(draw_uniform: Callable, boundaries: List[Any]) -> SearchStrategy:
+    def draw(rng):
+        if boundaries and rng.random() < BOUNDARY_P:
+            return rng.choice(boundaries)
+        return draw_uniform(rng)
+
+    return SearchStrategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    bounds = sorted({min_value, max_value, min(min_value + 1, max_value)})
+    return _bounded(lambda rng: rng.randint(min_value, max_value), bounds)
+
+
+def floats(min_value: float, max_value: float, **_: Any) -> SearchStrategy:
+    bounds = [float(min_value), float(max_value)]
+    return _bounded(lambda rng: rng.uniform(min_value, max_value), bounds)
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rng: rng.choice(elements))
+
+
+def lists(elements: SearchStrategy, min_size: int = 0, max_size: int = 10) -> SearchStrategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.example_for(rng) for _ in range(n)]
+
+    return SearchStrategy(draw)
+
+
+def tuples(*strats: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.example_for(rng) for s in strats))
+
+
+def just(value: Any) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def settings(max_examples: int | None = None, deadline: Any = None, **_: Any):
+    """Decorator recording run options; only ``max_examples`` is honoured."""
+
+    def deco(fn):
+        fn._fallback_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+def given(*strats: SearchStrategy, **kw_strats: SearchStrategy):
+    """Seeded-random stand-in for ``hypothesis.given``.
+
+    Works with ``@settings`` applied either above or below it.  Each test
+    gets a deterministic seed derived from its name, so failures reproduce
+    run-to-run; the falsifying example is embedded in the raised error.
+    """
+
+    def deco(fn):
+        import inspect
+
+        inner_settings = getattr(fn, "_fallback_settings", None)
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        # Positional strategies fill the RIGHTMOST params (hypothesis'
+        # contract) — bind them BY NAME so pytest-supplied kwargs
+        # (fixtures, parametrize values) never collide positionally.
+        n_pos = len(strats)
+        target_names = [p.name for p in params[len(params) - n_pos :]] if n_pos else []
+
+        @wraps(fn)
+        def wrapper(*args, **kwargs):
+            opts = (
+                getattr(wrapper, "_fallback_settings", None)
+                or inner_settings
+                or {}
+            )
+            n = opts.get("max_examples") or DEFAULT_MAX_EXAMPLES
+            rng = random.Random(fn.__qualname__)
+            for _ in range(n):
+                kvals = dict(zip(target_names, (s.example_for(rng) for s in strats)))
+                kvals.update((k, s.example_for(rng)) for k, s in kw_strats.items())
+                try:
+                    fn(*args, **kvals, **kwargs)
+                except _AssumeFailed:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"Falsifying example (hypothesis_fallback, no shrinking): "
+                        f"{fn.__name__}(**{kvals!r})"
+                    ) from e
+
+        # Strategy-supplied parameters must vanish from the visible
+        # signature, or pytest would treat them as fixtures.
+        keep = [
+            p
+            for p in (params[: len(params) - n_pos] if n_pos else params)
+            if p.name not in kw_strats
+        ]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        del wrapper.__wrapped__  # keep inspect from recovering fn's signature
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (+ ``hypothesis.strategies``).
+
+    No-op if the real hypothesis is already importable/imported.
+    """
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    hyp.__is_repro_fallback__ = True
+
+    strat_mod = types.ModuleType("hypothesis.strategies")
+    for name in (
+        "SearchStrategy",
+        "integers",
+        "floats",
+        "booleans",
+        "sampled_from",
+        "lists",
+        "tuples",
+        "just",
+    ):
+        setattr(strat_mod, name, globals()[name])
+
+    hyp.strategies = strat_mod
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat_mod

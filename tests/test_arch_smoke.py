@@ -80,6 +80,7 @@ class TestArchSmoke:
         # cache structure preserved
         assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
 
+    @pytest.mark.slow
     def test_microbatched_train_step_matches(self, arch):
         cfg = get_reduced(arch)
         if cfg.frontend == "audio":
@@ -102,6 +103,7 @@ class TestDecodeParity:
     """Prefill parity: stepping tokens one-by-one through decode_step must
     reproduce the full-sequence forward logits."""
 
+    @pytest.mark.slow
     @pytest.mark.parametrize("arch", ["llama3-8b", "qwen3-14b", "mamba2-780m", "deepseek-v2-236b"])
     def test_decode_matches_forward(self, arch):
         import dataclasses
@@ -109,8 +111,20 @@ class TestDecodeParity:
         cfg = get_reduced(arch)
         if cfg.num_experts:
             # capacity dropping only exists in the batched forward — make the
-            # router lossless so decode parity is well-defined.
-            cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+            # router lossless so decode parity is well-defined.  MoE parity
+            # also runs in f32: in bf16 the absorbed MLA decode path and the
+            # batched forward accumulate in different association orders,
+            # and that sub-tolerance noise (~0.03 on logits, within
+            # rtol/atol=0.05 everywhere) can flip the DISCONTINUOUS top-k
+            # router for knife-edge tokens — observed: one token whose #2/#3
+            # expert probs differ by 0.005 routes differently, making that
+            # single token's logits diverge by 0.68 while all other
+            # positions agree.  In f32 the absorbed/cached path matches the
+            # forward to ~4e-6, so this asserts the cache-path MATH strictly
+            # instead of loosening the tolerance past a routing flip.
+            cfg = dataclasses.replace(
+                cfg, capacity_factor=16.0, dtype="float32"
+            )
         model = get_model(cfg)
         params = model.init(jax.random.PRNGKey(1), cfg)
         seq = SEQ

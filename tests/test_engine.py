@@ -1,0 +1,298 @@
+"""Property + regression tests for the unified batched matching engine."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.matching import (
+    available_backends,
+    register_backend,
+    solve_lap,
+    solve_lap_batched,
+)
+from repro.core.matching.engine import _BACKENDS
+
+scipy_lsa = pytest.importorskip("scipy.optimize").linear_sum_assignment
+
+AUCTION_BACKENDS = ["auction", "auction_kernel"]
+ALL_BACKENDS = ["scipy", "numpy", "auction", "auction_kernel", "auto"]
+
+
+def _scipy_optimum(cost, maximize=False):
+    """Reference total on a single (masked-out already) instance.
+
+    Prefers scipy's native inf handling (exact for feasible instances,
+    and independent of the engine's pad embedding — so it can catch
+    embedding bugs); falls back to a size-scaled finite fill only when
+    scipy declares the instance infeasible, mirroring the engine's
+    drop-forbidden contract.
+    """
+    bad = ~np.isfinite(cost)
+    try:
+        rows, cols = scipy_lsa(
+            np.where(bad, -np.inf if maximize else np.inf, cost),
+            maximize=maximize,
+        )
+    except ValueError:  # infeasible: no complete finite matching exists
+        span = np.abs(cost[~bad]).max() if (~bad).any() else 1.0
+        size = max(cost.shape)
+        fill = 2.0 * size * span + 1.0
+        filled = np.where(bad, -fill if maximize else fill, cost)
+        rows, cols = scipy_lsa(filled, maximize=maximize)
+    keep = ~bad[rows, cols]
+    return cost[rows[keep], cols[keep]].sum()
+
+
+def _eps_bound(n, m, backend):
+    """Documented auction bound: S * eps_min with eps_min = 1/(S+1)."""
+    if backend not in AUCTION_BACKENDS:
+        return 1e-9
+    s = max(n, m)
+    return s / (s + 1) + 1e-6
+
+
+def _check_result(res, costs, maximize, rm=None, cm=None):
+    """Validity: permutation, masks never win, forbidden edges never used."""
+    for b in range(costs.shape[0]):
+        rows, cols = res.pairs(b)
+        assert len(set(cols.tolist())) == len(cols)
+        assert np.isfinite(costs[b][rows, cols]).all()
+        if rm is not None:
+            assert rm[b][rows].all(), "row padding won an assignment"
+        if cm is not None:
+            assert cm[b][cols].all(), "col padding won an assignment"
+        want = _scipy_optimum(
+            costs[b][rm[b]][:, cm[b]] if rm is not None else costs[b],
+            maximize,
+        )
+        bound = _eps_bound(costs.shape[1], costs.shape[2], res.backend)
+        if res.used_fallback[b]:
+            bound = 1e-9  # fallback is exact
+        assert abs(res.total_cost[b] - want) <= bound, (
+            f"instance {b}: got {res.total_cost[b]}, scipy {want}"
+        )
+
+
+class TestBatchedOptimality:
+    @pytest.mark.parametrize("backend", ALL_BACKENDS)
+    @given(
+        st.integers(1, 5),   # batch
+        st.integers(1, 9),   # n
+        st.integers(0, 2**32 - 1),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_square_integer(self, backend, b, n, seed):
+        rng = np.random.default_rng(seed)
+        costs = rng.integers(0, 30, (b, n, n)).astype(float)
+        res = solve_lap_batched(costs, backend=backend)
+        _check_result(res, costs, maximize=False)
+
+    @pytest.mark.parametrize("backend", ALL_BACKENDS)
+    @given(
+        st.integers(1, 4),
+        st.integers(1, 8),
+        st.integers(1, 8),
+        st.integers(0, 2**32 - 1),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_rectangular_float(self, backend, b, n, m, seed):
+        rng = np.random.default_rng(seed)
+        costs = rng.uniform(0, 10, (b, n, m))
+        maximize = bool(seed % 2)
+        res = solve_lap_batched(costs, maximize=maximize, backend=backend)
+        _check_result(res, costs, maximize=maximize)
+        for i in range(b):
+            rows, _ = res.pairs(i)
+            assert len(rows) == min(n, m)
+
+    @pytest.mark.parametrize("backend", ALL_BACKENDS)
+    def test_ties(self, backend):
+        # all-equal and block-tied matrices: any permutation is optimal,
+        # but the result must still be a valid complete assignment.
+        costs = np.stack([
+            np.ones((6, 6)),
+            np.kron(np.arange(4).reshape(2, 2), np.ones((3, 3)))[:6, :6],
+        ])
+        res = solve_lap_batched(costs, backend=backend)
+        _check_result(res, costs, maximize=False)
+
+    @pytest.mark.parametrize("backend", ALL_BACKENDS)
+    @given(st.integers(2, 8), st.integers(0, 2**32 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_forbidden_edges(self, backend, n, seed):
+        rng = np.random.default_rng(seed)
+        costs = rng.integers(0, 20, (3, n, n)).astype(float)
+        forbid = rng.random((3, n, n)) < 0.2
+        # keep a feasible diagonal so a complete matching always exists
+        forbid[:, np.arange(n), np.arange(n)] = False
+        costs = np.where(forbid, np.inf, costs)
+        res = solve_lap_batched(costs, backend=backend)
+        _check_result(res, costs, maximize=False)
+        # a complete finite matching exists -> forbidden edges must never
+        # force a dropped pair
+        for i in range(costs.shape[0]):
+            rows, _ = res.pairs(i)
+            assert len(rows) == n
+
+    @pytest.mark.parametrize("backend", ALL_BACKENDS)
+    def test_mixed_sign_forbidden_regression(self, backend):
+        """Found in review: with a constant -(2*span+1) pad, the square
+        embedding preferred the forbidden cell over the complete finite
+        matching on mixed-sign costs (pad now scales with instance size).
+        """
+        cost = np.array([[2.0, np.inf], [-2.0, 2.0]])
+        res = solve_lap_batched(cost[None], backend=backend)
+        rows, cols = res.pairs(0)
+        assert len(rows) == 2, "forbidden edge displaced a real pair"
+        assert res.total_cost[0] == 4.0
+
+    @pytest.mark.parametrize("backend", ALL_BACKENDS)
+    @given(st.integers(2, 7), st.integers(0, 2**32 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_mixed_sign_costs(self, backend, n, seed):
+        rng = np.random.default_rng(seed)
+        costs = rng.uniform(-10, 10, (3, n, n))
+        forbid = rng.random((3, n, n)) < 0.2
+        forbid[:, np.arange(n), np.arange(n)] = False
+        costs = np.where(forbid, np.inf, costs)
+        res = solve_lap_batched(costs, backend=backend)
+        _check_result(res, costs, maximize=False)
+        for i in range(3):
+            rows, _ = res.pairs(i)
+            assert len(rows) == n
+
+    @pytest.mark.parametrize("backend", ALL_BACKENDS)
+    @given(st.integers(3, 8), st.integers(3, 8), st.integers(0, 2**32 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_masks_never_win(self, backend, n, m, seed):
+        rng = np.random.default_rng(seed)
+        costs = rng.integers(0, 25, (4, n, m)).astype(float)
+        rm = rng.random((4, n)) < 0.7
+        cm = rng.random((4, m)) < 0.7
+        rm[:, 0] = True  # keep at least one real row/col per instance
+        cm[:, 0] = True
+        res = solve_lap_batched(costs, row_mask=rm, col_mask=cm, backend=backend)
+        _check_result(res, costs, maximize=False, rm=rm, cm=cm)
+        # padded rows must be unassigned in col_of
+        assert (res.col_of[~rm] == -1).all()
+
+
+class TestRegressionCorpus:
+    def test_200_instance_corpus(self):
+        """Acceptance criterion: scipy-optimal total (within the documented
+        n*eps bound) on 100% of a 200-instance corpus spanning square /
+        rectangular / masked shapes, for every registered backend."""
+        rng = np.random.default_rng(2026)
+        corpus = []
+        for i in range(200):
+            n = int(rng.integers(1, 10))
+            m = n if i % 3 == 0 else int(rng.integers(1, 10))
+            integer = i % 2 == 0
+            cost = (
+                rng.integers(0, 40, (n, m)).astype(float)
+                if integer
+                else rng.uniform(0, 10, (n, m))
+            )
+            rm = cm = None
+            if i % 5 == 4 and n > 1 and m > 1:
+                rm = rng.random(n) < 0.8
+                cm = rng.random(m) < 0.8
+                rm[0] = cm[0] = True
+            if i % 7 == 6:
+                forbid = rng.random((n, m)) < 0.15
+                cost = np.where(forbid, np.inf, cost)
+            corpus.append((cost, rm, cm, bool(i % 4 == 1)))
+
+        for backend in ["scipy", "numpy", "auction", "auction_kernel"]:
+            failures = 0
+            for cost, rm, cm, maximize in corpus:
+                res = solve_lap_batched(
+                    cost[None],
+                    maximize=maximize,
+                    row_mask=None if rm is None else rm[None],
+                    col_mask=None if cm is None else cm[None],
+                    backend=backend,
+                )
+                sub = cost
+                if rm is not None:
+                    sub = sub[rm][:, cm]
+                want = _scipy_optimum(sub, maximize)
+                bound = _eps_bound(*cost.shape, backend)
+                if res.used_fallback[0]:
+                    bound = 1e-9
+                if abs(res.total_cost[0] - want) > bound:
+                    failures += 1
+            assert failures == 0, f"{backend}: {failures}/200 corpus failures"
+
+
+class TestEngineApi:
+    def test_registry_lists_backends(self):
+        names = available_backends()
+        for expected in ["scipy", "numpy", "smallperm", "auction", "auction_kernel", "auto"]:
+            assert expected in names
+
+    def test_unknown_backend_raises(self):
+        with pytest.raises(ValueError, match="unknown LAP backend"):
+            solve_lap_batched(np.zeros((1, 2, 2)), backend="nope")
+
+    def test_register_custom_backend(self):
+        @register_backend("_test_identity")
+        def _identity(benefit, eps_min=None, max_iters=None):
+            b, s, _ = benefit.shape
+            col = np.tile(np.arange(s, dtype=np.int64), (b, 1))
+            return col, np.ones(b, bool)
+
+        try:
+            costs = np.ones((2, 3, 3))
+            res = solve_lap_batched(costs, backend="_test_identity")
+            assert (res.col_of == np.arange(3)).all()
+            assert np.allclose(res.total_cost, 3.0)
+        finally:
+            del _BACKENDS["_test_identity"]
+
+    def test_single_instance_2d_input(self):
+        rng = np.random.default_rng(0)
+        cost = rng.integers(0, 10, (5, 5)).astype(float)
+        res = solve_lap_batched(cost, backend="auction")
+        assert res.col_of.shape == (1, 5)
+
+    def test_solve_lap_auction_matches_scipy(self):
+        rng = np.random.default_rng(1)
+        cost = rng.integers(0, 30, (9, 9)).astype(float)
+        rows, cols = solve_lap(cost, backend="auction")
+        want = _scipy_optimum(cost)
+        assert np.isclose(cost[rows, cols].sum(), want)
+
+    def test_empty_batch_and_empty_instance(self):
+        res = solve_lap_batched(np.zeros((0, 4, 4)))
+        assert res.col_of.shape == (0, 4)
+        res = solve_lap_batched(np.zeros((2, 0, 3)))
+        assert res.col_of.shape == (2, 0)
+        assert (res.total_cost == 0).all()
+
+    def test_smallperm_rejects_large(self):
+        with pytest.raises(ValueError, match="smallperm"):
+            solve_lap_batched(np.zeros((1, 8, 8)), backend="smallperm")
+
+    def test_wall_time_recorded(self):
+        res = solve_lap_batched(np.ones((1, 3, 3)))
+        assert res.wall_time_s >= 0.0
+
+
+class TestConvergenceFallback:
+    def test_non_converged_instances_fall_back(self):
+        """Starved of iterations, the auction cannot finish; the engine must
+        hand exactly those instances to scipy and still return optimal."""
+        rng = np.random.default_rng(3)
+        costs = rng.integers(0, 50, (4, 8, 8)).astype(float)
+        res = solve_lap_batched(costs, backend="auction", max_iters=2)
+        assert res.used_fallback.all()
+        assert not res.converged.any()
+        _check_result(res, costs, maximize=False)
+
+    def test_converged_instances_do_not_fall_back(self):
+        rng = np.random.default_rng(4)
+        costs = rng.integers(0, 20, (3, 5, 5)).astype(float)
+        res = solve_lap_batched(costs, backend="auction")
+        assert res.converged.all()
+        assert not res.used_fallback.any()

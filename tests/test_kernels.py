@@ -10,7 +10,7 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.lap_bid import lap_bid_pallas
+from repro.kernels.lap_bid import lap_bid_pallas, lap_bid_pallas_batched
 from repro.kernels.migration_cost import migration_cost_pallas
 
 
@@ -49,6 +49,76 @@ class TestLapBidKernel:
         rv, rj, rsv = ref.lap_bid_top2(jnp.asarray(a))
         np.testing.assert_array_equal(bj, rj)
         np.testing.assert_allclose(sv, rsv)
+
+
+class TestLapBidKernelBatched:
+    """Batched kernel vs the auction's jnp top-2 oracle on shapes that
+    exercise the padding edges: 1 short of a block (127 / 511), block+1
+    (129 / 513), and non-multiples of the 128-row / 512-col tiles."""
+
+    @pytest.mark.parametrize(
+        "b,n,m",
+        [
+            (1, 4, 4),
+            (3, 127, 512),   # rows one short of BLOCK_ROWS
+            (2, 129, 64),    # rows = BLOCK_ROWS + 1
+            (2, 128, 511),   # cols one short of BLOCK_COLS
+            (2, 3, 513),     # cols = BLOCK_COLS + 1
+            (4, 130, 300),   # both non-multiples
+            (2, 127, 513),   # short rows x long cols
+        ],
+    )
+    def test_matches_auction_top2(self, b, n, m):
+        from repro.core.matching.auction import _top2
+
+        rng = np.random.default_rng(b * 100000 + n * 100 + m)
+        a = jnp.asarray(rng.normal(size=(b, n, m)), jnp.float32)
+        p = jnp.asarray(rng.normal(size=(b, m)), jnp.float32)
+        bv, bj, sv = lap_bid_pallas_batched(a, p, interpret=True)
+        rv, rj, rsv = _top2(a - p[:, None, :])
+        np.testing.assert_allclose(bv, rv, rtol=1e-6)
+        np.testing.assert_array_equal(bj, rj)
+        np.testing.assert_allclose(sv, rsv, rtol=1e-6)
+
+    def test_matches_unbatched_kernel(self):
+        rng = np.random.default_rng(7)
+        a = jnp.asarray(rng.normal(size=(3, 130, 520)), jnp.float32)
+        p = jnp.asarray(rng.normal(size=(3, 520)), jnp.float32)
+        bv, bj, sv = lap_bid_pallas_batched(a, p, interpret=True)
+        for i in range(3):
+            bv1, bj1, sv1 = lap_bid_pallas(a[i], p[i], interpret=True)
+            np.testing.assert_allclose(bv[i], bv1, rtol=1e-6)
+            np.testing.assert_array_equal(bj[i], bj1)
+            np.testing.assert_allclose(sv[i], sv1, rtol=1e-6)
+
+    def test_cross_tile_ties_batched(self):
+        # identical maxima in different column tiles: first tile must win,
+        # independently per batch instance
+        m = 1100  # spans 3 column tiles at BLOCK_COLS=512
+        a = np.zeros((2, 2, m), np.float32)
+        a[0, 0, 10] = 7.0
+        a[0, 0, 700] = 7.0   # tie across tiles -> argmax must stay at 10
+        a[1, 0, 700] = 7.0   # same value, later tile only, in instance 1
+        a[1, 1, 1050] = 9.0
+        bv, bj, sv = lap_bid_pallas_batched(
+            jnp.asarray(a), jnp.zeros((2, m)), interpret=True
+        )
+        assert int(bj[0, 0]) == 10
+        assert int(bj[1, 0]) == 700
+        np.testing.assert_allclose(sv[0, 0], 7.0)
+
+    def test_ops_dispatch_batched(self):
+        """ops.lap_bid_top2 routes 3-D inputs to the batched kernel."""
+        from repro.core.matching.auction import _top2
+        from repro.kernels.ops import lap_bid_top2
+
+        rng = np.random.default_rng(11)
+        vals = jnp.asarray(rng.normal(size=(5, 9, 17)), jnp.float32)
+        bv, bj, sv = lap_bid_top2(vals)
+        rv, rj, rsv = _top2(vals)
+        np.testing.assert_allclose(bv, rv, rtol=1e-6)
+        np.testing.assert_array_equal(bj, rj)
+        np.testing.assert_allclose(sv, rsv, rtol=1e-6)
 
 
 class TestMigrationCostKernel:
