@@ -1,6 +1,6 @@
 """LAP-solver microbenchmarks (beyond-paper §Perf evidence).
 
-Two parts:
+Three parts:
 
 1. The original single-instance comparisons (our numpy Hungarian vs scipy)
    — kept as CSV rows for continuity with the other paper-figure benches.
@@ -13,19 +13,40 @@ Two parts:
 
        PYTHONPATH=src python benchmarks/matching_microbench.py \\
            --backend all --json matching_microbench.json
+
+3. The **warm-start A/B replay** (``--warm-start``): a multi-round trace
+   of cost batches with round-to-round churn (a few instances mutate one
+   row per round — the Tesserae placement-locality model) replayed twice:
+   *cold* resets the :class:`MatchContext` every round (PR-1 behaviour,
+   the baseline) and *warm* threads one context across the whole trace.
+   Per round it records bid-iteration counts, wall time, warm/memo hits
+   and a scipy-parity gate; a rectangular (packing-shaped) replay pins the
+   padding-free path, and ``--warm-scale-rounds N`` additionally measures
+   per-round ``TesseraeScheduler.decide()`` at the 2048-GPU sweep point
+   (512 nodes x 4) cold vs warm.  The JSON record defaults to
+   ``BENCH_matching_warmstart.json``:
+
+       PYTHONPATH=src python benchmarks/matching_microbench.py \\
+           --warm-start --warm-scale-rounds 3
+
+   ``--check-convergence`` turns the replay into a CI gate: exit non-zero
+   if any auction fails to converge, any round loses scipy parity, or the
+   warm arm does not strictly reduce total bid iterations (timings are
+   recorded but never gated).
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 from typing import Dict, List
 
 import numpy as np
 
 from benchmarks.common import csv_row, timed
-from repro.core.matching import solve_lap_batched
+from repro.core.matching import MatchContext, solve_lap_batched
 from repro.core.matching.hungarian import solve_lap
 
 #: Acceptance sweep: per-backend timings for these batch sizes ...
@@ -92,6 +113,178 @@ def bench_scale_sweep(
                 )
 
 
+def _mutated_trace(rng, base: np.ndarray, rounds: int, churn: float) -> List[np.ndarray]:
+    """Round trace with placement-locality churn: each round, ``churn`` of
+    the instances get one row re-randomised (a node pair whose occupancy
+    changed); everything else is carried over unchanged."""
+    lo, hi = 0, int(base.max()) + 1
+    trace = [base]
+    costs = base
+    for _ in range(rounds - 1):
+        costs = costs.copy()
+        n_mut = max(1, int(round(churn * costs.shape[0])))
+        for i in rng.choice(costs.shape[0], n_mut, replace=False):
+            costs[i, rng.integers(costs.shape[1])] = rng.integers(lo, hi, costs.shape[2])
+        trace.append(costs)
+    return trace
+
+
+def _replay(trace, backend: str, persistent: bool, maximize: bool = False) -> Dict:
+    """Replay a cost-batch trace through one arm (cold or warm) and record
+    per-round iteration counts, wall time and scipy parity."""
+    ctx = MatchContext()
+    # jit warm-up for BOTH variants (cold solve + warm-started solve take
+    # different traced signatures) so compiles stay out of the timed region
+    scratch = MatchContext()
+    solve_lap_batched(trace[0], maximize=maximize, backend=backend,
+                      context=scratch, context_key="_jit_warmup")
+    perturbed = trace[0].copy()
+    perturbed[0, 0, :] = perturbed[0, 0, ::-1] + 1.0
+    solve_lap_batched(perturbed, maximize=maximize, backend=backend,
+                      context=scratch, context_key="_jit_warmup")
+    per_round = []
+    for t, costs in enumerate(trace):
+        if not persistent:
+            ctx = MatchContext()
+        t0 = time.perf_counter()
+        res = solve_lap_batched(
+            costs, maximize=maximize, backend=backend, context=ctx, context_key="replay"
+        )
+        dt = time.perf_counter() - t0
+        ref = solve_lap_batched(costs, maximize=maximize, backend="scipy")
+        # documented engine bound: S * eps_min with eps_min = 1/(S+1) and
+        # S the solve size — the SHORT side for rectangular instances
+        s = min(costs.shape[1], costs.shape[2])
+        bound = s / (s + 1) + 1e-6
+        per_round.append(
+            {
+                "round": t,
+                "time_s": dt,
+                "bid_iters": int(res.bid_iters.sum()),
+                "warm_instances": int(res.warm.sum()),
+                "fallbacks": int(res.used_fallback.sum()),
+                "converged": bool(res.converged.all()),
+                "parity_ok": bool(
+                    np.all(np.abs(res.total_cost - ref.total_cost) <= bound)
+                ),
+                "embedding": res.embedding,
+            }
+        )
+    return {
+        "arm": "warm" if persistent else "cold",
+        "backend": backend,
+        "rounds": len(trace),
+        "total_bid_iters": int(sum(r["bid_iters"] for r in per_round)),
+        "total_time_s": float(sum(r["time_s"] for r in per_round)),
+        "memo_hits": ctx.stats["memo_hits"] if persistent else 0,
+        "per_round": per_round,
+    }
+
+
+def bench_warm_start(args, rows: List[str], records: List[Dict]) -> bool:
+    """Warm-start A/B replay; returns True when every convergence /
+    parity / iteration-reduction gate passed."""
+    rng = np.random.default_rng(7)
+    ok = True
+
+    # square node-pair fan-out replay (integer costs -> auction is exact)
+    base = rng.integers(0, 16, (args.warm_batch, 4, 4)).astype(np.float64)
+    trace = _mutated_trace(rng, base, args.warm_rounds, args.warm_churn)
+    arms = {}
+    for persistent in (False, True):
+        rec = _replay(trace, args.warm_backend, persistent)
+        rec["bench"] = "warmstart_replay"
+        rec["batch"] = args.warm_batch
+        rec["k"] = 4
+        rec["churn"] = args.warm_churn
+        records.append(rec)
+        arms[rec["arm"]] = rec
+        rows.append(
+            csv_row(
+                f"matching/warmstart_{rec['arm']}_b{args.warm_batch}",
+                rec["total_time_s"] * 1e6,
+                f"rounds={rec['rounds']};bid_iters={rec['total_bid_iters']};"
+                f"memo_hits={rec['memo_hits']}",
+            )
+        )
+        ok &= all(r["converged"] and r["parity_ok"] for r in rec["per_round"])
+    ok &= arms["warm"]["total_bid_iters"] < arms["cold"]["total_bid_iters"]
+
+    # rectangular packing-shaped replay (|placed| >> |pending|): pins the
+    # padding-free path — no max(n, m)^2 square embedding is allocated.
+    rect_base = np.round(rng.uniform(0, 4, (8, args.warm_rect_rows, 12)), 2)
+    rect_trace = _mutated_trace(rng, rect_base, max(4, args.warm_rounds // 4), 0.25)
+    for persistent in (False, True):
+        rec = _replay(rect_trace, args.warm_backend, persistent, maximize=True)
+        rec["bench"] = "warmstart_rect_replay"
+        rec["shape"] = [args.warm_rect_rows, 12]
+        records.append(rec)
+        ok &= all(r["embedding"] == "rect" for r in rec["per_round"])
+        # rect bound is short-side * eps; parity gate uses the documented
+        # engine bound, checked inside _replay via total-cost distance
+        ok &= all(r["converged"] and r["parity_ok"] for r in rec["per_round"])
+        rows.append(
+            csv_row(
+                f"matching/warmstart_rect_{rec['arm']}",
+                rec["total_time_s"] * 1e6,
+                f"shape={args.warm_rect_rows}x12;bid_iters={rec['total_bid_iters']}",
+            )
+        )
+    return ok
+
+
+def bench_decide_scale(args, rows: List[str], records: List[Dict]) -> None:
+    """Per-round ``decide()`` at the 2048-GPU sweep point, cold vs warm.
+
+    Static steady-state job set: rounds after the first present the same
+    LAP fan-outs, which is exactly the regime the persistent context is
+    built for — the cold arm (context reset every round) is the PR-1
+    baseline measured fresh."""
+    from repro.core.cluster import ClusterSpec
+    from repro.core.policies import TiresiasPolicy
+    from repro.core.profiler import ThroughputProfile
+    from repro.core.scheduler import TesseraeScheduler
+    from repro.core.traces import synthetic_active_jobs
+
+    profile = ThroughputProfile()
+    cluster = ClusterSpec(args.scale_nodes, 4)
+    jobs = synthetic_active_jobs(args.scale_jobs, seed=1, profile=profile)
+    for arm in ("cold", "warm"):
+        sched = TesseraeScheduler(
+            cluster, TiresiasPolicy(profile), profile, lap_backend=args.warm_backend
+        )
+        d = sched.decide(jobs, now=0.0)
+        prev = d.plan
+        per_round = []
+        for r in range(1, args.warm_scale_rounds + 1):
+            if arm == "cold":
+                sched.match_context.reset()
+            t0 = time.perf_counter()
+            d = sched.decide(jobs, now=360.0 * r, prev_plan=prev)
+            dt = time.perf_counter() - t0
+            prev = d.plan
+            per_round.append({"round": r, "decide_s": dt, **d.timings})
+        rec = {
+            "bench": "decide_scale_warmstart",
+            "arm": arm,
+            "backend": args.warm_backend,
+            "nodes": args.scale_nodes,
+            "gpus": cluster.num_gpus,
+            "jobs": args.scale_jobs,
+            "mean_decide_s": float(np.mean([p["decide_s"] for p in per_round])),
+            "per_round": per_round,
+            "context_stats": dict(sched.match_context.stats),
+        }
+        records.append(rec)
+        rows.append(
+            csv_row(
+                f"matching/decide2048_{arm}",
+                rec["mean_decide_s"] * 1e6,
+                f"gpus={cluster.num_gpus};rounds={args.warm_scale_rounds}",
+            )
+        )
+
+
 def main(argv=None, print_csv: bool = True) -> List[str]:
     """``argv``: CLI arg list; ``None`` when driven programmatically by
     ``benchmarks/run.py`` — that path drops the ``auction_kernel`` backend
@@ -106,10 +299,38 @@ def main(argv=None, print_csv: bool = True) -> List[str]:
     )
     parser.add_argument(
         "--json",
-        default="matching_microbench.json",
-        help="path of the JSON perf record (written at the end of the run)",
+        default=None,
+        help="path of the JSON perf record (default matching_microbench.json, "
+        "or BENCH_matching_warmstart.json with --warm-start)",
     )
     parser.add_argument("--repeats", type=int, default=3)
+    parser.add_argument(
+        "--warm-start",
+        action="store_true",
+        help="run the warm-start A/B replay instead of the classic sweeps",
+    )
+    parser.add_argument("--warm-rounds", type=int, default=24, help="replay length")
+    parser.add_argument("--warm-batch", type=int, default=256, help="instances per round")
+    parser.add_argument("--warm-churn", type=float, default=0.05,
+                        help="fraction of instances mutated per round")
+    parser.add_argument("--warm-rect-rows", type=int, default=96,
+                        help="placed-job count of the rectangular replay (pending=12)")
+    parser.add_argument("--warm-backend", default="auction",
+                        choices=["auction", "auction_kernel"])
+    parser.add_argument(
+        "--warm-scale-rounds", type=int, default=0,
+        help="also measure per-round decide() at the 2048-GPU sweep point "
+        "for this many rounds per arm (0 = skip; slow on CPU)",
+    )
+    parser.add_argument("--scale-nodes", type=int, default=512)
+    parser.add_argument("--scale-jobs", type=int, default=512)
+    parser.add_argument(
+        "--check-convergence",
+        action="store_true",
+        help="CI gate: exit non-zero on auction non-convergence, parity "
+        "loss, or a warm arm that does not reduce bid iterations "
+        "(never gates on timing)",
+    )
     from_cli = argv is not None
     args = parser.parse_args(list(argv) if from_cli else [])
     backends = SWEEP_BACKENDS if args.backend == "all" else [args.backend]
@@ -121,6 +342,31 @@ def main(argv=None, print_csv: bool = True) -> List[str]:
 
     rows: List[str] = []
     records: List[Dict] = []
+    if args.warm_start:
+        json_path = args.json or "BENCH_matching_warmstart.json"
+        gates_ok = bench_warm_start(args, rows, records)
+        if args.warm_scale_rounds > 0:
+            bench_decide_scale(args, rows, records)
+        report = {
+            "benchmark": "matching_warmstart",
+            "backend": args.warm_backend,
+            "rounds": args.warm_rounds,
+            "batch": args.warm_batch,
+            "churn": args.warm_churn,
+            "gates_ok": gates_ok,
+            "records": records,
+        }
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        rows.append(csv_row("matching/json_report", 0.0, f"path={json_path}"))
+        if print_csv:
+            for r in rows:
+                print(r)
+        if args.check_convergence and not gates_ok:
+            print("warm-start convergence/parity gate FAILED", file=sys.stderr)
+            raise SystemExit(2)
+        return rows
+
     bench_single(rows, records)
     bench_scale_sweep(backends, rows, records, repeats=args.repeats)
 
@@ -131,9 +377,10 @@ def main(argv=None, print_csv: bool = True) -> List[str]:
         "node_sizes": NODE_SIZES,
         "records": records,
     }
-    with open(args.json, "w") as f:
+    json_path = args.json or "matching_microbench.json"
+    with open(json_path, "w") as f:
         json.dump(report, f, indent=2)
-    rows.append(csv_row("matching/json_report", 0.0, f"path={args.json}"))
+    rows.append(csv_row("matching/json_report", 0.0, f"path={json_path}"))
 
     if print_csv:
         for r in rows:

@@ -41,15 +41,29 @@ SCALE_JOBS = 512
 
 
 def tesserae_round_time(num_jobs: int, profile, cluster=CLUSTER, backend="auto") -> dict:
+    """One cold full round (the PR-1 comparable ``total_s``) plus one WARM
+    round: the scheduler's persistent ``MatchContext`` carries the packing
+    / migration price state from the previous round, so ``warm_total_s``
+    is the steady-state per-round decision time (placements change little
+    round-to-round; identical fan-outs memo-hit outright)."""
     jobs = synthetic_active_jobs(num_jobs, seed=1, profile=profile)
     sched = TesseraeScheduler(
         cluster, TiresiasPolicy(profile), profile, lap_backend=backend
     )
     d1 = sched.decide(jobs, now=0.0)
+    sched.match_context.reset()  # keep total_s comparable to the PR-1 record
     t0 = time.perf_counter()
     d2 = sched.decide(jobs, now=360.0, prev_plan=d1.plan)
     total = time.perf_counter() - t0
-    return {"total_s": total, **d2.timings}
+    t0 = time.perf_counter()
+    d3 = sched.decide(jobs, now=720.0, prev_plan=d2.plan)
+    warm_total = time.perf_counter() - t0
+    return {
+        "total_s": total,
+        "warm_total_s": warm_total,
+        "warm_migrate_s": d3.timings["migrate_s"],
+        **d2.timings,
+    }
 
 
 def lp_round_time(num_jobs: int, profile, pop: bool) -> float:

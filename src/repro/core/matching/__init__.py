@@ -7,7 +7,12 @@ The public entry points are the **unified batched matching engine**
   masked, forbidden-edge) LAP instances, dispatched through a backend
   registry (``scipy`` / ``numpy`` / ``smallperm`` / ``auction`` /
   ``auction_kernel`` / ``auto``) with per-instance convergence tracking
-  and a scipy fallback for non-converged auction instances.
+  and a scipy fallback for non-converged auction instances.  Rectangular
+  instances solve natively (no square embedding) on the rect-capable
+  backends.
+* :class:`MatchContext` — opaque warm-start state a scheduler threads
+  across rounds: persistent auction prices with row-fingerprint
+  invalidation, plus memoisation of identical re-solves.
 * :func:`solve_lap` — single-instance wrapper with the same backend knob.
 * :func:`register_backend` / :func:`available_backends` — plug-in points.
 
@@ -27,10 +32,13 @@ from repro.core.matching.auction import (
     auction_assignment,
     auction_lap,
     auction_lap_batched,
+    auction_lap_rect_batched,
+    masked_rect_benefit,
     masked_square_benefit,
 )
 from repro.core.matching.engine import (
     BatchedMatchResult,
+    MatchContext,
     available_backends,
     register_backend,
     solve_lap,
@@ -40,12 +48,15 @@ from repro.core.matching.hungarian import assignment_cost, linear_sum_assignment
 
 __all__ = [
     "BatchedMatchResult",
+    "MatchContext",
     "assignment_cost",
     "auction_assignment",
     "auction_lap",
     "auction_lap_batched",
+    "auction_lap_rect_batched",
     "available_backends",
     "linear_sum_assignment",
+    "masked_rect_benefit",
     "masked_square_benefit",
     "register_backend",
     "solve_lap",

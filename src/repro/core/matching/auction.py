@@ -17,7 +17,26 @@ with epsilon scaling.  For integer-valued benefits and a final
 benefit is within ``n * eps_min`` of optimal (we quantise throughputs before
 solving when exactness matters).
 
-All shapes are static; the solver is ``jit``- and ``vmap``-compatible.
+Warm starts (beyond-paper, PR 2): every solver accepts ``init_prices`` and
+a per-instance ``warm`` flag.  Auction correctness never depends on the
+initial prices — each bid re-establishes eps-complementary slackness for
+the bidder — so carrying last round's equilibrium prices into this round's
+solve is always *valid*; when the costs barely changed (the Tesserae
+round-to-round locality the paper's Fig. 2/14b exploits) it is also *fast*:
+a warm instance skips the epsilon-scaling schedule entirely and runs one
+phase at ``eps_min``.  For square instances the ``n * eps`` bound holds for
+ANY initial prices (both totals telescope over the same full column set);
+for rectangular instances the matching engine verifies an a-posteriori
+price certificate and re-solves the rare instance that fails it (see
+``engine._rect_bound_violation``).
+
+Rectangular instances (n != m) also get a **native forward auction**
+(:func:`auction_lap_rect_batched`): bidders are the short side, bids range
+only over the real columns, and no ``max(n, m)^2`` square embedding is ever
+materialised — the fix for very skew packing graphs (|placed| >> |pending|)
+where the square embedding paid quadratic work for a linear-ish problem.
+
+All shapes are static; the solvers are ``jit``- and ``vmap``-compatible.
 """
 
 from __future__ import annotations
@@ -65,11 +84,26 @@ def _top2(vals: jax.Array):
     return best_v, best_j, second_v
 
 
+def _inverse_assignment(assign: jax.Array, out_size: int) -> jax.Array:
+    """Invert a partial injective map: ``assign`` (k,) holds values in
+    ``[0, out_size)`` or -1; returns (out_size,) with ``inv[assign[i]] = i``
+    and -1 elsewhere.  Square helpers are the ``out_size == k`` case."""
+    k = assign.shape[0]
+    safe = jnp.where(assign >= 0, assign, out_size)
+    return (
+        jnp.full((out_size + 1,), -1, jnp.int32)
+        .at[safe]
+        .set(jnp.arange(k, dtype=jnp.int32))[:out_size]
+    )
+
+
 def auction_lap(
     benefit: jax.Array,
     eps_min: float | jax.Array | None = None,
     max_iters: int = 20_000,
     use_kernel: bool | None = None,
+    init_prices: jax.Array | None = None,
+    warm: bool | jax.Array = False,
 ) -> AuctionResult:
     """Maximise ``sum_i benefit[i, col_of[i]]`` over permutations.
 
@@ -86,10 +120,22 @@ def auction_lap(
         (default) picks the kernel automatically for instances with
         ``n >= KERNEL_MIN_N`` on TPU; off-TPU the kernel runs in interpret
         mode and is only used when explicitly requested.
+      init_prices: (n,) warm-start prices (defaults to zeros).  Any values
+        are valid; see the module docstring for the optimality argument.
+      warm: skip the epsilon-scaling schedule and run a single phase at
+        ``eps_min`` — the warm-start fast path when ``init_prices`` are
+        near this round's equilibrium.
     """
     if use_kernel is None:
         use_kernel = _auto_use_kernel(int(benefit.shape[-1]))
-    return _auction_lap_jit(benefit, eps_min, max_iters=max_iters, use_kernel=use_kernel)
+    return _auction_lap_jit(
+        benefit,
+        eps_min,
+        max_iters=max_iters,
+        use_kernel=use_kernel,
+        init_prices=init_prices,
+        warm=jnp.asarray(warm),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("max_iters", "use_kernel"))
@@ -98,6 +144,8 @@ def _auction_lap_jit(
     eps_min: float | jax.Array | None = None,
     max_iters: int = 20_000,
     use_kernel: bool = False,
+    init_prices: jax.Array | None = None,
+    warm: jax.Array | None = None,
 ) -> AuctionResult:
     benefit = jnp.asarray(benefit, dtype=jnp.float32)
     n = benefit.shape[-1]
@@ -109,36 +157,12 @@ def _auction_lap_jit(
     eps_min = jnp.asarray(eps_min, dtype=jnp.float32)
     span = jnp.maximum(jnp.max(jnp.abs(benefit)), 1.0)
     eps0 = jnp.maximum(span / 4.0, eps_min)
+    if warm is not None:
+        # warm instances skip the scaling schedule: one phase at eps_min.
+        eps0 = jnp.where(warm, eps_min, eps0)
 
-    if use_kernel:
-        from repro.kernels.ops import lap_bid_top2
-
-        top2 = lap_bid_top2
-    else:
-        top2 = _top2
-
-    def bid_round(prices, col_of, eps):
-        unassigned = col_of < 0
-        vals = benefit - prices[None, :]
-        best_v, best_j, second_v = top2(vals)
-        incr = best_v - second_v + eps
-        # Bid value person i offers for its best object.
-        offer = prices[best_j] + incr
-        # (n_persons, n_objects) matrix of offers; -inf where no bid.
-        bids = jnp.where(
-            unassigned[:, None] & jax.nn.one_hot(best_j, n, dtype=bool),
-            offer[:, None],
-            _NEG,
-        )
-        has_bid = jnp.any(bids > _NEG / 2, axis=0)
-        winner = jnp.argmax(bids, axis=0)
-        new_price = jnp.max(bids, axis=0)
-        prices = jnp.where(has_bid, new_price, prices)
-        # Recompute owners: objects with a bid switch to the winner.
-        row_of_prev = _row_of_from_col_of(col_of, n)
-        row_of = jnp.where(has_bid, winner, row_of_prev)
-        col_of = _col_of_from_row_of(row_of, n)
-        return prices, col_of
+    top2 = _pick_top2(use_kernel)
+    bid_round = _make_bid_round(benefit, n, top2)
 
     def cond(state):
         prices, col_of, eps, it, _ = state
@@ -162,8 +186,13 @@ def _auction_lap_jit(
         )
         return prices, col_of, eps, it + 1, jnp.all(col_of >= 0)
 
+    p0 = (
+        jnp.zeros((n,), jnp.float32)
+        if init_prices is None
+        else jnp.asarray(init_prices, jnp.float32)
+    )
     init = (
-        jnp.zeros((n,), jnp.float32),
+        p0,
         jnp.full((n,), -1, jnp.int32),
         eps0,
         jnp.asarray(0, jnp.int32),
@@ -175,26 +204,108 @@ def _auction_lap_jit(
     # ``max_iters`` mid-scaling can hold a complete but far-from-optimal
     # assignment (eps still large) — the engine must know to re-solve it.
     converged = jnp.all(col_of >= 0) & (eps <= eps_min * (1 + 1e-6))
-    row_of = _row_of_from_col_of(col_of, n)
+    row_of = _inverse_assignment(col_of, n)
     return AuctionResult(col_of, row_of, prices, iters, converged)
 
 
-def _row_of_from_col_of(col_of: jax.Array, n: int) -> jax.Array:
-    safe = jnp.where(col_of >= 0, col_of, n)
-    return (
-        jnp.full((n + 1,), -1, jnp.int32)
-        .at[safe]
-        .set(jnp.arange(n, dtype=jnp.int32))[:n]
-    )
+def _pick_top2(use_kernel: bool):
+    if use_kernel:
+        from repro.kernels.ops import lap_bid_top2
+
+        return lap_bid_top2
+    return _top2
 
 
-def _col_of_from_row_of(row_of: jax.Array, n: int) -> jax.Array:
-    safe = jnp.where(row_of >= 0, row_of, n)
-    return (
-        jnp.full((n + 1,), -1, jnp.int32)
-        .at[safe]
-        .set(jnp.arange(n, dtype=jnp.int32))[:n]
+def _make_bid_round(benefit: jax.Array, m: int, top2):
+    """Jacobi bid round over an (n, m) benefit matrix (square or rect):
+    every unassigned person bids for its best object; objects take the
+    highest bid.  Returns ``(prices, col_of) -> (prices, col_of)``."""
+    n = benefit.shape[0]
+
+    def bid_round(prices, col_of, eps):
+        unassigned = col_of < 0
+        vals = benefit - prices[None, :]
+        best_v, best_j, second_v = top2(vals)
+        incr = best_v - second_v + eps
+        # Bid value person i offers for its best object.
+        offer = prices[best_j] + incr
+        # (n_persons, n_objects) matrix of offers; -inf where no bid.
+        bids = jnp.where(
+            unassigned[:, None] & jax.nn.one_hot(best_j, m, dtype=bool),
+            offer[:, None],
+            _NEG,
+        )
+        has_bid = jnp.any(bids > _NEG / 2, axis=0)
+        winner = jnp.argmax(bids, axis=0)
+        new_price = jnp.max(bids, axis=0)
+        prices = jnp.where(has_bid, new_price, prices)
+        # Recompute owners: objects with a bid switch to the winner.
+        row_of_prev = _inverse_assignment(col_of, m)
+        row_of = jnp.where(has_bid, winner, row_of_prev)
+        col_of = _inverse_assignment(row_of, n)
+        return prices, col_of
+
+    return bid_round
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "use_kernel"))
+def _auction_lap_rect_jit(
+    benefit: jax.Array,
+    eps_min: float | jax.Array | None = None,
+    max_iters: int = 20_000,
+    use_kernel: bool = False,
+    init_prices: jax.Array | None = None,
+    warm: jax.Array | None = None,
+) -> AuctionResult:
+    """Native rectangular forward auction: (n, m) benefit with n <= m.
+
+    The n persons (rows) bid over the m real objects — no square embedding,
+    no padded bidders.  Termination: all n persons assigned (always
+    feasible: the engine's rect benefit is finite everywhere).
+
+    Unlike the square solver, the rectangular auction runs a SINGLE phase
+    at ``eps_min``: the ``n * eps`` optimality bound for asymmetric
+    instances requires the final prices of unassigned objects to never
+    exceed those the optimum would use — automatic when initial prices are
+    all equal, but *broken* by epsilon-scaling phase restarts (a column
+    over-priced in an early large-eps phase and then abandoned keeps its
+    stale price, and with m > n it is never forced back to equilibrium;
+    empirically this loses several spans of benefit, not ``n * eps``).
+    Warm starts pass non-equal ``init_prices``; the engine re-establishes
+    the bound a posteriori via the price certificate
+    (``engine._rect_bound_violation``) and re-solves instances that fail.
+    """
+    benefit = jnp.asarray(benefit, dtype=jnp.float32)
+    n, m = benefit.shape
+    if n > m:
+        raise ValueError(f"rect auction requires n <= m, got {benefit.shape}")
+
+    if eps_min is None:
+        eps_min = 1.0 / (n + 1)
+    eps = jnp.asarray(eps_min, dtype=jnp.float32)  # single phase
+    del warm  # warmth only changes init_prices on the rect path
+
+    bid_round = _make_bid_round(benefit, m, _pick_top2(use_kernel))
+
+    def cond(state):
+        _, col_of, it = state
+        return (~jnp.all(col_of >= 0)) & (it < max_iters)
+
+    def body(state):
+        prices, col_of, it = state
+        prices, col_of = bid_round(prices, col_of, eps)
+        return prices, col_of, it + 1
+
+    p0 = (
+        jnp.zeros((m,), jnp.float32)
+        if init_prices is None
+        else jnp.asarray(init_prices, jnp.float32)
     )
+    init = (p0, jnp.full((n,), -1, jnp.int32), jnp.asarray(0, jnp.int32))
+    prices, col_of, iters = jax.lax.while_loop(cond, body, init)
+    converged = jnp.all(col_of >= 0)
+    row_of = _inverse_assignment(col_of, m)
+    return AuctionResult(col_of, row_of, prices, iters, converged)
 
 
 def auction_lap_batched(
@@ -202,6 +313,8 @@ def auction_lap_batched(
     max_iters: int = 20_000,
     eps_min: float | jax.Array | None = None,
     use_kernel: bool | None = None,
+    init_prices: jax.Array | None = None,
+    warm: jax.Array | None = None,
 ) -> AuctionResult:
     """vmap'd auction over a batch of (n, n) benefit matrices.
 
@@ -209,16 +322,46 @@ def auction_lap_batched(
     XLA program instead of k_c^2 sequential scipy calls.  Every result
     field gains a leading batch axis — in particular ``converged`` is
     per-instance, which the matching engine uses to re-solve stragglers
-    with scipy.  With ``use_kernel`` the bid top-2 lowers to ONE batched
-    Pallas call per round: ``vmap``'s pallas batching rule lifts the 2-D
-    kernel by prepending a batch grid axis (equivalent to the explicit
+    with scipy.  ``init_prices`` (B, n) and ``warm`` (B,) thread last
+    round's price state per instance (see :class:`engine.MatchContext`).
+    With ``use_kernel`` the bid top-2 lowers to ONE batched Pallas call per
+    round: ``vmap``'s pallas batching rule lifts the 2-D kernel by
+    prepending a batch grid axis (equivalent to the explicit
     ``lap_bid_pallas_batched``, which parity tests pin against it).
     """
     if use_kernel is None:
         use_kernel = _auto_use_kernel(int(benefits.shape[-1]))
     return _auction_lap_batched_jit(
-        benefits, eps_min, max_iters=max_iters, use_kernel=use_kernel
+        benefits,
+        eps_min,
+        max_iters=max_iters,
+        use_kernel=use_kernel,
+        init_prices=init_prices,
+        warm=warm,
     )
+
+
+def _vmap_auction(
+    solver, benefits, eps_min, max_iters, use_kernel, init_prices, warm
+) -> AuctionResult:
+    """Shared vmap dispatch for the square and rectangular batched solvers
+    (with / without per-instance warm-start state)."""
+    if init_prices is None:
+        return jax.vmap(
+            lambda b: solver(b, eps_min, max_iters=max_iters, use_kernel=use_kernel)
+        )(benefits)
+    if warm is None:
+        warm = jnp.zeros(benefits.shape[0], bool)
+    return jax.vmap(
+        lambda b, p, w: solver(
+            b,
+            eps_min,
+            max_iters=max_iters,
+            use_kernel=use_kernel,
+            init_prices=p,
+            warm=w,
+        )
+    )(benefits, init_prices, warm)
 
 
 @functools.partial(jax.jit, static_argnames=("max_iters", "use_kernel"))
@@ -227,12 +370,68 @@ def _auction_lap_batched_jit(
     eps_min=None,
     max_iters: int = 20_000,
     use_kernel: bool = False,
+    init_prices: jax.Array | None = None,
+    warm: jax.Array | None = None,
 ) -> AuctionResult:
-    return jax.vmap(
-        lambda b: _auction_lap_jit(
-            b, eps_min, max_iters=max_iters, use_kernel=use_kernel
-        )
-    )(benefits)
+    return _vmap_auction(
+        _auction_lap_jit, benefits, eps_min, max_iters, use_kernel, init_prices, warm
+    )
+
+
+def auction_lap_rect_batched(
+    benefits: jax.Array,
+    max_iters: int = 20_000,
+    eps_min: float | jax.Array | None = None,
+    use_kernel: bool | None = None,
+    init_prices: jax.Array | None = None,
+    warm: jax.Array | None = None,
+) -> AuctionResult:
+    """vmap'd **rectangular** forward auction over (B, n, m) benefits,
+    n <= m.  Bids range only over the m real columns — the padded-instance
+    fix for skew packing graphs.  Same warm-start contract as
+    :func:`auction_lap_batched`; ``init_prices`` is (B, m)."""
+    if use_kernel is None:
+        use_kernel = _auto_use_kernel(int(benefits.shape[-1]))
+    return _auction_lap_rect_batched_jit(
+        benefits,
+        eps_min,
+        max_iters=max_iters,
+        use_kernel=use_kernel,
+        init_prices=init_prices,
+        warm=warm,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "use_kernel"))
+def _auction_lap_rect_batched_jit(
+    benefits: jax.Array,
+    eps_min=None,
+    max_iters: int = 20_000,
+    use_kernel: bool = False,
+    init_prices: jax.Array | None = None,
+    warm: jax.Array | None = None,
+) -> AuctionResult:
+    return _vmap_auction(
+        _auction_lap_rect_jit,
+        benefits,
+        eps_min,
+        max_iters,
+        use_kernel,
+        init_prices,
+        warm,
+    )
+
+
+def _pad_value(benefit: np.ndarray, finite: np.ndarray) -> float:
+    """Benefit value for padded / forbidden cells: strictly below anything a
+    real edge can contribute through an augmenting cycle.  Must scale with
+    the instance SIZE, not just the value span: displacing a pad edge can
+    rearrange every real edge of the assignment, and each rearranged edge
+    can swing the total by up to 2*span (see masked_square_benefit)."""
+    n, m = benefit.shape[-2], benefit.shape[-1]
+    size = max(n, m)
+    span = float(np.abs(benefit[finite]).max()) if finite.any() else 0.0
+    return -(2.0 * size * span + 1.0)
 
 
 def masked_square_benefit(
@@ -264,8 +463,7 @@ def masked_square_benefit(
     size = max(n, m)
     benefit = cost if maximize else -cost
     finite = np.isfinite(benefit)
-    span = float(np.abs(benefit[finite]).max()) if finite.any() else 0.0
-    pad = -(2.0 * size * span + 1.0)
+    pad = _pad_value(benefit, finite)
     sq = np.full((*cost.shape[:-2], size, size), pad, dtype=np.float64)
     sq[..., :n, :m] = np.where(finite, benefit, pad)
     if row_mask is not None:
@@ -275,6 +473,30 @@ def masked_square_benefit(
         cm = np.asarray(col_mask, bool)[..., None, :]  # (..., 1, m)
         sq[..., :, :m] = np.where(cm, sq[..., :, :m], pad)
     return sq
+
+
+def masked_rect_benefit(
+    cost: np.ndarray,
+    maximize: bool = False,
+    row_mask: np.ndarray | None = None,
+    col_mask: np.ndarray | None = None,
+) -> np.ndarray:
+    """Rectangular counterpart of :func:`masked_square_benefit`: same pad
+    rule (masked rows/cols and forbidden edges become a size-scaled
+    constant strictly below every real benefit), but the (..., n, m) shape
+    is preserved — no ``max(n, m)^2`` square embedding is ever allocated.
+    Callers drop pairs whose original entry is padded or non-finite, and
+    orient the instance so bidders are the short side (n <= m)."""
+    cost = np.asarray(cost, dtype=np.float64)
+    benefit = np.where(np.isfinite(cost), cost if maximize else -cost, 0.0)
+    finite = np.isfinite(cost)
+    pad = _pad_value(benefit, finite)
+    out = np.where(finite, benefit, pad)
+    if row_mask is not None:
+        out = np.where(np.asarray(row_mask, bool)[..., :, None], out, pad)
+    if col_mask is not None:
+        out = np.where(np.asarray(col_mask, bool)[..., None, :], out, pad)
+    return out
 
 
 def auction_assignment(

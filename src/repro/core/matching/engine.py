@@ -10,40 +10,73 @@ them behind a *backend registry*:
 
 ==================  =========================================================
 ``scipy``           per-instance ``scipy.optimize.linear_sum_assignment``
-                    (the paper-faithful reference; exact)
+                    (the paper-faithful reference; exact).  Rectangular
+                    instances solve natively (no square embedding).
 ``numpy``           per-instance :mod:`repro.core.matching.hungarian` (exact,
-                    no scipy dependency)
+                    no scipy dependency).  Rectangular instances solve
+                    natively.
 ``smallperm``       vectorised brute force over all k! permutations — exact
                     and ~100x faster than looped Hungarian for the k <= 6
                     node-pair instances of Algorithm 2 (k_l is 4-8 on every
-                    evaluated cluster)
+                    evaluated cluster).  Square-embedded.
 ``auction``         batched JAX auction (`auction_lap_batched`): one XLA
                     program for the whole fan-out; totals within the
                     documented ``n * eps`` bound of optimal (exact for
-                    integer-valued costs)
+                    integer-valued costs).  Warm-startable (below); n != m
+                    instances route to the native rectangular forward
+                    auction — bids range only over real columns and no
+                    ``max(n, m)^2`` square embedding is allocated.
 ``auction_kernel``  auction with the bid step lowered to the Pallas
                     ``lap_bid`` kernel (natively batched grid on TPU,
-                    interpret mode on CPU)
+                    interpret mode on CPU).  Same warm-start / rectangular
+                    semantics as ``auction``.
 ``auto``            ``smallperm`` when every instance is k <= 6, else
                     ``scipy`` when available, else ``numpy``
 ==================  =========================================================
 
 All backends accept **rectangular** instances, **row/col masks** (padding —
 so ragged batches solve in one call) and **forbidden edges** (non-finite
-cost entries).  Everything is normalised through one square *benefit*
-embedding (:func:`repro.core.matching.auction.masked_square_benefit`):
-padded and forbidden cells get a constant benefit strictly below every
-real benefit, which guarantees padding never displaces a real pair in an
-optimal (or ``n*eps``-optimal) assignment.  Results are post-processed
-uniformly: pairs landing on padded/forbidden cells are dropped, and —
-for the auction backends — instances whose auction did not converge
-within the iteration budget are transparently re-solved with scipy
-(per-instance convergence comes from the vmapped ``converged`` flag).
+cost entries).  Square and ``smallperm`` instances normalise through the
+square *benefit* embedding (:func:`~repro.core.matching.auction.
+masked_square_benefit`); rectangular instances keep their (n, m) shape
+(:func:`~repro.core.matching.auction.masked_rect_benefit`), oriented so
+bidders are the short side.  Padded and forbidden cells get a constant
+benefit strictly below every real benefit, which guarantees padding never
+displaces a real pair in an optimal (or ``n*eps``-optimal) assignment.
+Results are post-processed uniformly: pairs landing on padded/forbidden
+cells are dropped, and — for the auction backends — instances whose
+auction did not converge within the iteration budget (or, on the
+rectangular path, whose warm-start price certificate fails, see below) are
+transparently re-solved with an exact backend.
+
+**Warm starts** (:class:`MatchContext`): placements change little
+round-to-round (the temporal locality Tesserae's migration matching
+exploits, Fig. 2/14b), so the scheduler threads an opaque ``MatchContext``
+across rounds.  The engine keys cached state by ``(context_key, backend,
+orientation, batch/shape)`` and fingerprints every benefit row; on the
+next call
+
+* instances whose rows all match resume from last round's **prices** and
+  skip the epsilon-scaling schedule (one phase at ``eps_min``); if *every*
+  instance matches and a final assignment is cached, the solve is skipped
+  outright (a *memo hit* — zero bid iterations);
+* **changed rows reset their prices**: a mutated row invalidates the price
+  of the column it held last round, and that instance restarts the full
+  epsilon schedule (its other columns keep their prices as a head start).
+
+Optimality under warm starts: for square instances the ``S * eps_min``
+bound holds for ANY initial prices (both sides of the comparison telescope
+over the same full column set).  For rectangular instances it additionally
+requires that no unassigned column's final price exceeds an assigned
+column's — the engine checks exactly that a posteriori
+(:func:`_rect_bound_violation`) and re-solves the rare instance whose
+certificate fails, so every returned total carries the documented bound.
 
 Accuracy contract: with ``backend="auction"`` the returned per-instance
 total cost is within ``S * eps_min`` of the scipy optimum, where ``S`` is
-the embedded square size and ``eps_min`` defaults to ``1 / (S + 1)`` —
-i.e. *exact* whenever costs are integers (quantise first when exactness
+the solve size (the embedded square for n == m, the short side for
+rectangular instances) and ``eps_min`` defaults to ``1 / (S + 1)`` — i.e.
+*exact* whenever costs are integers (quantise first when exactness
 matters; migration costs are multiples of ``1/(2*num_gpus)`` and are
 scaled to integers by the caller).  The exact backends match scipy
 identically.
@@ -59,13 +92,17 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.matching import hungarian
-from repro.core.matching.auction import masked_square_benefit
+from repro.core.matching.auction import masked_rect_benefit, masked_square_benefit
 
 #: Largest instance size solved by brute-force permutation search (k! <= 720).
 SMALLPERM_MAX_K = 6
 
 #: Backends whose totals carry the n*eps approximation bound (float costs).
 APPROX_BACKENDS = ("auction", "auction_kernel")
+
+#: Backends that solve rectangular (n != m) instances natively, without the
+#: max(n, m)^2 square embedding.
+RECT_BACKENDS = ("scipy", "numpy", "auction", "auction_kernel")
 
 
 # --------------------------------------------------------------------------- #
@@ -79,7 +116,11 @@ class BatchedMatchResult:
     (-1 for unassigned / masked / padded rows).  ``total_cost[b]`` sums the
     ORIGINAL cost entries over assigned pairs.  ``converged[b]`` reports
     whether the primary backend solved the instance itself;
-    ``used_fallback[b]`` marks instances re-solved by the scipy fallback.
+    ``used_fallback[b]`` marks instances re-solved by the exact fallback.
+    ``bid_iters[b]`` counts auction bid rounds (0 for exact backends and
+    memo hits); ``warm[b]`` marks instances warm-started from a
+    :class:`MatchContext`; ``embedding`` records the solve geometry
+    (``"square"`` / ``"rect"`` / ``"none"`` for empty batches).
     """
 
     col_of: np.ndarray      # (B, N) int64
@@ -88,6 +129,9 @@ class BatchedMatchResult:
     used_fallback: np.ndarray  # (B,) bool
     backend: str
     wall_time_s: float = 0.0
+    bid_iters: Optional[np.ndarray] = None  # (B,) int64
+    warm: Optional[np.ndarray] = None       # (B,) bool
+    embedding: str = "square"
 
     def pairs(self, b: int) -> Tuple[np.ndarray, np.ndarray]:
         """(row_ind, col_ind) of instance ``b`` — scipy-style contract."""
@@ -96,20 +140,169 @@ class BatchedMatchResult:
 
 
 # --------------------------------------------------------------------------- #
+# Persistent warm-start state
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class _CtxEntry:
+    """Per-(key, shape) cached state from the previous solve."""
+
+    row_fp: np.ndarray          # (B, R) uint64 benefit-row fingerprints
+    prices: Optional[np.ndarray]  # (B, C) float32 final auction prices
+    col_solve: np.ndarray       # (B, R) int64 solve-space assignment
+    final_col_of: np.ndarray    # (B, N) int64 original-space assignment
+    converged: np.ndarray       # (B,) bool
+    used_fallback: np.ndarray   # (B,) bool
+
+
+class MatchContext:
+    """Opaque warm-start state for :func:`solve_lap_batched`.
+
+    The scheduler creates one and threads it across rounds; each engine
+    call site picks a ``context_key`` (e.g. ``"migration_pairs"``,
+    ``"packing"``) so different LAP families never collide.  The context
+    stores, per (key, backend, shape): benefit-row fingerprints, the final
+    auction **prices**, and the final assignment.  See the module
+    docstring for the warm-start / invalidation / memoisation semantics.
+
+    Thread-safety: none — one context per scheduler instance.
+    """
+
+    def __init__(self):
+        self._entries: Dict[tuple, _CtxEntry] = {}
+        self.stats: Dict[str, int] = {
+            "solves": 0,        # engine calls that consulted this context
+            "memo_hits": 0,     # calls skipped entirely (all rows matched)
+            "warm_instances": 0,
+            "cold_instances": 0,
+            "rows_invalidated": 0,
+            "cert_violations": 0,  # rect bound certificate failures
+        }
+
+    def get(self, key: tuple) -> Optional[_CtxEntry]:
+        return self._entries.get(key)
+
+    def store(self, key: tuple, entry: _CtxEntry) -> None:
+        """Keep ONE entry per (context_key, backend) family: warm starts
+        require an exact shape match anyway, so an older shape's state is
+        dead weight — and e.g. the packing family's (|placed|, |pending|)
+        shape changes with churn, which would otherwise grow the cache by
+        one entry per shape ever seen over a long-running scheduler."""
+        family = key[:2]
+        for k in [k for k in self._entries if k[:2] == family and k != key]:
+            del self._entries[k]
+        self._entries[key] = entry
+
+    def reset(self) -> None:
+        """Drop all cached state (prices, fingerprints, memoised results)."""
+        self._entries.clear()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+#: fixed odd multipliers for the row fingerprint (stable across processes).
+_FP_SEED = 0x5DEECE66D
+_FP_WEIGHTS: Dict[int, np.ndarray] = {}
+
+
+def _fp_weights(c: int) -> np.ndarray:
+    """Deterministic per-column multipliers, cached per column count (the
+    fingerprint runs on every context-ful engine call — the hot path)."""
+    w = _FP_WEIGHTS.get(c)
+    if w is None:
+        w = (
+            np.random.default_rng(_FP_SEED)
+            .integers(1, 2**63 - 1, size=c, dtype=np.uint64)
+            | np.uint64(1)
+        )
+        _FP_WEIGHTS[c] = w
+    return w
+
+
+def _row_fingerprints(benefit: np.ndarray) -> np.ndarray:
+    """Vectorised 64-bit fingerprint of every benefit row: (B, R, C) ->
+    (B, R) uint64.  A changed entry changes its row's fingerprint with
+    overwhelming probability; collisions only cost a stale warm start
+    (never a wrong answer for exact backends — memoised results are reused
+    only when ALL rows match, and the auction path re-verifies through its
+    convergence/cardinality/certificate checks)."""
+    bits = np.ascontiguousarray(benefit, dtype=np.float64).view(np.uint64)
+    c = bits.shape[-1]
+    fp = (bits * _fp_weights(c)).sum(axis=-1, dtype=np.uint64)  # wraps mod 2^64
+    return fp * np.uint64(0x9E3779B97F4A7C15) + np.uint64(c)
+
+
+def _assigned_cols(col_solve: np.ndarray, c: int) -> np.ndarray:
+    """(B, C) bool mask of columns holding an assignment.  Scatters only
+    the real (>= 0) entries — clipping -1 sentinels into index 0 would let
+    an unassigned row clobber column 0's flag."""
+    b = col_solve.shape[0]
+    assigned = np.zeros((b, c), bool)
+    bb, rr = np.nonzero(col_solve >= 0)
+    assigned[bb, col_solve[bb, rr]] = True
+    return assigned
+
+
+def _rect_bound_violation(prices: np.ndarray, col_solve: np.ndarray) -> np.ndarray:
+    """A-posteriori certificate for the rectangular ``n*eps`` bound.
+
+    At termination the auction satisfies eps-complementary slackness wrt
+    its FINAL prices, which yields (for any competing assignment S'):
+
+        total(sigma) >= total(S') - R*eps - [sum_{S'\\sigma} p - sum_{sigma\\S'} p]
+
+    The bracket is <= 0 for every S' iff no k largest unassigned-column
+    prices sum above the k smallest assigned-column prices (pairwise), so
+
+        D = max_k  sum_{i<k} (U_desc[i] - A_asc[i])  >  0
+
+    is the exact condition under which warm-start prices could have broken
+    the bound.  Cold rectangular solves start from all-equal prices, where
+    unassigned columns keep the (minimal) initial price and D <= 0 by
+    construction; warm starts can leave stale high prices on abandoned
+    columns, and those instances are flagged for an exact re-solve.
+    Instances with unassigned rows return False — the convergence /
+    cardinality checks already flag them.
+    """
+    b, c = prices.shape
+    r = col_solve.shape[1]
+    if r >= c or b == 0:
+        return np.zeros(b, bool)  # square: bound holds for any prices
+    prices = prices.astype(np.float64)
+    ok = col_solve >= 0
+    assigned = _assigned_cols(col_solve, c)
+    complete = ok.all(axis=1)
+    a_sorted = np.sort(np.where(assigned, prices, np.inf), axis=1)[:, :r]
+    u_sorted = -np.sort(np.where(assigned, np.inf, -prices), axis=1)[:, : c - r]
+    k = min(r, c - r)
+    diff = u_sorted[:, :k] - a_sorted[:, :k]
+    d_worst = np.cumsum(np.where(np.isfinite(diff), diff, 0.0), axis=1).max(axis=1)
+    # Tolerance matches the slack the parity gates grant on top of the
+    # documented S*eps_min bound (engine docstring / CI perf-smoke gate):
+    # a deficit the certificate waves through must be invisible to them.
+    # Erring tight is safe — a false positive only costs an exact
+    # re-solve; a false negative is a bound violation.  Cold solves have
+    # d_worst <= 0 exactly (unassigned columns keep the all-equal initial
+    # price), so the tight tolerance never penalises them.
+    return complete & (d_worst > 1e-6)
+
+
+# --------------------------------------------------------------------------- #
 # Backend registry
 # --------------------------------------------------------------------------- #
-#: name -> fn(benefit_sq (B,S,S), eps_min, max_iters) -> (col_of (B,S), converged (B,))
+#: name -> fn(benefit (B,R,C), eps_min, max_iters) -> (col_of (B,R), converged (B,))
 _BACKENDS: Dict[str, Callable] = {}
 
 
 def register_backend(name: str) -> Callable:
-    """Register a batched square-benefit solver under ``name``.
+    """Register a batched benefit solver under ``name``.
 
-    The callable receives the square-embedded benefit batch (maximise
-    convention, padding already applied) and returns per-row column
-    assignments plus a per-instance convergence flag.  Third-party
-    schedulers can plug in e.g. a Sinkhorn or GPU-resident solver without
-    touching any call site — backend choice stays one config knob.
+    The callable receives the benefit batch (maximise convention, padding
+    already applied; square-embedded unless the backend is listed in
+    ``RECT_BACKENDS``) and returns per-row column assignments plus a
+    per-instance convergence flag.  Third-party schedulers can plug in
+    e.g. a Sinkhorn or GPU-resident solver without touching any call site
+    — backend choice stays one config knob.
     """
 
     def deco(fn: Callable) -> Callable:
@@ -127,8 +320,8 @@ def available_backends() -> List[str]:
 def _solve_scipy(benefit: np.ndarray, eps_min=None, max_iters=None):
     from scipy.optimize import linear_sum_assignment as scipy_lsa
 
-    b, s, _ = benefit.shape
-    col_of = np.full((b, s), -1, dtype=np.int64)
+    b, r, _ = benefit.shape
+    col_of = np.full((b, r), -1, dtype=np.int64)
     for i in range(b):
         rows, cols = scipy_lsa(benefit[i], maximize=True)
         col_of[i, rows] = cols
@@ -137,8 +330,8 @@ def _solve_scipy(benefit: np.ndarray, eps_min=None, max_iters=None):
 
 @register_backend("numpy")
 def _solve_numpy(benefit: np.ndarray, eps_min=None, max_iters=None):
-    b, s, _ = benefit.shape
-    col_of = np.full((b, s), -1, dtype=np.int64)
+    b, r, _ = benefit.shape
+    col_of = np.full((b, r), -1, dtype=np.int64)
     for i in range(b):
         rows, cols = hungarian.linear_sum_assignment(benefit[i], maximize=True)
         col_of[i, rows] = cols
@@ -190,12 +383,51 @@ def _solve_auction_kernel(benefit: np.ndarray, eps_min=None, max_iters=20_000):
 def _pick_auto(size: int) -> str:
     if size <= SMALLPERM_MAX_K:
         return "smallperm"
+    return _pick_exact()
+
+
+def _pick_exact() -> str:
     try:
         import scipy.optimize  # noqa: F401
 
         return "scipy"
     except ImportError:  # pragma: no cover - scipy is installed here
         return "numpy"
+
+
+def _run_auction(
+    benefit: np.ndarray,
+    rect: bool,
+    eps_min,
+    max_iters: int,
+    use_kernel: bool,
+    init_prices: Optional[np.ndarray],
+    warm: Optional[np.ndarray],
+):
+    """Dispatch a (possibly warm-started) auction solve; returns
+    (col_of (B, R), converged (B,), prices (B, C), iters (B,))."""
+    import jax.numpy as jnp
+
+    from repro.core.matching.auction import (
+        auction_lap_batched,
+        auction_lap_rect_batched,
+    )
+
+    solver = auction_lap_rect_batched if rect else auction_lap_batched
+    res = solver(
+        jnp.asarray(benefit, jnp.float32),
+        max_iters=max_iters,
+        eps_min=eps_min,
+        use_kernel=use_kernel,
+        init_prices=None if init_prices is None else jnp.asarray(init_prices),
+        warm=None if warm is None else jnp.asarray(warm),
+    )
+    return (
+        np.asarray(res.col_of, np.int64),
+        np.asarray(res.converged, bool),
+        np.asarray(res.prices, np.float32),
+        np.asarray(res.iters, np.int64),
+    )
 
 
 # --------------------------------------------------------------------------- #
@@ -210,6 +442,8 @@ def solve_lap_batched(
     backend: str = "auto",
     eps_min: Optional[float] = None,
     max_iters: int = 20_000,
+    context: Optional[MatchContext] = None,
+    context_key: str = "default",
 ) -> BatchedMatchResult:
     """Solve a batch of (rectangular, masked) LAPs with one backend call.
 
@@ -223,7 +457,13 @@ def solve_lap_batched(
       eps_min: auction final epsilon (default ``1/(S+1)``; the auction
         total is within ``S*eps_min`` of optimal — exact for integer costs).
       max_iters: auction bid-round budget; instances that exhaust it fall
-        back to scipy (tracked per instance via ``used_fallback``).
+        back to an exact solver (tracked per instance via ``used_fallback``).
+      context: optional :class:`MatchContext` carrying last round's prices,
+        fingerprints and assignments — warm-starts the auction backends and
+        memoises identical re-solves for every backend.
+      context_key: namespace inside ``context`` (one per LAP family, e.g.
+        ``"migration_pairs"`` vs ``"packing"``), so unrelated call sites
+        never share price state.
     """
     t0 = time.perf_counter()
     costs = np.asarray(costs, dtype=np.float64)
@@ -251,22 +491,117 @@ def solve_lap_batched(
             np.zeros(b, bool),
             backend,
             time.perf_counter() - t0,
+            np.zeros(b, np.int64),
+            np.zeros(b, bool),
+            "none",
         )
 
-    benefit = masked_square_benefit(costs, maximize, row_mask, col_mask)
-    col_of_sq, converged = _BACKENDS[backend](benefit, eps_min, max_iters)
+    approx = backend in APPROX_BACKENDS
+    rect = n != m and backend in RECT_BACKENDS
+    transposed = rect and n > m
+    if rect:
+        benefit_nm = masked_rect_benefit(costs, maximize, row_mask, col_mask)
+        oriented = (
+            np.ascontiguousarray(np.swapaxes(benefit_nm, 1, 2))
+            if transposed
+            else benefit_nm
+        )
+    else:
+        benefit_nm = oriented = masked_square_benefit(costs, maximize, row_mask, col_mask)
+    r, c = oriented.shape[1:]
 
-    col_of, total, complete = _extract(costs, col_of_sq, row_mask, col_mask)
+    # ---- context lookup: memoisation + warm-start prices ---------------- #
+    fp = warm = init_prices = None
+    entry = None
+    key = (context_key, backend, maximize, b, r, c, transposed, eps_min)
+    if context is not None:
+        context.stats["solves"] += 1
+        # Fingerprints follow the CALLER's mutation granularity: original
+        # rows.  For transposed rectangular instances an original row is
+        # one oriented COLUMN, so a changed row later invalidates exactly
+        # that column's price instead of every bidder fingerprint.
+        fp = _row_fingerprints(benefit_nm)
+        entry = context.get(key)
+    if entry is not None:
+        unchanged = fp == entry.row_fp  # (B, N) original rows
+        warm = unchanged.all(axis=1)
+        if warm.all():
+            # Every benefit row matches the cached solve: reuse the stored
+            # assignment outright.  Totals are recomputed from the (equal,
+            # modulo a 2^-64 fingerprint collision) costs for uniformity.
+            context.stats["memo_hits"] += 1
+            context.stats["warm_instances"] += b
+            col_of, total, _ = _extract(costs, entry.final_col_of, row_mask, col_mask)
+            return BatchedMatchResult(
+                col_of,
+                total,
+                entry.converged.copy(),
+                entry.used_fallback.copy(),
+                backend,
+                time.perf_counter() - t0,
+                np.zeros(b, np.int64),
+                warm,
+                "rect" if rect else "square",
+            )
+        if approx and entry.prices is not None:
+            # Changed rows reset their prices; everything else carries
+            # over as a head start.
+            init_prices = entry.prices.copy()
+            if transposed:
+                # original row i IS oriented column i: reset it directly
+                stale = ~unchanged  # (B, C)
+                init_prices[stale] = 0.0
+            else:
+                # a changed row taints the column it held last round
+                stale = (~unchanged) & (entry.col_solve >= 0)
+                bb, rr = np.nonzero(stale)
+                init_prices[bb, entry.col_solve[bb, rr]] = 0.0
+            context.stats["rows_invalidated"] += int(stale.sum())
+        else:
+            # exact backends carry no prices: short of a full memo hit
+            # they re-solve from scratch, so nothing is warm-STARTED
+            warm = None
+        if warm is not None:
+            context.stats["warm_instances"] += int(warm.sum())
+            context.stats["cold_instances"] += int(b - warm.sum())
+        else:
+            context.stats["cold_instances"] += b
+    elif context is not None:
+        context.stats["cold_instances"] += b
+
+    # ---- primary solve -------------------------------------------------- #
+    bid_iters = np.zeros(b, np.int64)
+    prices = None
+    if approx:
+        col_solve, converged, prices, bid_iters = _run_auction(
+            oriented,
+            rect,
+            eps_min,
+            max_iters,
+            use_kernel=(backend == "auction_kernel"),
+            init_prices=init_prices,
+            warm=warm,
+        )
+    else:
+        col_solve, converged = _BACKENDS[backend](oriented, eps_min, max_iters)
+
+    col_full = _to_orig_cols(col_solve, transposed, n, m)
+    col_of, total, complete = _extract(costs, col_full, row_mask, col_mask)
     expect = _expected_cardinality(costs, row_mask, col_mask)
     needs_fallback = (~converged) | (complete < expect)
+    if approx and rect:
+        viol = _rect_bound_violation(prices, col_solve)
+        needs_fallback |= viol
+        if context is not None:
+            context.stats["cert_violations"] += int(viol.sum())
     used_fallback = np.zeros(b, bool)
-    if needs_fallback.any() and backend in APPROX_BACKENDS:
-        fb = _pick_auto(size)
+    if needs_fallback.any() and approx:
+        fb = _pick_exact() if rect else _pick_auto(size)
         idx = np.nonzero(needs_fallback)[0]
-        fb_col, _ = _BACKENDS[fb](benefit[idx], None, None)
+        fb_solve, _ = _BACKENDS[fb](oriented[idx], None, None)
         fb_res, fb_total, fb_complete = _extract(
             costs[idx],
-            fb_col,
+            _to_orig_cols(fb_solve, transposed, n, m),
             None if row_mask is None else row_mask[idx],
             None if col_mask is None else col_mask[idx],
         )
@@ -289,13 +624,62 @@ def solve_lap_batched(
         total[sel] = fb_total[adopt]
         used_fallback[sel] = True
 
+    if context is not None:
+        if rect and prices is not None:
+            # Price repair before caching: a column with no owner is
+            # available again next round, so its stale price is reset to
+            # the cold-start level.  This keeps the stored prices close to
+            # the all-equal-unassigned condition the rectangular bound
+            # wants, so the next warm solve rarely trips the certificate
+            # (which always runs on the *actual* final prices, above).
+            prices = np.where(
+                _assigned_cols(col_solve, c), prices, 0.0
+            ).astype(np.float32)
+        context.store(
+            key,
+            _CtxEntry(
+                row_fp=fp,
+                prices=prices,
+                col_solve=col_solve,
+                final_col_of=col_of.copy(),
+                converged=converged.copy(),
+                used_fallback=used_fallback.copy(),
+            ),
+        )
+
     return BatchedMatchResult(
-        col_of, total, converged, used_fallback, backend, time.perf_counter() - t0
+        col_of,
+        total,
+        converged,
+        used_fallback,
+        backend,
+        time.perf_counter() - t0,
+        bid_iters,
+        np.zeros(b, bool) if warm is None else warm,
+        "rect" if rect else "square",
     )
 
 
+def _to_orig_cols(
+    col_solve: np.ndarray, transposed: bool, n: int, m: int
+) -> np.ndarray:
+    """Map solve-space assignments back to original row space.
+
+    ``col_solve`` is (B, R) over the oriented instance.  Untransposed
+    solves already index original columns; transposed (n > m rectangular)
+    solves assign original *rows* to the m bidding columns and must be
+    inverted (vectorised scatter)."""
+    if not transposed:
+        return col_solve
+    b = col_solve.shape[0]
+    col_of = np.full((b, n), -1, np.int64)
+    bb, jj = np.nonzero((col_solve >= 0) & (col_solve < n))
+    col_of[bb, col_solve[bb, jj]] = jj
+    return col_of
+
+
 def _extract(costs, col_of_sq, row_mask, col_mask):
-    """Map square-embedding assignments back to the original instances."""
+    """Map solver assignments back to the original instances."""
     b, n, m = costs.shape
     cols = col_of_sq[:, :n].astype(np.int64)  # ignore padded rows
     valid = (cols >= 0) & (cols < m)
@@ -322,17 +706,25 @@ def solve_lap(
     cost: np.ndarray,
     maximize: bool = False,
     backend: str = "auto",
+    context: Optional[MatchContext] = None,
+    context_key: str = "default",
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Single-instance LAP with the same backend knob as the batched engine.
 
-    Drop-in superset of ``hungarian.solve_lap``: ``auto``/``numpy``/
-    ``scipy`` keep the original exact dispatch (no square-embedding
-    overhead); the auction backends route through the batched engine.
+    Drop-in superset of ``hungarian.solve_lap``: without a ``context``,
+    ``auto``/``numpy``/``scipy`` keep the original exact dispatch (no
+    embedding overhead) and the auction backends route through the batched
+    engine.  With a ``context``, EVERY backend routes through the engine so
+    identical consecutive solves memo-hit and the auction carries prices.
     Returns scipy-style ``(row_ind, col_ind)``.
     """
-    if backend in ("auto", "numpy", "scipy"):
+    if context is None and backend in ("auto", "numpy", "scipy"):
         return hungarian.solve_lap(cost, maximize=maximize, backend=backend)
     res = solve_lap_batched(
-        np.asarray(cost)[None], maximize=maximize, backend=backend
+        np.asarray(cost)[None],
+        maximize=maximize,
+        backend=backend,
+        context=context,
+        context_key=context_key,
     )
     return res.pairs(0)

@@ -40,7 +40,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core.cluster import EMPTY, MAX_PACK, PlacementPlan, count_migrations
-from repro.core.matching import solve_lap, solve_lap_batched
+from repro.core.matching import MatchContext, solve_lap, solve_lap_batched
 from repro.core.matching.engine import APPROX_BACKENDS
 
 
@@ -141,6 +141,7 @@ def plan_migration(
     num_gpus_of: Dict[int, int],
     algorithm: str = "node",  # "node" (Alg 2+3) | "flat" (Alg 5) | "none"
     backend: str = "auto",
+    context: Optional[MatchContext] = None,
 ) -> MigrationResult:
     """Compute the relabelling that minimises migrations, then apply it to
     the *full* new plan (jobs unique to one round are excluded from the cost
@@ -149,6 +150,11 @@ def plan_migration(
     ``backend`` is any engine backend (``auto`` / ``numpy`` / ``scipy`` /
     ``auction`` / ``auction_kernel``) — one knob selects the solver for
     both the node-pair fan-out and the final node-level match.
+    ``context`` threads the scheduler's :class:`MatchContext` across
+    rounds: node pairs whose cost rows did not change since the previous
+    round warm-start from last round's auction prices (placements change
+    little round-to-round, so most do), and a fully-unchanged fan-out
+    memo-hits without solving at all.
     """
     t0 = time.perf_counter()
     cluster = prev.cluster
@@ -169,7 +175,10 @@ def plan_migration(
         flat_j = pj.slots.reshape(-1, MAX_PACK)
         cost = pairwise_migration_cost(flat_i, flat_j, weights)
         rows, cols = solve_lap(
-            cost * _cost_scale(num_gpus_of, backend), backend=backend
+            cost * _cost_scale(num_gpus_of, backend),
+            backend=backend,
+            context=context,
+            context_key="migration_flat",
         )
         gpu_of_logical = np.empty(cluster.num_gpus, dtype=np.int64)
         gpu_of_logical[cols] = rows
@@ -205,12 +214,20 @@ def plan_migration(
     )
     scale = _cost_scale(num_gpus_of, backend)
     res = solve_lap_batched(
-        all_costs.reshape(kc * kc, kl, kl) * scale, backend=backend
+        all_costs.reshape(kc * kc, kl, kl) * scale,
+        backend=backend,
+        context=context,
+        context_key="migration_pairs",
     )
     node_cost = (res.total_cost / scale).reshape(kc, kc)
     # res.col_of[b, u] = v  ->  gpu_assign[.., v] = u
     gpu_assign = np.argsort(res.col_of, axis=-1).reshape(kc, kc, kl)
-    n_rows, n_cols = solve_lap(node_cost * scale, backend=backend)
+    n_rows, n_cols = solve_lap(
+        node_cost * scale,
+        backend=backend,
+        context=context,
+        context_key="migration_node",
+    )
     node_assignment = np.empty(kc, dtype=np.int64)
     node_assignment[n_cols] = n_rows  # logical node l -> physical node k
 

@@ -13,7 +13,11 @@ Implementation note: we embed the bipartite graph in a rectangular benefit
 matrix with 0 for missing edges; a zero-weight "match" is interpreted as
 *no packing* (packing with combined weight 0 is never beneficial since any
 positive weight adds throughput for a job that would otherwise idle in the
-queue).
+queue).  The matrix is typically very skew (|placed| >> |pending| on a
+busy cluster); the engine's rectangular path solves it without the
+``max(n, m)^2`` square embedding, and a :class:`MatchContext` carried by
+the scheduler warm-starts / memoises consecutive rounds whose graph barely
+changed.
 """
 
 from __future__ import annotations
@@ -25,7 +29,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.jobs import JobState
-from repro.core.matching import solve_lap
+from repro.core.matching import MatchContext, solve_lap_batched
 from repro.core.profiler import ThroughputProfile
 
 
@@ -96,14 +100,18 @@ def pack_jobs(
     optimize_strategy: bool = True,
     backend: str = "auto",
     packed_ok=None,
+    context: Optional[MatchContext] = None,
 ) -> PackingResult:
     """Algorithm 4.
 
     ``backend`` is any matching-engine backend; the rectangular max-weight
-    matching dispatches through :func:`repro.core.matching.solve_lap`, so
-    the same config knob that batches migration LAPs also selects the
-    packing solver (``auction`` is near-optimal within ``n*eps`` on these
-    float throughput weights; the default ``auto`` stays exact).
+    matching dispatches through
+    :func:`repro.core.matching.solve_lap_batched`, so the same config knob
+    that batches migration LAPs also selects the packing solver
+    (``auction`` is near-optimal within ``n*eps`` on these float
+    throughput weights; the default ``auto`` stays exact).  ``context``
+    threads the scheduler's :class:`MatchContext` so an unchanged packing
+    graph memo-hits and a slightly-changed one warm-starts.
     """
     t0 = time.perf_counter()
     if not placed or not pending:
@@ -112,7 +120,13 @@ def pack_jobs(
     num_edges = int((w > 0).sum())
     if num_edges == 0:
         return PackingResult({}, {}, 0.0, time.perf_counter() - t0, 0)
-    rows, cols = solve_lap(w, maximize=True, backend=backend)
+    rows, cols = solve_lap_batched(
+        w[None],
+        maximize=True,
+        backend=backend,
+        context=context,
+        context_key="packing",
+    ).pairs(0)
     matches: Dict[int, int] = {}
     strategies: Dict[int, str] = {}
     total = 0.0

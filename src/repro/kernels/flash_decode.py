@@ -11,8 +11,10 @@ and the K/V BlockSpec *index map* routes head h to its KV group h // (H/KV)
 — the repeated-KV tensor is never built.
 
 Ring-buffer semantics: ``valid_len`` (SMEM scalar) masks cache slots beyond
-the valid prefix, matching the model's ``kv_valid_len`` mask.  Validated
-against ``ref.flash_decode`` in interpret mode (CPU).
+the valid prefix, matching the model's ``kv_valid_len`` mask — via the
+shared ragged-edge helper :mod:`repro.kernels.tile_mask` (same code path
+the ``lap_bid`` kernels use for their column padding).  Validated against
+``ref.flash_decode`` in interpret mode (CPU).
 """
 
 from __future__ import annotations
@@ -23,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tile_mask import mask_ragged_cols
 
 NEG_INF = -1e30
 
@@ -61,8 +65,7 @@ def _decode_kernel(
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )  # (1, BK)
-        cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(cols < vl, s, NEG_INF)
+        s = mask_ragged_cols(s, ki * block_k, vl, NEG_INF)
         m_prev = m_ref[...]
         m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
         p = jnp.exp(s - m_cur)                              # (1, BK)

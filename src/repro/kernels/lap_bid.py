@@ -14,6 +14,13 @@ minor (sequential on TPU), so each row-block keeps a running (top-1, arg,
 top-2) carry in VMEM scratch across column tiles.  Blocks are 128-aligned
 for the VPU lanes; a (128, 512) f32 tile is 256 KiB — far under the ~16 MiB
 v5e VMEM budget even with double buffering.
+
+Padding-free bids: the grid covers only the *real* columns (rounded up to
+one tile); the ragged tile edge is masked **in-kernel** against global
+column ids via :mod:`repro.kernels.tile_mask` (shared with
+``flash_decode``), so the host-side padding is plain ``jnp.pad`` zeros —
+no NEG_INF-filled copy of the benefit matrix is ever materialised, and a
+rectangular (n, m) instance costs O(n * m) bid work, never O(max(n, m)^2).
 """
 
 from __future__ import annotations
@@ -24,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tile_mask import mask_ragged_cols, tile_col_ids
 
 NEG_INF = -1e30
 
@@ -48,7 +57,7 @@ def _block_dims(n: int, m: int) -> tuple[int, int]:
 
 def _tile_top2(vals, col_offset):
     """(best, arg, second) of one (BR, BC) tile, args in global columns."""
-    col_ids = jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1) + col_offset
+    col_ids = tile_col_ids(vals.shape, col_offset)
     tile_best = jnp.max(vals, axis=1, keepdims=True)  # (BR, 1)
     tile_arg = (jnp.argmax(vals, axis=1) + col_offset).astype(jnp.int32)[:, None]
     masked = jnp.where(col_ids == tile_arg, NEG_INF, vals)
@@ -78,9 +87,11 @@ def _bid_kernel(
     second_ref,  # (BR, 1) out
     *,
     block_cols: int,
+    valid_cols: int,
 ):
     ci = pl.program_id(1)
-    summary = _tile_top2(a_ref[...] - p_ref[...], ci * block_cols)
+    vals = mask_ragged_cols(a_ref[...] - p_ref[...], ci * block_cols, valid_cols, NEG_INF)
+    summary = _tile_top2(vals, ci * block_cols)
 
     @pl.when(ci == 0)
     def _init():
@@ -102,6 +113,7 @@ def _bid_kernel_batched(
     second_ref,  # (1, BR, 1) out
     *,
     block_cols: int,
+    valid_cols: int,
 ):
     """Batched variant of :func:`_bid_kernel` (same tile summary + merge).
 
@@ -114,7 +126,8 @@ def _bid_kernel_batched(
     parity oracle for that lifted path.
     """
     ci = pl.program_id(2)
-    summary = _tile_top2(a_ref[0] - p_ref[0], ci * block_cols)
+    vals = mask_ragged_cols(a_ref[0] - p_ref[0], ci * block_cols, valid_cols, NEG_INF)
+    summary = _tile_top2(vals, ci * block_cols)
 
     @pl.when(ci == 0)
     def _init():
@@ -139,12 +152,13 @@ def lap_bid_pallas_batched(a: jax.Array, prices: jax.Array, interpret: bool = Tr
     br, bc = _block_dims(n, m)
     n_pad = (n + br - 1) // br * br
     m_pad = (m + bc - 1) // bc * bc
-    a_p = jnp.full((b, n_pad, m_pad), NEG_INF, a.dtype).at[:, :n, :m].set(a)
-    p_p = jnp.zeros((b, 1, m_pad), a.dtype).at[:, 0, :m].set(prices)
+    # zero padding only — the ragged edge is masked in-kernel by column id
+    a_p = jnp.pad(a, ((0, 0), (0, n_pad - n), (0, m_pad - m)))
+    p_p = jnp.pad(prices, ((0, 0), (0, m_pad - m)))[:, None, :]
 
     grid = (b, n_pad // br, m_pad // bc)
     best_v, best_j, second = pl.pallas_call(
-        functools.partial(_bid_kernel_batched, block_cols=bc),
+        functools.partial(_bid_kernel_batched, block_cols=bc, valid_cols=m),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, br, bc), lambda bi, ri, ci: (bi, ri, ci)),
@@ -169,21 +183,20 @@ def lap_bid_pallas_batched(a: jax.Array, prices: jax.Array, interpret: bool = Tr
 def lap_bid_pallas(a: jax.Array, prices: jax.Array, interpret: bool = True):
     """Returns (best_v, best_j, second_v), each (n,).
 
-    Pads rows to BLOCK_ROWS and cols to BLOCK_COLS with NEG_INF (padding
-    never wins; callers guarantee m >= 2 real columns).
+    ``a`` may be rectangular (n, m); the grid covers only the real columns
+    (rounded up to one tile) and the ragged edge is masked in-kernel, so
+    padding is plain zeros (callers guarantee m >= 2 real columns).
     """
     n, m = a.shape
     br, bc = _block_dims(n, m)
     n_pad = (n + br - 1) // br * br
     m_pad = (m + bc - 1) // bc * bc
-    a_p = jnp.full((n_pad, m_pad), NEG_INF, a.dtype).at[:n, :m].set(a)
-    # padded columns are guarded by the NEG_INF fill of `a_p` alone; their
-    # price entries are zero and contribute nothing.
-    p_p = jnp.zeros((1, m_pad), a.dtype).at[0, :m].set(prices)
+    a_p = jnp.pad(a, ((0, n_pad - n), (0, m_pad - m)))
+    p_p = jnp.pad(prices, (0, m_pad - m))[None, :]
 
     grid = (n_pad // br, m_pad // bc)
     best_v, best_j, second = pl.pallas_call(
-        functools.partial(_bid_kernel, block_cols=bc),
+        functools.partial(_bid_kernel, block_cols=bc, valid_cols=m),
         grid=grid,
         in_specs=[
             pl.BlockSpec((br, bc), lambda ri, ci: (ri, ci)),

@@ -1,0 +1,44 @@
+"""Shared ragged-edge tile masking for Pallas kernels.
+
+Several kernels stream a logically-ragged array through fixed-size VMEM
+tiles: ``flash_decode`` masks cache slots beyond ``valid_len`` and the
+``lap_bid`` family masks benefit columns beyond the instance's real column
+count.  Both used to hand-roll the same ``broadcasted_iota`` + ``where``
+dance (and ``lap_bid`` additionally *materialised* a NEG_INF-filled padded
+copy of its input in HBM).  This module is the one implementation both
+kernels now share:
+
+* :func:`tile_col_ids` — global column ids of one (..., BC) tile given the
+  tile's column offset (TPU requires >= 2-D iota, which this wraps).
+* :func:`mask_ragged_cols` — replace entries whose global column id is
+  ``>= valid_cols`` with ``fill``.  ``valid_cols`` may be a static Python
+  int (shape-derived, as in ``lap_bid``) or a traced scalar read from SMEM
+  (runtime occupancy, as in ``flash_decode``'s ring buffer).
+
+Because masking happens *inside* the kernel against column ids, callers can
+pad their inputs with plain zeros (``jnp.pad``) instead of materialising a
+sentinel-filled copy — the padding-free-bids contract of the rectangular
+auction path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tile_col_ids(shape: tuple, col_offset) -> jax.Array:
+    """Global column ids for a tile of ``shape`` whose minor (last) axis
+    starts at ``col_offset``.  Uses ``broadcasted_iota`` (>= 2-D on TPU)."""
+    return jax.lax.broadcasted_iota(jnp.int32, shape, len(shape) - 1) + col_offset
+
+
+def mask_ragged_cols(x: jax.Array, col_offset, valid_cols, fill) -> jax.Array:
+    """Mask the ragged column edge of one tile.
+
+    ``x``: (..., BC) tile whose minor axis holds global columns
+    ``[col_offset, col_offset + BC)``.  Entries at global column id
+    ``>= valid_cols`` become ``fill``; the rest pass through unchanged.
+    ``valid_cols`` may be static (int) or traced (SMEM scalar).
+    """
+    return jnp.where(tile_col_ids(x.shape, col_offset) < valid_cols, x, fill)

@@ -185,3 +185,75 @@ class TestSimulator:
             profile,
         )
         assert all(s.finished for s in res.jobs.values())
+
+
+class TestStartupDebtSemantics:
+    """Regression pins for the cold-start / resume / migration debt model
+    (the former dead conditional in ``Simulator._advance_round``)."""
+
+    def _trace(self, iters=(5000.0,)):
+        from repro.core.jobs import JobSpec
+
+        return [
+            JobSpec(job_id=i, model="resnet50", num_gpus=1,
+                    total_iters=it, arrival_time=0.0)
+            for i, it in enumerate(iters)
+        ]
+
+    def test_cold_start_pays_startup_fraction(self, profile):
+        from repro.core.jobs import migration_overhead_s
+
+        cluster = ClusterSpec(1, 1)
+        sched = TesseraeScheduler(
+            cluster, TiresiasPolicy(profile), profile, enable_packing=False
+        )
+        res = _sim(cluster, self._trace(), sched, profile)
+        job = res.jobs[0]
+        # first progress happens only after the cold-start debt is paid
+        assert job.first_run_time == pytest.approx(
+            0.5 * migration_overhead_s("resnet50")
+        )
+
+    def test_resume_fraction_default_matches_seed_semantics(self, profile):
+        """``resume_fraction=None`` must behave exactly like the seed
+        (resume charged at ``startup_fraction``)."""
+        cluster = ClusterSpec(1, 1)
+        mk = lambda: TesseraeScheduler(
+            cluster, TiresiasPolicy(profile), profile, enable_packing=False
+        )
+        trace = self._trace((25000.0, 5000.0))
+        r_default = _sim(cluster, trace, mk(), profile)
+        r_explicit = _sim(cluster, trace, mk(), profile, resume_fraction=0.5)
+        assert np.allclose(sorted(r_default.jcts), sorted(r_explicit.jcts))
+
+    def test_resume_fraction_distinct_from_cold_start(self, profile):
+        """A long job demotes past the Tiresias queue threshold, yields the
+        single GPU to the short job, then RESUMES: making resumes free must
+        shorten its JCT while a pricier resume must lengthen it (cold-start
+        debt unchanged in all three runs)."""
+        cluster = ClusterSpec(1, 1)
+        mk = lambda: TesseraeScheduler(
+            cluster, TiresiasPolicy(profile), profile, enable_packing=False
+        )
+        trace = self._trace((25000.0, 5000.0))
+        base = _sim(cluster, trace, mk(), profile)
+        free = _sim(cluster, trace, mk(), profile, resume_fraction=0.0)
+        costly = _sim(cluster, trace, mk(), profile, resume_fraction=1.0)
+        # the long job (id 0) is the one that resumes
+        assert free.jobs[0].finish_time < base.jobs[0].finish_time
+        assert base.jobs[0].finish_time < costly.jobs[0].finish_time
+        # the short job never resumes: identical across configs
+        assert free.jobs[1].finish_time == costly.jobs[1].finish_time
+
+    def test_speculative_prewarm_does_not_change_outcomes(self, profile):
+        cluster = ClusterSpec(2, 4)
+        trace = shockwave_trace(num_jobs=15, seed=7, profile=profile)
+        mk = lambda: TesseraeScheduler(cluster, TiresiasPolicy(profile), profile)
+        plain = _sim(cluster, trace, mk(), profile)
+        sched = mk()
+        spec = _sim(cluster, trace, sched, profile, speculative_prewarm=True)
+        assert np.allclose(sorted(plain.jcts), sorted(spec.jcts))
+        assert plain.total_migrations == spec.total_migrations
+        # the context actually absorbed the speculative solves
+        assert sched.match_context.stats["solves"] > 0
+        assert sched.match_context.stats["memo_hits"] > 0

@@ -1,0 +1,92 @@
+"""Shared ragged-edge tile masking helper: unit tests + cross-kernel parity
+on padding-edge shapes (the helper is the one implementation behind both
+``flash_decode``'s valid-length mask and the ``lap_bid`` family's
+padding-free column masking)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.tile_mask import mask_ragged_cols, tile_col_ids
+
+
+class TestHelper:
+    def test_col_ids_offset(self):
+        ids = np.asarray(tile_col_ids((2, 4), 8))
+        np.testing.assert_array_equal(ids, [[8, 9, 10, 11]] * 2)
+
+    @pytest.mark.parametrize("valid", [0, 1, 3, 4])
+    def test_mask_static_valid(self, valid):
+        x = jnp.arange(8.0).reshape(2, 4)
+        got = np.asarray(mask_ragged_cols(x, 0, valid, -1.0))
+        want = np.array(x)
+        want[:, valid:] = -1.0
+        np.testing.assert_array_equal(got, want)
+
+    def test_mask_with_tile_offset(self):
+        # tile holding global columns [4, 8) with 6 valid columns total:
+        # local columns 0-1 stay, 2-3 are masked
+        x = jnp.ones((3, 4))
+        got = np.asarray(mask_ragged_cols(x, 4, 6, 0.0))
+        np.testing.assert_array_equal(got[:, :2], 1.0)
+        np.testing.assert_array_equal(got[:, 2:], 0.0)
+
+    def test_traced_valid_len(self):
+        # valid_cols may be a traced scalar (the flash_decode SMEM path)
+        def f(x, vl):
+            return mask_ragged_cols(x, 0, vl, -9.0)
+
+        got = np.asarray(jax.jit(f)(jnp.ones((2, 5)), jnp.asarray(3)))
+        assert (got[:, :3] == 1.0).all() and (got[:, 3:] == -9.0).all()
+
+    def test_3d_tile(self):
+        x = jnp.ones((1, 2, 6))
+        got = np.asarray(mask_ragged_cols(x, 0, 4, 0.0))
+        assert got[0, :, :4].all() and not got[0, :, 4:].any()
+
+
+class TestSharedEdgeParity:
+    """The two consumers must agree with their pure-jnp oracles on shapes
+    that land exactly on / one off the tile boundaries."""
+
+    @pytest.mark.parametrize("m", [127, 128, 129, 511, 512, 513])
+    def test_lap_bid_padding_edges(self, m):
+        from repro.core.matching.auction import _top2
+        from repro.kernels.lap_bid import lap_bid_pallas
+
+        rng = np.random.default_rng(m)
+        a = jnp.asarray(rng.normal(size=(9, m)), jnp.float32)
+        p = jnp.asarray(rng.normal(size=(m,)), jnp.float32)
+        bv, bj, sv = lap_bid_pallas(a, p, interpret=True)
+        rv, rj, rsv = _top2(a - p[None, :])
+        np.testing.assert_allclose(bv, rv, rtol=1e-6)
+        np.testing.assert_array_equal(bj, rj)
+        np.testing.assert_allclose(sv, rsv, rtol=1e-6)
+
+    @pytest.mark.parametrize("s", [511, 512, 513, 1023])
+    def test_flash_decode_valid_len_edges(self, s):
+        from repro.kernels import ref
+        from repro.kernels.flash_decode import flash_decode_pallas
+
+        rng = np.random.default_rng(s)
+        q = jnp.asarray(rng.normal(size=(1, 4, 64)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, s, 2, 64)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, s, 2, 64)), jnp.float32)
+        for vl in [1, s // 2, s]:
+            got = flash_decode_pallas(q, k, v, jnp.asarray(vl), interpret=True)
+            want = ref.flash_decode(q, k, v, jnp.asarray(vl))
+            np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_zero_padding_never_wins_bid(self):
+        """The padding-free contract: zero-padded columns past the ragged
+        edge must never appear as best/second even when every real benefit
+        is strictly negative (zeros would otherwise win)."""
+        from repro.kernels.lap_bid import lap_bid_pallas
+
+        a = jnp.full((4, 130), -5.0)  # pads to 512 cols with zeros
+        p = jnp.zeros((130,))
+        bv, bj, sv = lap_bid_pallas(a, p, interpret=True)
+        assert (np.asarray(bj) < 130).all()
+        np.testing.assert_allclose(bv, -5.0)
+        np.testing.assert_allclose(sv, -5.0)
