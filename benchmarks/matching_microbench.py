@@ -33,6 +33,25 @@ Three parts:
    if any auction fails to converge, any round loses scipy parity, or the
    warm arm does not strictly reduce total bid iterations (timings are
    recorded but never gated).
+
+4. The **identity-keyed churn replay** (``--churn``): an arrival/departure
+   rate sweep where LAP instances JOIN and LEAVE the batch every round
+   (the batch size itself jitters — job churn, not just cost mutation),
+   replayed through three arms: *identity* (persistent context +
+   caller-supplied instance ids, this PR), *shape_keyed* (the PR-2
+   emulation: positional ids, context reset on any batch-size change) and
+   *cold*.  JSON record defaults to ``BENCH_matching_churn.json``
+   (committed alongside ``BENCH_matching_warmstart.json``); with
+   ``--check-convergence`` it gates on scipy parity, convergence,
+   identity warm hits in EVERY post-warmup round, and identity bid
+   iterations at least 2x below shape-keyed — never on timing: at these
+   CI-sized batches on CPU the identity arm's wall clock is dominated by
+   host dispatch + jit-signature warmup (power-of-two bucketing bounds
+   the signature count, but the first occurrence of each still compiles),
+   while at the 2048-GPU fan-out scale the same path wins wall clock
+   outright (see the ``decide_scale_warmstart`` records):
+
+       PYTHONPATH=src:. python benchmarks/matching_microbench.py --churn
 """
 
 from __future__ import annotations
@@ -233,6 +252,136 @@ def bench_warm_start(args, rows: List[str], records: List[Dict]) -> bool:
     return ok
 
 
+def _churn_trace(rng, pool: int, k: int, rounds: int, rate: float):
+    """Instance-level churn replay: each round ~``rate`` of the batch
+    DEPARTS and a random number of fresh instances ARRIVES (new
+    identities, so the batch size itself jitters round to round — the
+    job-arrival/finish pattern of the Shockwave/Gavel traces), plus one
+    row re-randomised on a few survivors.  Returns [(ids, costs), ...]."""
+    costs = rng.integers(0, 16, (pool, k, k)).astype(np.float64)
+    ids = np.arange(pool, dtype=np.int64)
+    next_id = pool
+    trace = [(ids, costs)]
+    for _ in range(rounds - 1):
+        b = len(ids)
+        n_dep = min(b - 1, rng.binomial(b, rate))
+        n_arr = rng.binomial(pool, rate)
+        keep = rng.permutation(b)[: b - n_dep]
+        fresh = rng.integers(0, 16, (n_arr, k, k)).astype(np.float64)
+        costs = np.concatenate([costs[keep], fresh])
+        ids = np.concatenate([ids[keep], next_id + np.arange(n_arr, dtype=np.int64)])
+        next_id += n_arr
+        n_mut = max(1, int(round(rate * len(keep) / 2)))
+        costs = costs.copy()
+        for i in rng.choice(len(keep), min(n_mut, len(keep)), replace=False):
+            costs[i, rng.integers(k)] = rng.integers(0, 16, k)
+        trace.append((ids, costs))
+    return trace
+
+
+def _churn_replay(trace, backend: str, arm: str, refs) -> Dict:
+    """One arm of the churn A/B/C:
+
+    * ``identity``  — persistent context, caller-supplied instance ids
+      (this PR): survivors memo-hit / stay warm across shape changes.
+    * ``shape_keyed`` — the PR-2 emulation: persistent context but
+      positional ids AND a reset whenever the batch size changes (exact-
+      shape keying), so every arrival/departure cold-starts the batch.
+    * ``cold`` — context reset every round (the PR-1 baseline).
+    """
+    ctx = MatchContext()
+    prev_b = None
+    per_round = []
+    for (t, (ids, costs)), ref in zip(enumerate(trace), refs):
+        if arm == "cold" or (arm == "shape_keyed" and prev_b != costs.shape[0]):
+            ctx = MatchContext()
+        prev_b = costs.shape[0]
+        stats0 = dict(ctx.stats)
+        t0 = time.perf_counter()
+        res = solve_lap_batched(
+            costs,
+            backend=backend,
+            context=ctx,
+            context_key="churn",
+            instance_ids=ids if arm == "identity" else None,
+        )
+        dt = time.perf_counter() - t0
+        per_round.append(
+            {
+                "round": t,
+                "batch": int(costs.shape[0]),
+                "time_s": dt,
+                "bid_iters": int(res.bid_iters.sum()),
+                "warm_instances": int(res.warm.sum()),
+                "memo_instances": int(
+                    ctx.stats["memo_instances"] - stats0.get("memo_instances", 0)
+                ),
+                "converged": bool(res.converged.all()),
+                "parity_ok": bool(
+                    np.allclose(res.total_cost, ref.total_cost, atol=1e-9)
+                ),
+            }
+        )
+    return {
+        "arm": arm,
+        "backend": backend,
+        "rounds": len(trace),
+        "total_bid_iters": int(sum(r["bid_iters"] for r in per_round)),
+        "total_time_s": float(sum(r["time_s"] for r in per_round)),
+        "per_round": per_round,
+    }
+
+
+def bench_churn(args, rows: List[str], records: List[Dict]) -> bool:
+    """Arrival/departure-rate sweep of the identity-keyed context vs the
+    shape-keyed PR-2 emulation vs fully cold; returns True when every gate
+    passed: parity + convergence everywhere, identity warm hits in every
+    post-warmup round, and identity bid iterations >= 2x below
+    shape-keyed.  Timings are recorded but never gated."""
+    ok = True
+    for rate in args.churn_rates:
+        rng = np.random.default_rng(13)
+        trace = _churn_trace(
+            rng, args.churn_pool, args.churn_k, args.churn_rounds, rate
+        )
+        # one scipy parity reference per round, shared by all three arms
+        # (the trace is identical across arms)
+        refs = [solve_lap_batched(costs, backend="scipy") for _, costs in trace]
+        arms = {}
+        for arm in ("identity", "shape_keyed", "cold"):
+            rec = _churn_replay(trace, args.warm_backend, arm, refs)
+            rec["bench"] = "churn_replay"
+            rec["rate"] = rate
+            rec["pool"] = args.churn_pool
+            rec["k"] = args.churn_k
+            records.append(rec)
+            arms[arm] = rec
+            rows.append(
+                csv_row(
+                    f"matching/churn_{arm}_r{rate}",
+                    rec["total_time_s"] * 1e6,
+                    f"rounds={rec['rounds']};bid_iters={rec['total_bid_iters']}",
+                )
+            )
+            ok &= all(r["converged"] and r["parity_ok"] for r in rec["per_round"])
+        ident, shape = arms["identity"], arms["shape_keyed"]
+        warm_every_round = all(
+            r["warm_instances"] > 0 for r in ident["per_round"][1:]
+        )
+        reduction_ok = (
+            shape["total_bid_iters"] >= 2 * ident["total_bid_iters"]
+        )
+        arms["identity"]["gates"] = {
+            "warm_every_post_warmup_round": warm_every_round,
+            "iter_reduction_vs_shape_keyed": (
+                shape["total_bid_iters"] / max(1, ident["total_bid_iters"])
+            ),
+            "iter_reduction_ok": reduction_ok,
+        }
+        ok &= warm_every_round and reduction_ok
+    return ok
+
+
 def bench_decide_scale(args, rows: List[str], records: List[Dict]) -> None:
     """Per-round ``decide()`` at the 2048-GPU sweep point, cold vs warm.
 
@@ -309,6 +458,24 @@ def main(argv=None, print_csv: bool = True) -> List[str]:
         action="store_true",
         help="run the warm-start A/B replay instead of the classic sweeps",
     )
+    parser.add_argument(
+        "--churn",
+        action="store_true",
+        help="run the identity-keyed churn replay (arrival/departure rate "
+        "sweep): identity-keyed vs shape-keyed (PR-2 emulation) vs cold",
+    )
+    parser.add_argument("--churn-rounds", type=int, default=30,
+                        help="churn replay length")
+    parser.add_argument("--churn-pool", type=int, default=64,
+                        help="steady-state batch size of the churn replay")
+    parser.add_argument("--churn-k", type=int, default=4,
+                        help="LAP instance size of the churn replay")
+    parser.add_argument(
+        "--churn-rates", type=lambda v: [float(x) for x in v.split(",")],
+        default=[0.05, 0.15, 0.3],
+        help="comma-separated arrival/departure rates (fraction of the "
+        "batch arriving AND departing per round)",
+    )
     parser.add_argument("--warm-rounds", type=int, default=24, help="replay length")
     parser.add_argument("--warm-batch", type=int, default=256, help="instances per round")
     parser.add_argument("--warm-churn", type=float, default=0.05,
@@ -333,6 +500,11 @@ def main(argv=None, print_csv: bool = True) -> List[str]:
     )
     from_cli = argv is not None
     args = parser.parse_args(list(argv) if from_cli else [])
+    if args.churn and args.warm_start:
+        parser.error(
+            "--churn and --warm-start are separate replays with separate "
+            "JSON records and gates; run them as two invocations"
+        )
     backends = SWEEP_BACKENDS if args.backend == "all" else [args.backend]
     if not from_cli:
         import jax
@@ -342,6 +514,29 @@ def main(argv=None, print_csv: bool = True) -> List[str]:
 
     rows: List[str] = []
     records: List[Dict] = []
+    if args.churn:
+        json_path = args.json or "BENCH_matching_churn.json"
+        gates_ok = bench_churn(args, rows, records)
+        report = {
+            "benchmark": "matching_churn",
+            "backend": args.warm_backend,
+            "rounds": args.churn_rounds,
+            "pool": args.churn_pool,
+            "k": args.churn_k,
+            "rates": args.churn_rates,
+            "gates_ok": gates_ok,
+            "records": records,
+        }
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        rows.append(csv_row("matching/json_report", 0.0, f"path={json_path}"))
+        if print_csv:
+            for r in rows:
+                print(r)
+        if args.check_convergence and not gates_ok:
+            print("churn replay warm-hit/parity/2x gate FAILED", file=sys.stderr)
+            raise SystemExit(2)
+        return rows
     if args.warm_start:
         json_path = args.json or "BENCH_matching_warmstart.json"
         gates_ok = bench_warm_start(args, rows, records)

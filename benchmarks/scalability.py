@@ -62,6 +62,10 @@ def tesserae_round_time(num_jobs: int, profile, cluster=CLUSTER, backend="auto")
         "total_s": total,
         "warm_total_s": warm_total,
         "warm_migrate_s": d3.timings["migrate_s"],
+        # identity-keyed context telemetry of the warm round: memo/warm
+        # instance counts + bid iterations (regression signal for the
+        # steady-state fast path, independent of wall clock)
+        "warm_match_stats": dict(d3.match_stats),
         **d2.timings,
     }
 

@@ -10,9 +10,13 @@ The public entry points are the **unified batched matching engine**
   and a scipy fallback for non-converged auction instances.  Rectangular
   instances solve natively (no square embedding) on the rect-capable
   backends.
-* :class:`MatchContext` — opaque warm-start state a scheduler threads
-  across rounds: persistent auction prices with row-fingerprint
-  invalidation, plus memoisation of identical re-solves.
+* :class:`MatchContext` — opaque **identity-keyed** warm-start state a
+  scheduler threads across rounds: callers supply instance/row/column
+  identities (job ids, node ids, GPU slots) and the context re-assembles
+  last round's device-resident auction prices for the surviving
+  identities, memoises bit-identical instances (remapped through the
+  identity maps, so batches may grow/shrink/permute), and compacts the
+  changed instances into a dense sub-batch before solving.
 * :func:`solve_lap` — single-instance wrapper with the same backend knob.
 * :func:`register_backend` / :func:`available_backends` — plug-in points.
 

@@ -17,18 +17,25 @@ with epsilon scaling.  For integer-valued benefits and a final
 benefit is within ``n * eps_min`` of optimal (we quantise throughputs before
 solving when exactness matters).
 
-Warm starts (beyond-paper, PR 2): every solver accepts ``init_prices`` and
-a per-instance ``warm`` flag.  Auction correctness never depends on the
+Warm starts (beyond-paper): every solver accepts ``init_prices`` and a
+per-instance ``warm`` flag.  Auction correctness never depends on the
 initial prices — each bid re-establishes eps-complementary slackness for
 the bidder — so carrying last round's equilibrium prices into this round's
 solve is always *valid*; when the costs barely changed (the Tesserae
 round-to-round locality the paper's Fig. 2/14b exploits) it is also *fast*:
 a warm instance skips the epsilon-scaling schedule entirely and runs one
-phase at ``eps_min``.  For square instances the ``n * eps`` bound holds for
-ANY initial prices (both totals telescope over the same full column set);
-for rectangular instances the matching engine verifies an a-posteriori
-price certificate and re-solves the rare instance that fails it (see
-``engine._rect_bound_violation``).
+phase at ``eps_min``.  The matching engine's identity-keyed
+``MatchContext`` is the canonical producer of ``init_prices``: it
+re-assembles last round's prices per *column identity* (jobs/nodes/GPUs),
+so prices survive rows and columns arriving, finishing or permuting — any
+re-assembly is valid by the argument above, it only has to be *useful*.
+For square instances the ``n * eps`` bound holds for ANY initial prices
+(both totals telescope over the same full column set); for rectangular
+instances the matching engine verifies an a-posteriori price certificate
+and re-solves the rare instance that fails it (see
+``engine._rect_bound_violation``).  ``AuctionResult.prices`` is returned
+as a device array and is cached as one — prices never round-trip through
+the host between rounds.
 
 Rectangular instances (n != m) also get a **native forward auction**
 (:func:`auction_lap_rect_batched`): bidders are the short side, bids range
@@ -161,8 +168,7 @@ def _auction_lap_jit(
         # warm instances skip the scaling schedule: one phase at eps_min.
         eps0 = jnp.where(warm, eps_min, eps0)
 
-    top2 = _pick_top2(use_kernel)
-    bid_round = _make_bid_round(benefit, n, top2)
+    bid_round = _make_bid_round(benefit, n, _pick_top2(use_kernel))
 
     def cond(state):
         prices, col_of, eps, it, _ = state
@@ -209,11 +215,18 @@ def _auction_lap_jit(
 
 
 def _pick_top2(use_kernel: bool):
-    if use_kernel:
-        from repro.kernels.ops import lap_bid_top2
+    """Bid top-2 reduction as ``(benefit, prices) -> (best, arg, second)``.
 
-        return lap_bid_top2
-    return _top2
+    The kernel path hands benefit and prices to the Pallas kernel, which
+    fuses the ``benefit - prices`` subtraction into its tiled sweep — no
+    (n, m) ``vals`` temporary is materialised per bid round (the previous
+    code precomputed ``vals`` in XLA and then had the kernel subtract a
+    zero price vector from it)."""
+    if use_kernel:
+        from repro.kernels.ops import lap_bid
+
+        return lap_bid
+    return lambda benefit, prices: _top2(benefit - prices[None, :])
 
 
 def _make_bid_round(benefit: jax.Array, m: int, top2):
@@ -224,8 +237,7 @@ def _make_bid_round(benefit: jax.Array, m: int, top2):
 
     def bid_round(prices, col_of, eps):
         unassigned = col_of < 0
-        vals = benefit - prices[None, :]
-        best_v, best_j, second_v = top2(vals)
+        best_v, best_j, second_v = top2(benefit, prices)
         incr = best_v - second_v + eps
         # Bid value person i offers for its best object.
         offer = prices[best_j] + incr
@@ -422,15 +434,22 @@ def _auction_lap_rect_batched_jit(
     )
 
 
-def _pad_value(benefit: np.ndarray, finite: np.ndarray) -> float:
-    """Benefit value for padded / forbidden cells: strictly below anything a
-    real edge can contribute through an augmenting cycle.  Must scale with
-    the instance SIZE, not just the value span: displacing a pad edge can
-    rearrange every real edge of the assignment, and each rearranged edge
-    can swing the total by up to 2*span (see masked_square_benefit)."""
+def _pad_value(benefit: np.ndarray, finite: np.ndarray) -> np.ndarray:
+    """PER-INSTANCE benefit value for padded / forbidden cells: strictly
+    below anything a real edge can contribute through an augmenting cycle.
+    Must scale with the instance SIZE, not just the value span: displacing
+    a pad edge can rearrange every real edge of the assignment, and each
+    rearranged edge can swing the total by up to 2*span (see
+    masked_square_benefit).  Returns shape ``benefit.shape[:-2]`` — the
+    reduction is over each instance alone, NOT the batch: a batch-global
+    span would couple every instance's pad cells to whichever instance
+    holds the batch max, so one instance arriving or departing would
+    change the pad bit pattern of every survivor and silently defeat the
+    engine's identity-keyed fingerprint memoisation for masked /
+    forbidden-edge batches."""
     n, m = benefit.shape[-2], benefit.shape[-1]
     size = max(n, m)
-    span = float(np.abs(benefit[finite]).max()) if finite.any() else 0.0
+    span = np.where(finite, np.abs(benefit), 0.0).max(axis=(-2, -1))
     return -(2.0 * size * span + 1.0)
 
 
@@ -463,8 +482,10 @@ def masked_square_benefit(
     size = max(n, m)
     benefit = cost if maximize else -cost
     finite = np.isfinite(benefit)
-    pad = _pad_value(benefit, finite)
-    sq = np.full((*cost.shape[:-2], size, size), pad, dtype=np.float64)
+    pad = _pad_value(benefit, finite)[..., None, None]  # per instance
+    sq = np.broadcast_to(
+        pad, (*cost.shape[:-2], size, size)
+    ).astype(np.float64, copy=True)
     sq[..., :n, :m] = np.where(finite, benefit, pad)
     if row_mask is not None:
         rm = np.asarray(row_mask, bool)[..., :, None]  # (..., n, 1)
@@ -490,7 +511,7 @@ def masked_rect_benefit(
     cost = np.asarray(cost, dtype=np.float64)
     benefit = np.where(np.isfinite(cost), cost if maximize else -cost, 0.0)
     finite = np.isfinite(cost)
-    pad = _pad_value(benefit, finite)
+    pad = _pad_value(benefit, finite)[..., None, None]  # per instance
     out = np.where(finite, benefit, pad)
     if row_mask is not None:
         out = np.where(np.asarray(row_mask, bool)[..., :, None], out, pad)

@@ -49,20 +49,50 @@ auction did not converge within the iteration budget (or, on the
 rectangular path, whose warm-start price certificate fails, see below) are
 transparently re-solved with an exact backend.
 
-**Warm starts** (:class:`MatchContext`): placements change little
-round-to-round (the temporal locality Tesserae's migration matching
+**Identity-keyed warm starts** (:class:`MatchContext`): placements change
+little round-to-round (the temporal locality Tesserae's migration matching
 exploits, Fig. 2/14b), so the scheduler threads an opaque ``MatchContext``
-across rounds.  The engine keys cached state by ``(context_key, backend,
-orientation, batch/shape)`` and fingerprints every benefit row; on the
-next call
+across rounds.  Cached state is keyed by *identity*, not by shape:
 
-* instances whose rows all match resume from last round's **prices** and
-  skip the epsilon-scaling schedule (one phase at ``eps_min``); if *every*
-  instance matches and a final assignment is cached, the solve is skipped
-  outright (a *memo hit* — zero bid iterations);
-* **changed rows reset their prices**: a mutated row invalidates the price
-  of the column it held last round, and that instance restarts the full
-  epsilon schedule (its other columns keep their prices as a head start).
+==================  =========================================================
+``instance_ids``    (B,) — who each batch instance *is* (a node pair of the
+                    Algorithm-2 fan-out, the packing graph, ...).  Supplied
+                    by the caller; defaults to batch position.
+``row_ids``         (B, N) or (N,) — identity of each cost row (a physical
+                    GPU slot, a placed job id, ...).  Defaults to position.
+``col_ids``         (B, M) or (M,) — identity of each cost column (a
+                    logical GPU slot, a pending job id, ...).
+==================  =========================================================
+
+Reuse rules (per instance, after matching identities across rounds):
+
+* **memo** — same row/col identity sets and bit-identical benefit cells:
+  the cached assignment is remapped through the identity maps and reused
+  outright (zero bid iterations; assignments are *bit-for-bit* those of a
+  fresh solve because the fingerprint comparison is exact, see below).
+* **warm** — surviving column identities re-assemble last round's auction
+  **prices** (new columns start cold at 0); a content-changed or vanished
+  row invalidates the price of the column it held last round.  Instances
+  whose only delta is added/removed/permuted identities skip the
+  epsilon-scaling schedule (one phase at ``eps_min``); instances with
+  content-changed rows restart the full schedule with the surviving
+  prices as a head start.
+* **invalidation** — anything else (orientation flip, context-key or
+  backend change, unseen instance id) is a cold start.
+
+**Partial-batch compaction**: instances that memo-hit never occupy solver
+lanes — the changed instances are gathered into a dense sub-batch (padded
+to a power-of-two bucket so jit signatures are reused across rounds),
+solved, and scattered back next to the memoised results, preserving
+per-instance ``converged`` / ``used_fallback`` flags.
+
+**Device residency**: prices and benefit fingerprints live on device as
+``jnp`` arrays end-to-end — price re-assembly, the rectangular price
+certificate and the save-time price repair are device computations, and
+``np.asarray`` happens only at the final assignment readout
+(``col_of`` / ``converged`` / ``iters``).  Fingerprints are the exact f64
+bit patterns of the benefit cells (two uint32 lanes), so fingerprint
+equality is collision-free: a memo hit can never return a stale result.
 
 Optimality under warm starts: for square instances the ``S * eps_min``
 bound holds for ANY initial prices (both sides of the comparison telescope
@@ -79,7 +109,8 @@ rectangular instances) and ``eps_min`` defaults to ``1 / (S + 1)`` — i.e.
 *exact* whenever costs are integers (quantise first when exactness
 matters; migration costs are multiples of ``1/(2*num_gpus)`` and are
 scaled to integers by the caller).  The exact backends match scipy
-identically.
+identically, and with a context they memo/compact exactly like the
+auction backends (minus price state).
 """
 
 from __future__ import annotations
@@ -89,6 +120,8 @@ import itertools
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.matching import hungarian
@@ -104,6 +137,11 @@ APPROX_BACKENDS = ("auction", "auction_kernel")
 #: max(n, m)^2 square embedding.
 RECT_BACKENDS = ("scipy", "numpy", "auction", "auction_kernel")
 
+#: Synthetic identity base for rows/cols the square embedding pads in;
+#: caller-supplied identities must stay above this (they are job/node/GPU
+#: ids in practice, so any id > -2^40 is safe).
+_PAD_ID_BASE = -(1 << 40)
+
 
 # --------------------------------------------------------------------------- #
 # Result type
@@ -118,9 +156,10 @@ class BatchedMatchResult:
     whether the primary backend solved the instance itself;
     ``used_fallback[b]`` marks instances re-solved by the exact fallback.
     ``bid_iters[b]`` counts auction bid rounds (0 for exact backends and
-    memo hits); ``warm[b]`` marks instances warm-started from a
-    :class:`MatchContext`; ``embedding`` records the solve geometry
-    (``"square"`` / ``"rect"`` / ``"none"`` for empty batches).
+    memo hits); ``warm[b]`` marks instances served from a
+    :class:`MatchContext` (memo hits and price-warm solves); ``embedding``
+    records the solve geometry (``"square"`` / ``"rect"`` / ``"none"`` for
+    empty batches).
     """
 
     col_of: np.ndarray      # (B, N) int64
@@ -144,25 +183,37 @@ class BatchedMatchResult:
 # --------------------------------------------------------------------------- #
 @dataclasses.dataclass
 class _CtxEntry:
-    """Per-(key, shape) cached state from the previous solve."""
+    """Identity-keyed state cached from the previous solve of one family.
 
-    row_fp: np.ndarray          # (B, R) uint64 benefit-row fingerprints
-    prices: Optional[np.ndarray]  # (B, C) float32 final auction prices
-    col_solve: np.ndarray       # (B, R) int64 solve-space assignment
+    ``fp_bits`` and ``prices`` are DEVICE arrays (jnp); everything needed
+    for host control flow (identities, assignments, flags) stays numpy.
+    """
+
+    instance_ids: np.ndarray    # (B,) int64
+    row_ids: np.ndarray         # (B, Ne) int64, original orientation (incl. pad ids)
+    col_ids: np.ndarray         # (B, Me) int64
+    transposed: bool
+    rect: bool
+    real_shape: Tuple[int, int]  # (n, m) before any square embedding
+    fp_bits: "object"           # (B, Ne, Me, 2) uint32 jnp — exact f64 bit pattern
+    prices: Optional["object"]  # (B, C) float32 jnp — oriented column prices
+    owner: Optional[np.ndarray]  # (B, C) int64 — oriented col -> owning oriented row
+    col_solve: np.ndarray       # (B, R) int64 oriented solve-space assignment
     final_col_of: np.ndarray    # (B, N) int64 original-space assignment
     converged: np.ndarray       # (B,) bool
     used_fallback: np.ndarray   # (B,) bool
 
 
 class MatchContext:
-    """Opaque warm-start state for :func:`solve_lap_batched`.
+    """Opaque identity-keyed warm-start state for :func:`solve_lap_batched`.
 
     The scheduler creates one and threads it across rounds; each engine
     call site picks a ``context_key`` (e.g. ``"migration_pairs"``,
-    ``"packing"``) so different LAP families never collide.  The context
-    stores, per (key, backend, shape): benefit-row fingerprints, the final
-    auction **prices**, and the final assignment.  See the module
-    docstring for the warm-start / invalidation / memoisation semantics.
+    ``"packing"``) so different LAP families never collide.  Per family
+    the context stores, keyed by the caller-supplied instance/row/column
+    *identities*: exact benefit fingerprints, the final auction **prices**
+    (device-resident), and the final assignment.  See the module docstring
+    for the memo / warm / invalidation semantics.
 
     Thread-safety: none — one context per scheduler instance.
     """
@@ -170,23 +221,26 @@ class MatchContext:
     def __init__(self):
         self._entries: Dict[tuple, _CtxEntry] = {}
         self.stats: Dict[str, int] = {
-            "solves": 0,        # engine calls that consulted this context
-            "memo_hits": 0,     # calls skipped entirely (all rows matched)
-            "warm_instances": 0,
+            "solves": 0,          # engine calls that consulted this context
+            "memo_hits": 0,       # calls where EVERY instance memo-hit
+            "memo_instances": 0,  # instances served from cache (0 bid iters)
+            "warm_instances": 0,  # memo + price-warm instances
             "cold_instances": 0,
-            "rows_invalidated": 0,
-            "cert_violations": 0,  # rect bound certificate failures
+            "rows_invalidated": 0,  # price resets from changed/vanished rows
+            "cert_violations": 0,   # rect bound certificate failures
+            "compacted_solves": 0,  # calls that solved a proper sub-batch
+            "bid_iters": 0,         # total auction bid rounds through this context
         }
 
     def get(self, key: tuple) -> Optional[_CtxEntry]:
         return self._entries.get(key)
 
     def store(self, key: tuple, entry: _CtxEntry) -> None:
-        """Keep ONE entry per (context_key, backend) family: warm starts
-        require an exact shape match anyway, so an older shape's state is
-        dead weight — and e.g. the packing family's (|placed|, |pending|)
-        shape changes with churn, which would otherwise grow the cache by
-        one entry per shape ever seen over a long-running scheduler."""
+        """Keep ONE entry per (context_key, backend) family: identities are
+        matched against the *latest* round only, so an older round's state
+        is dead weight — and without eviction a long-running scheduler
+        would grow the cache by one entry per (maximize, eps) variant ever
+        seen."""
         family = key[:2]
         for k in [k for k in self._entries if k[:2] == family and k != key]:
             del self._entries[k]
@@ -200,36 +254,112 @@ class MatchContext:
         return len(self._entries)
 
 
-#: fixed odd multipliers for the row fingerprint (stable across processes).
-_FP_SEED = 0x5DEECE66D
-_FP_WEIGHTS: Dict[int, np.ndarray] = {}
+# --------------------------------------------------------------------------- #
+# Identity bookkeeping (host)
+# --------------------------------------------------------------------------- #
+def _as_instance_ids(ids, b: int) -> np.ndarray:
+    if ids is None:
+        return np.arange(b, dtype=np.int64)
+    out = np.asarray(ids, dtype=np.int64).reshape(-1)
+    if out.shape != (b,):
+        raise ValueError(f"instance_ids must have shape ({b},), got {out.shape}")
+    return out
 
 
-def _fp_weights(c: int) -> np.ndarray:
-    """Deterministic per-column multipliers, cached per column count (the
-    fingerprint runs on every context-ful engine call — the hot path)."""
-    w = _FP_WEIGHTS.get(c)
-    if w is None:
-        w = (
-            np.random.default_rng(_FP_SEED)
-            .integers(1, 2**63 - 1, size=c, dtype=np.uint64)
-            | np.uint64(1)
-        )
-        _FP_WEIGHTS[c] = w
-    return w
+def _as_id_matrix(ids, b: int, k: int, name: str) -> np.ndarray:
+    if ids is None:
+        return np.broadcast_to(np.arange(k, dtype=np.int64), (b, k))
+    ids = np.asarray(ids, dtype=np.int64)
+    if ids.ndim == 1:
+        ids = np.broadcast_to(ids, (b, ids.shape[0]))
+    if ids.shape != (b, k):
+        raise ValueError(f"{name} must have shape ({b}, {k}), got {ids.shape}")
+    return ids
 
 
-def _row_fingerprints(benefit: np.ndarray) -> np.ndarray:
-    """Vectorised 64-bit fingerprint of every benefit row: (B, R, C) ->
-    (B, R) uint64.  A changed entry changes its row's fingerprint with
-    overwhelming probability; collisions only cost a stale warm start
-    (never a wrong answer for exact backends — memoised results are reused
-    only when ALL rows match, and the auction path re-verifies through its
-    convergence/cardinality/certificate checks)."""
-    bits = np.ascontiguousarray(benefit, dtype=np.float64).view(np.uint64)
-    c = bits.shape[-1]
-    fp = (bits * _fp_weights(c)).sum(axis=-1, dtype=np.uint64)  # wraps mod 2^64
-    return fp * np.uint64(0x9E3779B97F4A7C15) + np.uint64(c)
+def _pad_ids(ids: np.ndarray, size: int) -> np.ndarray:
+    """Extend per-instance identities with synthetic ids for the rows/cols
+    the square embedding pads in (stable across rounds, so an unchanged
+    padded instance still memo-hits)."""
+    b, k = ids.shape
+    if k == size:
+        return ids
+    pad = _PAD_ID_BASE - np.arange(size - k, dtype=np.int64)
+    return np.concatenate([ids, np.broadcast_to(pad, (b, size - k))], axis=1)
+
+
+def _positions_in(new_ids: np.ndarray, old_ids: np.ndarray) -> np.ndarray:
+    """Per-instance identity lookup: position of each ``new_ids[b, i]`` in
+    ``old_ids[b, :]`` (first occurrence), or -1 when absent.  Vectorised
+    over the batch via disjoint per-row key ranges + one flat searchsorted.
+    """
+    b, k0 = old_ids.shape
+    if b == 0 or k0 == 0 or new_ids.shape[1] == 0:
+        return np.full(new_ids.shape, -1, np.int64)
+    if new_ids.shape == old_ids.shape and np.array_equal(new_ids, old_ids):
+        return np.broadcast_to(
+            np.arange(new_ids.shape[1], dtype=np.int64), new_ids.shape
+        ).copy()
+    lo = min(int(new_ids.min()), int(old_ids.min()))
+    hi = max(int(new_ids.max()), int(old_ids.max()))
+    span = hi - lo + 1
+    if span * b < (1 << 62):
+        order = np.argsort(old_ids, axis=1, kind="stable")
+        sorted_old = np.take_along_axis(old_ids, order, axis=1)
+        off = np.arange(b, dtype=np.int64)[:, None] * span
+        flat_old = (sorted_old - lo + off).ravel()
+        flat_new = (new_ids - lo + off).ravel()
+        loc = np.minimum(np.searchsorted(flat_old, flat_new), flat_old.size - 1)
+        hit = flat_old[loc] == flat_new
+        return np.where(hit, order.ravel()[loc], -1).reshape(new_ids.shape)
+    # id range too wide for the offset trick: per-row dict fallback
+    out = np.full(new_ids.shape, -1, np.int64)
+    for i in range(b):  # pragma: no cover - exotic ids only
+        lut = {int(v): j for j, v in reversed(list(enumerate(old_ids[i])))}
+        for j, v in enumerate(new_ids[i]):
+            out[i, j] = lut.get(int(v), -1)
+    return out
+
+
+def _invert_pos(pos: np.ndarray, k_old: int) -> np.ndarray:
+    """Invert per-instance position maps: ``pos`` (B, K_new) holds old
+    positions (or -1); returns (B, K_old) with ``inv[b, pos[b, j]] = j``."""
+    b = pos.shape[0]
+    inv = np.full((b, k_old), -1, np.int64)
+    bb, jj = np.nonzero(pos >= 0)
+    inv[bb, pos[bb, jj]] = jj
+    return inv
+
+
+# --------------------------------------------------------------------------- #
+# Device-resident fingerprints + price machinery
+# --------------------------------------------------------------------------- #
+def _f64_bits(a: np.ndarray) -> np.ndarray:
+    """Exact fingerprint of f64 values: the raw bit pattern as two uint32
+    lanes, ``(...,) f64 -> (..., 2) uint32``.  Equality of fingerprints is
+    equality of bit patterns — collision-free (note -0.0 != +0.0 at the
+    bit level; the spurious invalidation is harmless)."""
+    a = np.ascontiguousarray(a, dtype=np.float64)
+    return a.view(np.uint32).reshape(*a.shape, 2)
+
+
+@jax.jit
+def _rows_unchanged_dev(new_bits, old_bits, old_idx, row_pos, col_pos):
+    """Per-row exact change detection on device.
+
+    ``new_bits`` (B, N, M, 2) uint32; ``old_bits`` (B0, N0, M0, 2);
+    ``old_idx`` (B,) instance match (-1 = cold); ``row_pos`` (B, N) /
+    ``col_pos`` (B, M) identity positions in the old instance (-1 = new).
+    A row is unchanged iff it existed last round and every SURVIVING
+    column's cell is bit-identical (new columns don't count against it).
+    """
+    ob = jnp.clip(old_idx, 0, None)
+    rp = jnp.clip(row_pos, 0, None)
+    cp = jnp.clip(col_pos, 0, None)
+    gathered = old_bits[ob[:, None, None], rp[:, :, None], cp[:, None, :]]
+    eq = jnp.all(gathered == new_bits, axis=-1)
+    eq = jnp.where((col_pos >= 0)[:, None, :], eq, True)
+    return (row_pos >= 0) & (old_idx >= 0)[:, None] & jnp.all(eq, axis=-1)
 
 
 def _assigned_cols(col_solve: np.ndarray, c: int) -> np.ndarray:
@@ -243,7 +373,7 @@ def _assigned_cols(col_solve: np.ndarray, c: int) -> np.ndarray:
     return assigned
 
 
-def _rect_bound_violation(prices: np.ndarray, col_solve: np.ndarray) -> np.ndarray:
+def _rect_bound_violation(prices, col_solve) -> np.ndarray:
     """A-posteriori certificate for the rectangular ``n*eps`` bound.
 
     At termination the auction satisfies eps-complementary slackness wrt
@@ -263,20 +393,37 @@ def _rect_bound_violation(prices: np.ndarray, col_solve: np.ndarray) -> np.ndarr
     columns, and those instances are flagged for an exact re-solve.
     Instances with unassigned rows return False — the convergence /
     cardinality checks already flag them.
+
+    ``prices`` may be a device (jnp) array — the check runs on device and
+    only the (B,) verdict is synced to host.
     """
     b, c = prices.shape
     r = col_solve.shape[1]
     if r >= c or b == 0:
         return np.zeros(b, bool)  # square: bound holds for any prices
-    prices = prices.astype(np.float64)
+    verdict = _rect_violation_dev(
+        jnp.asarray(prices, jnp.float32), jnp.asarray(np.asarray(col_solve))
+    )
+    return np.asarray(verdict)
+
+
+@jax.jit
+def _rect_violation_dev(prices, col_solve):
+    b, c = prices.shape
+    r = col_solve.shape[1]
     ok = col_solve >= 0
-    assigned = _assigned_cols(col_solve, c)
+    safe = jnp.where(ok, col_solve, c)
+    assigned = (
+        jnp.zeros((b, c + 1), bool)
+        .at[jnp.arange(b)[:, None], safe]
+        .set(True)[:, :c]
+    )
     complete = ok.all(axis=1)
-    a_sorted = np.sort(np.where(assigned, prices, np.inf), axis=1)[:, :r]
-    u_sorted = -np.sort(np.where(assigned, np.inf, -prices), axis=1)[:, : c - r]
+    a_sorted = jnp.sort(jnp.where(assigned, prices, jnp.inf), axis=1)[:, :r]
+    u_sorted = -jnp.sort(jnp.where(assigned, jnp.inf, -prices), axis=1)[:, : c - r]
     k = min(r, c - r)
     diff = u_sorted[:, :k] - a_sorted[:, :k]
-    d_worst = np.cumsum(np.where(np.isfinite(diff), diff, 0.0), axis=1).max(axis=1)
+    d_worst = jnp.cumsum(jnp.where(jnp.isfinite(diff), diff, 0.0), axis=1).max(axis=1)
     # Tolerance matches the slack the parity gates grant on top of the
     # documented S*eps_min bound (engine docstring / CI perf-smoke gate):
     # a deficit the certificate waves through must be invisible to them.
@@ -285,6 +432,35 @@ def _rect_bound_violation(prices: np.ndarray, col_solve: np.ndarray) -> np.ndarr
     # d_worst <= 0 exactly (unassigned columns keep the all-equal initial
     # price), so the tight tolerance never penalises them.
     return complete & (d_worst > 1e-6)
+
+
+def _next_pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p <<= 1
+    return p
+
+
+def _bucket_size(n_solve: int, b: int) -> int:
+    """Pad a compacted sub-batch up to a power-of-two bucket (capped at the
+    full batch) so the solver jit signature is shared across rounds with
+    different churn counts instead of recompiling per count."""
+    if n_solve in (0, b):
+        return n_solve
+    return min(_next_pow2(n_solve), b)
+
+
+def _bucketed_bits(bits):
+    """Zero-pad a (B, N, M, 2) fingerprint tensor to power-of-two B/N/M so
+    the change-detection jit signature recurs across churn rounds instead
+    of recompiling per (batch, shape) pair.  Padded cells are never
+    consulted: padded batch entries carry ``old_idx == -1``, padded rows
+    ``row_pos == -1`` and padded columns ``col_pos == -1``."""
+    b, n, m, _ = bits.shape
+    nb, nn, nm = _next_pow2(b), _next_pow2(n), _next_pow2(m)
+    if (nb, nn, nm) == (b, n, m):
+        return bits
+    return jnp.pad(bits, ((0, nb - b), (0, nn - n), (0, nm - m), (0, 0)))
 
 
 # --------------------------------------------------------------------------- #
@@ -357,8 +533,6 @@ def _solve_smallperm(benefit: np.ndarray, eps_min=None, max_iters=None):
 
 
 def _solve_auction(benefit: np.ndarray, eps_min, max_iters, use_kernel: bool):
-    import jax.numpy as jnp
-
     from repro.core.matching.auction import auction_lap_batched
 
     res = auction_lap_batched(
@@ -401,13 +575,13 @@ def _run_auction(
     eps_min,
     max_iters: int,
     use_kernel: bool,
-    init_prices: Optional[np.ndarray],
+    init_prices,
     warm: Optional[np.ndarray],
 ):
-    """Dispatch a (possibly warm-started) auction solve; returns
-    (col_of (B, R), converged (B,), prices (B, C), iters (B,))."""
-    import jax.numpy as jnp
-
+    """Dispatch a (possibly warm-started) auction solve.  Returns
+    (col_of (B, R), converged (B,), prices (B, C) DEVICE array, iters
+    (B,)) — only the assignment readout crosses back to host; prices stay
+    jnp so a context can cache them without a device round-trip."""
     from repro.core.matching.auction import (
         auction_lap_batched,
         auction_lap_rect_batched,
@@ -425,7 +599,7 @@ def _run_auction(
     return (
         np.asarray(res.col_of, np.int64),
         np.asarray(res.converged, bool),
-        np.asarray(res.prices, np.float32),
+        res.prices,
         np.asarray(res.iters, np.int64),
     )
 
@@ -444,6 +618,9 @@ def solve_lap_batched(
     max_iters: int = 20_000,
     context: Optional[MatchContext] = None,
     context_key: str = "default",
+    instance_ids: Optional[np.ndarray] = None,
+    row_ids: Optional[np.ndarray] = None,
+    col_ids: Optional[np.ndarray] = None,
 ) -> BatchedMatchResult:
     """Solve a batch of (rectangular, masked) LAPs with one backend call.
 
@@ -459,11 +636,18 @@ def solve_lap_batched(
       max_iters: auction bid-round budget; instances that exhaust it fall
         back to an exact solver (tracked per instance via ``used_fallback``).
       context: optional :class:`MatchContext` carrying last round's prices,
-        fingerprints and assignments — warm-starts the auction backends and
-        memoises identical re-solves for every backend.
+        fingerprints and assignments — memoises unchanged instances and
+        warm-starts the changed ones (see the module docstring).
       context_key: namespace inside ``context`` (one per LAP family, e.g.
         ``"migration_pairs"`` vs ``"packing"``), so unrelated call sites
         never share price state.
+      instance_ids / row_ids / col_ids: identities the context keys its
+        state by (see the module docstring table).  Defaults to positions,
+        which preserves positional warm starts for fixed-shape callers;
+        callers with churning batches (jobs arriving/finishing) must pass
+        stable identities to keep surviving state warm across shape
+        changes.  Identities must be unique within an instance and greater
+        than ``-2^40`` (smaller values are reserved for embedding pads).
     """
     t0 = time.perf_counter()
     costs = np.asarray(costs, dtype=np.float64)
@@ -508,29 +692,86 @@ def solve_lap_batched(
         )
     else:
         benefit_nm = oriented = masked_square_benefit(costs, maximize, row_mask, col_mask)
+    ne, me = benefit_nm.shape[1:]
     r, c = oriented.shape[1:]
 
-    # ---- context lookup: memoisation + warm-start prices ---------------- #
-    fp = warm = init_prices = None
+    # ---- context lookup: identity matching + memo + warm prices --------- #
+    key = (context_key, backend, maximize, eps_min)
     entry = None
-    key = (context_key, backend, maximize, b, r, c, transposed, eps_min)
+    bits = None
+    inst = rids = cids = None
     if context is not None:
         context.stats["solves"] += 1
-        # Fingerprints follow the CALLER's mutation granularity: original
-        # rows.  For transposed rectangular instances an original row is
-        # one oriented COLUMN, so a changed row later invalidates exactly
-        # that column's price instead of every bidder fingerprint.
-        fp = _row_fingerprints(benefit_nm)
-        entry = context.get(key)
+        inst = _as_instance_ids(instance_ids, b)
+        rids = _pad_ids(_as_id_matrix(row_ids, b, n, "row_ids"), ne)
+        cids = _pad_ids(_as_id_matrix(col_ids, b, m, "col_ids"), me)
+        bits = jnp.asarray(_f64_bits(benefit_nm))
+        cand = context.get(key)
+        if cand is not None and cand.transposed == transposed and cand.rect == rect:
+            entry = cand
+
+    memo_b = np.zeros(b, bool)
+    warm_result = np.zeros(b, bool)
+    warm_solver = np.zeros(b, bool)
+    init_prices_full = None  # (B, C) device, assembled by column identity
+    col_of_memo = None
+    stale = None
+    old_idx = row_pos_or = col_pos_or = None
     if entry is not None:
-        unchanged = fp == entry.row_fp  # (B, N) original rows
-        warm = unchanged.all(axis=1)
-        if warm.all():
-            # Every benefit row matches the cached solve: reuse the stored
-            # assignment outright.  Totals are recomputed from the (equal,
-            # modulo a 2^-64 fingerprint collision) costs for uniformity.
-            context.stats["memo_hits"] += 1
+        b0 = entry.instance_ids.shape[0]
+        old_idx = _positions_in(inst[None, :], entry.instance_ids[None, :])[0]
+        safe_b = np.clip(old_idx, 0, b0 - 1)
+        row_pos = _positions_in(rids, entry.row_ids[safe_b])
+        col_pos = _positions_in(cids, entry.col_ids[safe_b])
+        matched = old_idx >= 0
+        row_pos[~matched] = -1
+        col_pos[~matched] = -1
+        # bucket-pad the compare inputs (stored fingerprints are padded at
+        # store time) so the jit signature recurs across churn rounds
+        nb, nn, nm = _next_pow2(b), _next_pow2(ne), _next_pow2(me)
+        oi_p = np.full(nb, -1, np.int64)
+        oi_p[:b] = old_idx
+        rp_p = np.full((nb, nn), -1, np.int64)
+        rp_p[:b, :ne] = row_pos
+        cp_p = np.full((nb, nm), -1, np.int64)
+        cp_p[:b, :me] = col_pos
+        row_unchanged = np.asarray(
+            _rows_unchanged_dev(
+                _bucketed_bits(bits),
+                entry.fp_bits,
+                jnp.asarray(oi_p),
+                jnp.asarray(rp_p),
+                jnp.asarray(cp_p),
+            )
+        )[:b, :ne]
+        ne0, me0 = entry.row_ids.shape[1], entry.col_ids.shape[1]
+        rows_bij = matched & (ne == ne0) & (row_pos >= 0).all(axis=1)
+        cols_bij = matched & (me == me0) & (col_pos >= 0).all(axis=1)
+        memo_b = rows_bij & cols_bij & row_unchanged.all(axis=1)
+        changed_any = ((row_pos >= 0) & ~row_unchanged).any(axis=1)
+        warm_solver = matched & ~changed_any
+        if not (approx and entry.prices is not None):
+            # exact backends carry no prices: short of a memo hit nothing
+            # is warm-STARTED, so neither the result flag nor the stats
+            # may claim it (PR-2 semantics; keeps warm-rate gates honest)
+            warm_solver = np.zeros(b, bool)
+        warm_result = memo_b | warm_solver
+
+        if (
+            memo_b.all()
+            and np.array_equal(inst, entry.instance_ids)
+            and np.array_equal(rids, entry.row_ids)
+            and np.array_equal(cids, entry.col_ids)
+        ):
+            # Full-memo fast path: identical identities in identical
+            # positions (the steady-state fan-out).  No remap, no price
+            # re-assembly, and the stored entry (fingerprints, prices,
+            # assignments) is still exactly right — nothing is re-stored.
+            # This keeps the per-round cost of an unchanged 2048-GPU
+            # fan-out at fingerprint-compare + readout.
+            context.stats["memo_instances"] += b
             context.stats["warm_instances"] += b
+            context.stats["memo_hits"] += 1
             col_of, total, _ = _extract(costs, entry.final_col_of, row_mask, col_mask)
             return BatchedMatchResult(
                 col_of,
@@ -540,61 +781,144 @@ def solve_lap_batched(
                 backend,
                 time.perf_counter() - t0,
                 np.zeros(b, np.int64),
-                warm,
+                warm_result,
                 "rect" if rect else "square",
             )
+
+        # oriented views of the identity maps (bidders are the short side)
+        row_pos_or = col_pos if transposed else row_pos
+        col_pos_or = row_pos if transposed else col_pos
+        r0 = me0 if transposed else ne0
+        c0 = ne0 if transposed else me0
+
+        if memo_b.any():
+            mb = np.nonzero(memo_b)[0]
+            ob = old_idx[mb]
+            # original-space remap: old assignment re-expressed in the new
+            # row/col positions of the surviving identities
+            rp_n = row_pos[mb][:, :n]
+            oc_n = np.take_along_axis(entry.final_col_of[ob], rp_n, axis=1)
+            inv_n = _invert_pos(col_pos[mb][:, :m], entry.real_shape[1])
+            col_of_memo = np.where(
+                oc_n >= 0,
+                np.take_along_axis(inv_n, np.clip(oc_n, 0, None), axis=1),
+                -1,
+            )
         if approx and entry.prices is not None:
-            # Changed rows reset their prices; everything else carries
-            # over as a head start.
-            init_prices = entry.prices.copy()
+            # Price re-assembly by column identity: surviving columns carry
+            # last round's price, new columns start cold.  A column whose
+            # last-round owner row changed content or vanished is reset —
+            # its price reflects competition that may no longer exist.
             if transposed:
                 # original row i IS oriented column i: reset it directly
-                stale = ~unchanged  # (B, C)
-                init_prices[stale] = 0.0
+                stale = (col_pos_or >= 0) & ~row_unchanged
             else:
-                # a changed row taints the column it held last round
-                stale = (~unchanged) & (entry.col_solve >= 0)
-                bb, rr = np.nonzero(stale)
-                init_prices[bb, entry.col_solve[bb, rr]] = 0.0
-            context.stats["rows_invalidated"] += int(stale.sum())
-        else:
-            # exact backends carry no prices: short of a full memo hit
-            # they re-solve from scratch, so nothing is warm-STARTED
-            warm = None
-        if warm is not None:
-            context.stats["warm_instances"] += int(warm.sum())
-            context.stats["cold_instances"] += int(b - warm.sum())
-        else:
-            context.stats["cold_instances"] += b
+                survived = np.zeros((b, r0), bool)
+                bb, rr = np.nonzero(row_pos_or >= 0)
+                survived[bb, row_pos_or[bb, rr]] = row_unchanged[bb, rr]
+                own = np.where(
+                    col_pos_or >= 0,
+                    np.take_along_axis(
+                        entry.owner[safe_b], np.clip(col_pos_or, 0, None), axis=1
+                    ),
+                    -1,
+                )
+                stale = (own >= 0) & ~np.take_along_axis(
+                    survived, np.clip(own, 0, None), axis=1
+                )
+            keep = jnp.asarray(matched[:, None] & (col_pos_or >= 0) & ~stale)
+            gathered = jnp.asarray(entry.prices)[
+                jnp.asarray(safe_b)[:, None],
+                jnp.asarray(np.clip(col_pos_or, 0, c0 - 1)),
+            ]
+            init_prices_full = jnp.where(keep, gathered, 0.0)
+        context.stats["memo_instances"] += int(memo_b.sum())
+        context.stats["warm_instances"] += int(warm_result.sum())
+        context.stats["cold_instances"] += int(b - warm_result.sum())
+        if memo_b.all():
+            context.stats["memo_hits"] += 1
     elif context is not None:
         context.stats["cold_instances"] += b
 
-    # ---- primary solve -------------------------------------------------- #
+    # ---- partial-batch compaction + primary solve ----------------------- #
+    sidx = np.nonzero(~memo_b)[0]
+    col_solve_full = np.full((b, r), -1, np.int64)
+    converged = np.ones(b, bool)
+    used_fallback = np.zeros(b, bool)
     bid_iters = np.zeros(b, np.int64)
-    prices = None
-    if approx:
-        col_solve, converged, prices, bid_iters = _run_auction(
-            oriented,
-            rect,
-            eps_min,
-            max_iters,
-            use_kernel=(backend == "auction_kernel"),
-            init_prices=init_prices,
-            warm=warm,
+    prices_sub = None
+    if entry is not None and memo_b.any():
+        mb = np.nonzero(memo_b)[0]
+        ob = old_idx[mb]
+        rp = row_pos_or[mb]
+        oc = np.take_along_axis(entry.col_solve[ob], rp, axis=1)
+        inv = _invert_pos(col_pos_or[mb], c0)
+        col_solve_full[mb] = np.where(
+            oc >= 0, np.take_along_axis(inv, np.clip(oc, 0, None), axis=1), -1
         )
-    else:
-        col_solve, converged = _BACKENDS[backend](oriented, eps_min, max_iters)
+        converged[mb] = entry.converged[ob]
+        used_fallback[mb] = entry.used_fallback[ob]
+        if sidx.size:
+            context.stats["compacted_solves"] += 1
+    if stale is not None:
+        solve_mask = ~memo_b
+        context.stats["rows_invalidated"] += int((stale & solve_mask[:, None]).sum())
 
-    col_full = _to_orig_cols(col_solve, transposed, n, m)
+    if sidx.size:
+        sub_ben = oriented[sidx]
+        if approx:
+            ip_sub = warm_sub = None
+            if init_prices_full is not None:
+                ip_sub = init_prices_full[jnp.asarray(sidx)]
+                warm_sub = warm_solver[sidx]
+            pb = _bucket_size(sidx.size, b) if context is not None else sidx.size
+            if pb > sidx.size:
+                pad = pb - sidx.size
+                sub_ben = np.concatenate(
+                    [sub_ben, np.zeros((pad, r, c), sub_ben.dtype)], axis=0
+                )
+                if ip_sub is not None:
+                    ip_sub = jnp.concatenate(
+                        [ip_sub, jnp.zeros((pad, c), ip_sub.dtype)], axis=0
+                    )
+                    warm_sub = np.concatenate([warm_sub, np.ones(pad, bool)])
+            col_solve_sub, conv_sub, prices_pad, iters_sub = _run_auction(
+                sub_ben,
+                rect,
+                eps_min,
+                max_iters,
+                use_kernel=(backend == "auction_kernel"),
+                init_prices=ip_sub,
+                warm=warm_sub,
+            )
+            ns = sidx.size
+            col_solve_full[sidx] = col_solve_sub[:ns]
+            converged[sidx] = conv_sub[:ns]
+            bid_iters[sidx] = iters_sub[:ns]
+            prices_sub = prices_pad[:ns]
+        else:
+            col_solve_sub, conv_sub = _BACKENDS[backend](sub_ben, eps_min, max_iters)
+            col_solve_full[sidx] = col_solve_sub
+            converged[sidx] = conv_sub
+
+    col_full = _to_orig_cols(col_solve_full, transposed, n, m)
+    if col_of_memo is not None:
+        # memoised instances reuse the FINAL cached assignment (which may
+        # include an exact-fallback fix the raw solve state lacks); only
+        # the real rows are written — square-embedded pad rows are sliced
+        # off by _extract anyway
+        mb = np.nonzero(memo_b)[0]
+        col_full[mb[:, None], np.arange(n)[None, :]] = col_of_memo
     col_of, total, complete = _extract(costs, col_full, row_mask, col_mask)
     expect = _expected_cardinality(costs, row_mask, col_mask)
-    needs_fallback = (~converged) | (complete < expect)
-    if approx and rect:
-        viol = _rect_bound_violation(prices, col_solve)
+    solve_mask = ~memo_b
+    needs_fallback = solve_mask & ((~converged) | (complete < expect))
+    if approx and rect and prices_sub is not None:
+        viol = np.zeros(b, bool)
+        viol[sidx] = _rect_bound_violation(prices_sub, col_solve_full[sidx])
         needs_fallback |= viol
         if context is not None:
             context.stats["cert_violations"] += int(viol.sum())
-    used_fallback = np.zeros(b, bool)
     if needs_fallback.any() and approx:
         fb = _pick_exact() if rect else _pick_auto(size)
         idx = np.nonzero(needs_fallback)[0]
@@ -625,22 +949,44 @@ def solve_lap_batched(
         used_fallback[sel] = True
 
     if context is not None:
-        if rect and prices is not None:
-            # Price repair before caching: a column with no owner is
-            # available again next round, so its stale price is reset to
-            # the cold-start level.  This keeps the stored prices close to
-            # the all-equal-unassigned condition the rectangular bound
-            # wants, so the next warm solve rarely trips the certificate
-            # (which always runs on the *actual* final prices, above).
-            prices = np.where(
-                _assigned_cols(col_solve, c), prices, 0.0
-            ).astype(np.float32)
+        context.stats["bid_iters"] += int(bid_iters.sum())
+        prices_full = None
+        if approx:
+            base = (
+                init_prices_full
+                if init_prices_full is not None
+                else jnp.zeros((b, c), jnp.float32)
+            )
+            if prices_sub is not None:
+                base = base.at[jnp.asarray(sidx)].set(prices_sub)
+            prices_full = base
+            if rect:
+                # Price repair before caching: a column with no owner is
+                # available again next round, so its stale price is reset
+                # to the cold-start level.  This keeps the stored prices
+                # close to the all-equal-unassigned condition the
+                # rectangular bound wants, so the next warm solve rarely
+                # trips the certificate (which always runs on the *actual*
+                # final prices, above).
+                prices_full = jnp.where(
+                    jnp.asarray(_assigned_cols(col_solve_full, c)), prices_full, 0.0
+                )
+        owner = np.full((b, c), -1, np.int64)
+        bb, rr = np.nonzero(col_solve_full >= 0)
+        owner[bb, col_solve_full[bb, rr]] = rr
         context.store(
             key,
             _CtxEntry(
-                row_fp=fp,
-                prices=prices,
-                col_solve=col_solve,
+                instance_ids=inst,
+                row_ids=np.ascontiguousarray(rids),
+                col_ids=np.ascontiguousarray(cids),
+                transposed=transposed,
+                rect=rect,
+                real_shape=(n, m),
+                fp_bits=_bucketed_bits(bits),
+                prices=prices_full,
+                owner=owner,
+                col_solve=col_solve_full,
                 final_col_of=col_of.copy(),
                 converged=converged.copy(),
                 used_fallback=used_fallback.copy(),
@@ -655,7 +1001,7 @@ def solve_lap_batched(
         backend,
         time.perf_counter() - t0,
         bid_iters,
-        np.zeros(b, bool) if warm is None else warm,
+        warm_result,
         "rect" if rect else "square",
     )
 
@@ -708,6 +1054,8 @@ def solve_lap(
     backend: str = "auto",
     context: Optional[MatchContext] = None,
     context_key: str = "default",
+    row_ids: Optional[np.ndarray] = None,
+    col_ids: Optional[np.ndarray] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Single-instance LAP with the same backend knob as the batched engine.
 
@@ -715,8 +1063,9 @@ def solve_lap(
     ``auto``/``numpy``/``scipy`` keep the original exact dispatch (no
     embedding overhead) and the auction backends route through the batched
     engine.  With a ``context``, EVERY backend routes through the engine so
-    identical consecutive solves memo-hit and the auction carries prices.
-    Returns scipy-style ``(row_ind, col_ind)``.
+    identical consecutive solves memo-hit and the auction carries prices;
+    ``row_ids``/``col_ids`` key that state by identity (e.g. node ids for
+    the final migration match).  Returns scipy-style ``(row_ind, col_ind)``.
     """
     if context is None and backend in ("auto", "numpy", "scipy"):
         return hungarian.solve_lap(cost, maximize=maximize, backend=backend)
@@ -726,5 +1075,7 @@ def solve_lap(
         backend=backend,
         context=context,
         context_key=context_key,
+        row_ids=row_ids,
+        col_ids=col_ids,
     )
     return res.pairs(0)

@@ -151,10 +151,14 @@ def plan_migration(
     ``auction`` / ``auction_kernel``) — one knob selects the solver for
     both the node-pair fan-out and the final node-level match.
     ``context`` threads the scheduler's :class:`MatchContext` across
-    rounds: node pairs whose cost rows did not change since the previous
-    round warm-start from last round's auction prices (placements change
-    little round-to-round, so most do), and a fully-unchanged fan-out
-    memo-hits without solving at all.
+    rounds, keyed by IDENTITY: each fan-out instance is a (physical node,
+    logical node) pair and its rows/columns are global GPU slots, the
+    final match is keyed by node ids, and the flat algorithm by GPU ids.
+    Node pairs whose cost rows did not change since the previous round
+    memo-hit outright (they never occupy solver lanes — partial-batch
+    compaction) and changed pairs warm-start from last round's auction
+    prices; identity keying keeps all of that valid if the cluster itself
+    is ever resized between rounds.
     """
     t0 = time.perf_counter()
     cluster = prev.cluster
@@ -174,11 +178,14 @@ def plan_migration(
         flat_i = pi.slots.reshape(-1, MAX_PACK)
         flat_j = pj.slots.reshape(-1, MAX_PACK)
         cost = pairwise_migration_cost(flat_i, flat_j, weights)
+        gpu_ids = np.arange(cluster.num_gpus, dtype=np.int64)
         rows, cols = solve_lap(
             cost * _cost_scale(num_gpus_of, backend),
             backend=backend,
             context=context,
             context_key="migration_flat",
+            row_ids=gpu_ids,
+            col_ids=gpu_ids,
         )
         gpu_of_logical = np.empty(cluster.num_gpus, dtype=np.int64)
         gpu_of_logical[cols] = rows
@@ -213,11 +220,20 @@ def plan_migration(
         pi.slots[:, None, :, :], pj.slots[None, :, :, :], weights
     )
     scale = _cost_scale(num_gpus_of, backend)
+    # identity keying: instance (i, j) is the (physical, logical) node
+    # pair; its rows/cols are the GLOBAL GPU slots of those nodes.  Stable
+    # across rounds (and across cluster resizes) by construction.
+    node_ids = np.arange(kc, dtype=np.int64)
+    pair_ids = (node_ids[:, None] * (1 << 20) + node_ids[None, :]).ravel()
+    slot_ids = node_ids[:, None] * kl + np.arange(kl, dtype=np.int64)[None, :]
     res = solve_lap_batched(
         all_costs.reshape(kc * kc, kl, kl) * scale,
         backend=backend,
         context=context,
         context_key="migration_pairs",
+        instance_ids=pair_ids,
+        row_ids=np.repeat(slot_ids, kc, axis=0),
+        col_ids=np.tile(slot_ids, (kc, 1)),
     )
     node_cost = (res.total_cost / scale).reshape(kc, kc)
     # res.col_of[b, u] = v  ->  gpu_assign[.., v] = u
@@ -227,6 +243,8 @@ def plan_migration(
         backend=backend,
         context=context,
         context_key="migration_node",
+        row_ids=node_ids,
+        col_ids=node_ids,
     )
     node_assignment = np.empty(kc, dtype=np.int64)
     node_assignment[n_cols] = n_rows  # logical node l -> physical node k

@@ -110,8 +110,12 @@ def pack_jobs(
     that batches migration LAPs also selects the packing solver
     (``auction`` is near-optimal within ``n*eps`` on these float
     throughput weights; the default ``auto`` stays exact).  ``context``
-    threads the scheduler's :class:`MatchContext` so an unchanged packing
-    graph memo-hits and a slightly-changed one warm-starts.
+    threads the scheduler's :class:`MatchContext`, keyed by JOB identity:
+    rows are placed job ids and columns are pending job ids, so a graph
+    that gains/loses a job (the dominant round-to-round event under churn)
+    re-assembles last round's auction prices for the surviving jobs
+    instead of cold-starting the whole matrix, and an unchanged graph
+    memo-hits outright.
     """
     t0 = time.perf_counter()
     if not placed or not pending:
@@ -126,6 +130,9 @@ def pack_jobs(
         backend=backend,
         context=context,
         context_key="packing",
+        instance_ids=np.zeros(1, np.int64),
+        row_ids=np.array([u.job_id for u in placed], np.int64),
+        col_ids=np.array([v.job_id for v in pending], np.int64),
     ).pairs(0)
     matches: Dict[int, int] = {}
     strategies: Dict[int, str] = {}

@@ -37,10 +37,21 @@ class RoundDecision:
     packing: PackingResult
     migration: Optional[MigrationResult]
     timings: Dict[str, float]
+    #: this round's delta of the scheduler's MatchContext stats (memo /
+    #: warm / cold instances, price invalidations, ...) — the per-round
+    #: warm-hit telemetry the churn-replay CI gate and the simulator
+    #: aggregate.
+    match_stats: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def total_overhead_s(self) -> float:
         return sum(self.timings.values())
+
+    @property
+    def warm_hits(self) -> int:
+        """Instances this round served from the identity-keyed context
+        (memoised or price-warm) across all LAP families."""
+        return int(self.match_stats.get("warm_instances", 0))
 
 
 class TesseraeScheduler:
@@ -69,11 +80,14 @@ class TesseraeScheduler:
         self.migration_algorithm = migration_algorithm
         self.lap_backend = lap_backend
         self.packed_ok = packed_ok
-        #: warm-start state threaded across rounds: the packing matching,
-        #: the Algorithm-2 node-pair fan-out and the final node match all
-        #: keep their auction prices / memoised assignments here, so a
-        #: round whose placements barely moved (the common case, Fig. 2)
-        #: re-solves only what actually changed.
+        #: identity-keyed warm-start state threaded across rounds: the
+        #: packing matching (keyed by job ids), the Algorithm-2 node-pair
+        #: fan-out (node-pair / GPU-slot ids) and the final node match
+        #: (node ids) all keep their auction prices / memoised assignments
+        #: here, so a round whose placements barely moved (the common
+        #: case, Fig. 2) re-solves only what actually changed — including
+        #: under churn, where jobs arriving/finishing change the packing
+        #: graph's SHAPE but not the surviving identities.
         self.match_context = match_context if match_context is not None else MatchContext()
 
     def decide(
@@ -84,6 +98,7 @@ class TesseraeScheduler:
         num_gpus_of: Optional[Dict[int, int]] = None,
     ) -> RoundDecision:
         timings: Dict[str, float] = {}
+        stats_before = dict(self.match_context.stats)
 
         t0 = time.perf_counter()
         ordered = self.policy.order(active_jobs, now, self.cluster)
@@ -128,7 +143,14 @@ class TesseraeScheduler:
             plan = migration.physical_plan
         timings["migrate_s"] = time.perf_counter() - t0
 
-        return RoundDecision(plan, placed, pending, packing, migration, timings)
+        match_stats = {
+            k: v - stats_before.get(k, 0)
+            for k, v in self.match_context.stats.items()
+            if v != stats_before.get(k, 0)
+        }
+        return RoundDecision(
+            plan, placed, pending, packing, migration, timings, match_stats
+        )
 
     def prewarm(
         self,

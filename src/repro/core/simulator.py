@@ -69,6 +69,10 @@ class SimResult:
     overhead: Dict[str, float]
     lp_refresh_s: float
     contention_integral: Dict[int, float]  # job_id -> avg demand/capacity
+    #: per-round MatchContext stat deltas (memo/warm/cold instances, price
+    #: invalidations) — the identity-keyed warm-start telemetry the churn
+    #: replay tests and the CI perf-smoke gate read.
+    match_rounds: List[Dict[str, int]] = dataclasses.field(default_factory=list)
 
     @property
     def jcts(self) -> np.ndarray:
@@ -109,6 +113,23 @@ class SimResult:
             d["ftf_p90"] = float(np.percentile(rho, 90))
         return d
 
+    def warm_hit_rounds(self, skip: int = 1) -> int:
+        """Rounds (after the first ``skip`` warmup rounds) in which the
+        scheduler served at least one LAP instance from its identity-keyed
+        context — the churn-replay acceptance metric."""
+        return sum(
+            1
+            for rs in self.match_rounds[skip:]
+            if rs.get("warm_instances", 0) > 0
+        )
+
+    @property
+    def total_bid_iters(self) -> int:
+        """Not tracked per round by the scheduler timings — derived from
+        the context stats the rounds accumulated (0 when the backend is
+        exact)."""
+        return sum(rs.get("bid_iters", 0) for rs in self.match_rounds)
+
 
 class Simulator:
     def __init__(
@@ -136,6 +157,7 @@ class Simulator:
         prev_plan: Optional[PlacementPlan] = None
         prev_gpus: Dict[int, frozenset] = {}
         total_migrations = 0
+        match_rounds: List[Dict[str, int]] = []
         overhead: Dict[str, float] = {}
         lp_refresh_s = 0.0
         contention_num: Dict[int, float] = {}
@@ -172,6 +194,7 @@ class Simulator:
                 )
 
             decision = self.scheduler.decide(active, now, prev_plan, num_gpus_of)
+            match_rounds.append(dict(decision.match_stats))
             for k, v in decision.timings.items():
                 overhead[k] = overhead.get(k, 0.0) + v
             if decision.migration is not None:
@@ -233,6 +256,7 @@ class Simulator:
             overhead,
             lp_refresh_s,
             contention,
+            match_rounds,
         )
 
     # ------------------------------------------------------------------ #

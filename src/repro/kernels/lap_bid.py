@@ -46,6 +46,13 @@ MIN_BLOCK_ROWS = 8
 MIN_BLOCK_COLS = 128
 
 
+def _resolve_interpret(interpret: bool | None) -> bool:
+    """None = auto: compiled on TPU, interpret mode on CPU/GPU hosts."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
 def _block_dims(n: int, m: int) -> tuple[int, int]:
     """Largest-useful (block_rows, block_cols) for an (n, m) instance:
     tile-aligned, never larger than the default blocks, never smaller than
@@ -139,15 +146,24 @@ def _bid_kernel_batched(
         best_v_ref[0], best_j_ref[0], second_ref[0] = _merge_top2(run, summary)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def lap_bid_pallas_batched(a: jax.Array, prices: jax.Array, interpret: bool = True):
+def lap_bid_pallas_batched(
+    a: jax.Array, prices: jax.Array, interpret: bool | None = None
+):
     """Batched bid step: ``a`` (B, n, m), ``prices`` (B, m).
 
     Returns (best_v, best_j, second_v), each (B, n).  Same padding contract
     as :func:`lap_bid_pallas`; the batch axis becomes the leading (major)
     grid dimension, so column tiles still run sequentially per instance and
     the running top-2 carry in the output refs stays per-instance.
+    ``interpret=None`` resolves automatically: compiled on TPU, interpret
+    mode elsewhere (the previous hard default of True silently ran the
+    interpreter on TPU when callers forgot the flag).
     """
+    return _lap_bid_pallas_batched_jit(a, prices, _resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _lap_bid_pallas_batched_jit(a: jax.Array, prices: jax.Array, interpret: bool):
     b, n, m = a.shape
     br, bc = _block_dims(n, m)
     n_pad = (n + br - 1) // br * br
@@ -179,14 +195,20 @@ def lap_bid_pallas_batched(a: jax.Array, prices: jax.Array, interpret: bool = Tr
     return best_v[:, :n, 0], best_j[:, :n, 0], second[:, :n, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def lap_bid_pallas(a: jax.Array, prices: jax.Array, interpret: bool = True):
+def lap_bid_pallas(a: jax.Array, prices: jax.Array, interpret: bool | None = None):
     """Returns (best_v, best_j, second_v), each (n,).
 
     ``a`` may be rectangular (n, m); the grid covers only the real columns
     (rounded up to one tile) and the ragged edge is masked in-kernel, so
     padding is plain zeros (callers guarantee m >= 2 real columns).
+    ``interpret=None`` resolves automatically (see
+    :func:`lap_bid_pallas_batched`).
     """
+    return _lap_bid_pallas_jit(a, prices, _resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _lap_bid_pallas_jit(a: jax.Array, prices: jax.Array, interpret: bool):
     n, m = a.shape
     br, bc = _block_dims(n, m)
     n_pad = (n + br - 1) // br * br

@@ -24,9 +24,12 @@ def _default_interpret() -> bool:
 def lap_bid_top2(vals: jax.Array):
     """Auction bid step on a precomputed (benefit - price) matrix.
 
-    Drop-in replacement for ``ref.lap_bid_top2`` (used by
-    ``auction_lap(use_kernel=True)``).  Accepts (n, m) or an explicit
-    (B, n, m) stack, which routes to :func:`lap_bid_pallas_batched`.
+    Drop-in replacement for ``ref.lap_bid_top2`` (kept as the parity-test
+    oracle surface; ``auction_lap(use_kernel=True)`` now calls
+    :func:`lap_bid` directly so the price subtraction fuses into the
+    kernel's tiled sweep instead of materialising ``vals`` per bid
+    round).  Accepts (n, m) or an explicit (B, n, m) stack, which routes
+    to :func:`lap_bid_pallas_batched`.
     NOTE: the auction fan-out does NOT reach the 3-D branch — under
     ``jax.vmap`` each instance is a 2-D tracer and vmap's pallas batching
     rule lifts the 2-D kernel into one batched ``pallas_call`` itself;

@@ -1,0 +1,298 @@
+"""Churn-replay differential suite: the end-to-end proof that identity-
+keyed warm starts preserve scheduler semantics under realistic churn.
+
+A 60+ round trace-driven :class:`Simulator` replay (Poisson arrivals,
+completions, and Tiresias demotion-resume on an oversubscribed cluster —
+the Philly-style churn regime) is driven through the full Tesserae
+pipeline twice per comparison:
+
+* **warm scipy vs cold scipy** — the strict differential: the warm arm
+  exercises the whole identity-keyed machinery (per-instance memoisation,
+  identity remapping of cached assignments, partial-batch compaction)
+  with an exact backend, so placements, packing matches, JCTs, makespan
+  and migration counts must be BIT-IDENTICAL to a context-free replay.
+* **warm auction vs cold scipy (shadow)** — per-round decision parity on
+  IDENTICAL inputs: a shadow cold-scipy scheduler decides each round from
+  the same (active set, previous plan), and the warm auction's migration
+  matching cost must match it exactly (costs are integer-quantised, where
+  the auction is provably exact) and its packing weight to within the
+  documented ``S * eps`` bound.  Assignment IDs are compared at the cost
+  level, not element-wise: equally-optimal ties (same-model pending jobs,
+  interchangeable empty nodes) are broken differently by different
+  solvers — see the "Semantic note" in ``migration.py``.
+* **warm auction vs cold auction** — the speedup direction: threading one
+  identity-keyed context across the replay must strictly reduce total bid
+  iterations vs resetting it every round, while serving warm hits in
+  nearly every round.  (The >= 2x gate vs the shape-keyed PR-2 emulation
+  lives in ``benchmarks/matching_microbench.py --churn``, where the
+  engine inputs are controlled directly.)
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import ClusterSpec
+from repro.core.policies import TiresiasPolicy
+from repro.core.profiler import ThroughputProfile
+from repro.core.scheduler import TesseraeScheduler
+from repro.core.simulator import SimConfig, Simulator
+from repro.core.traces import shockwave_trace
+
+pytest.importorskip("scipy.optimize")
+
+#: replay shape: 28 jobs arriving at ~220/h on a 16-GPU cluster gives a
+#: 60+ round replay with arrivals/completions nearly every round and
+#: repeated Tiresias queue demotions (queue_base well below job lengths).
+N_JOBS = 28
+ARRIVAL_RATE = 220.0
+SEED = 5
+MIN_ROUNDS = 30
+
+
+def _profile():
+    return ThroughputProfile()
+
+
+def _trace(profile):
+    return shockwave_trace(
+        num_jobs=N_JOBS,
+        arrival_rate_per_hour=ARRIVAL_RATE,
+        seed=SEED,
+        profile=profile,
+    )
+
+
+class RecordingScheduler(TesseraeScheduler):
+    """Records each round's decision surface; optionally replays cold
+    (context reset before every decide — the no-warm-start baseline)."""
+
+    def __init__(self, *args, cold=False, shadow=None, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.cold = cold
+        #: optional scheduler solving the SAME round inputs first — the
+        #: per-round differential oracle (its decisions are discarded and
+        #: its own context is reset, so it is always a cold reference)
+        self.shadow = shadow
+        self.round_log = []
+
+    def decide(self, active_jobs, now, prev_plan=None, num_gpus_of=None):
+        if self.cold:
+            self.match_context.reset()
+        shadow_entry = None
+        if self.shadow is not None:
+            self.shadow.match_context.reset()
+            sd = self.shadow.decide(active_jobs, now, prev_plan, num_gpus_of)
+            shadow_entry = {
+                "pack_w": sd.packing.total_weight,
+                "packs": dict(sd.packing.matches),
+                "mig_cost": None
+                if sd.migration is None
+                else sd.migration.matching_cost,
+            }
+        d = super().decide(active_jobs, now, prev_plan, num_gpus_of)
+        self.round_log.append(
+            {
+                "plan": {j: frozenset(g) for j, g in d.plan.job_gpu_map().items()},
+                "packs": dict(d.packing.matches),
+                "pack_w": d.packing.total_weight,
+                "mig_cost": None
+                if d.migration is None
+                else d.migration.matching_cost,
+                "shadow": shadow_entry,
+                "match_stats": dict(d.match_stats),
+            }
+        )
+        return d
+
+
+def _run(backend, cold=False, shadow_backend=None, enable_packing=True):
+    profile = _profile()
+    cluster = ClusterSpec(4, 4)
+    shadow = None
+    if shadow_backend is not None:
+        shadow = TesseraeScheduler(
+            cluster,
+            TiresiasPolicy(profile, queue_base=900.0),
+            profile,
+            lap_backend=shadow_backend,
+            enable_packing=enable_packing,
+        )
+    sched = RecordingScheduler(
+        cluster,
+        TiresiasPolicy(profile, queue_base=900.0),
+        profile,
+        lap_backend=backend,
+        cold=cold,
+        shadow=shadow,
+        enable_packing=enable_packing,
+    )
+    sim = Simulator(
+        cluster,
+        _trace(profile),
+        sched,
+        profile,
+        SimConfig(round_duration_s=360.0, resume_fraction=0.25),
+    )
+    return sim.run(), sched
+
+
+def _jcts(res):
+    return np.array([res.jobs[j].finish_time for j in sorted(res.jobs)])
+
+
+def _has_demotion_resume(round_log):
+    """True iff some job left the plan mid-life and later returned — the
+    Tiresias preempt/resume pattern the replay must exercise."""
+    seen, gone, resumed = set(), set(), set()
+    for entry in round_log:
+        running = set(entry["plan"])
+        gone |= {j for j in seen if j not in running}
+        resumed |= gone & running
+        seen |= running
+    return bool(resumed)
+
+
+class TestScipyDifferential:
+    """Identity-keyed warm starts with an exact backend must be invisible:
+    memo remaps and compacted sub-solves reproduce the cold replay
+    bit-for-bit."""
+
+    @pytest.fixture(scope="class")
+    def arms(self):
+        warm, warm_sched = _run("scipy", cold=False)
+        cold, cold_sched = _run("scipy", cold=True)
+        return warm, warm_sched, cold, cold_sched
+
+    def test_replay_shape(self, arms):
+        warm, warm_sched, *_ = arms
+        assert warm.num_rounds >= MIN_ROUNDS
+        assert _has_demotion_resume(warm_sched.round_log), (
+            "trace never exercised Tiresias demotion-resume"
+        )
+
+    def test_identical_placements(self, arms):
+        warm, warm_sched, cold, cold_sched = arms
+        assert len(warm_sched.round_log) == len(cold_sched.round_log)
+        for t, (a, b) in enumerate(zip(warm_sched.round_log, cold_sched.round_log)):
+            assert a["plan"] == b["plan"], f"round {t}: physical plans differ"
+            assert a["packs"] == b["packs"], f"round {t}: packing differs"
+
+    def test_identical_jcts_and_makespan(self, arms):
+        warm, _, cold, _ = arms
+        np.testing.assert_array_equal(_jcts(warm), _jcts(cold))
+        assert warm.makespan_s == cold.makespan_s
+        assert warm.total_migrations == cold.total_migrations
+        assert warm.num_rounds == cold.num_rounds
+
+    def test_warm_arm_actually_warm(self, arms):
+        warm, *_ = arms
+        memo = sum(r.get("memo_instances", 0) for r in warm.match_rounds)
+        assert memo > 0, "scipy arm never memo-hit: identity keying inert"
+        assert warm.warm_hit_rounds(skip=2) >= 0.75 * (warm.num_rounds - 2)
+
+
+class TestAuctionDifferential:
+    """Warm identity-keyed auction vs a cold scipy shadow deciding from
+    the SAME per-round inputs: integer-quantised migration matching costs
+    must agree exactly; packing weights to within the documented bound."""
+
+    @pytest.fixture(scope="class")
+    def warm(self):
+        return _run("auction", cold=False, shadow_backend="scipy")
+
+    def test_migration_costs_exact(self):
+        """Packing disabled, so both arms relabel the SAME logical plan
+        every round: the integer-quantised node-pair + node matching cost
+        of the warm identity-keyed auction must equal cold scipy's
+        exactly, all rounds, despite churn."""
+        _, sched = _run(
+            "auction", cold=False, shadow_backend="scipy", enable_packing=False
+        )
+        compared = 0
+        for t, entry in enumerate(sched.round_log):
+            if entry["mig_cost"] is None:
+                continue
+            compared += 1
+            assert entry["mig_cost"] == pytest.approx(
+                entry["shadow"]["mig_cost"], abs=1e-9
+            ), f"round {t}: warm auction migration cost != cold scipy"
+        assert compared >= MIN_ROUNDS
+
+    def test_migration_costs_exact_when_packing_agrees(self, warm):
+        """With packing on, the migration inputs only coincide on rounds
+        where both arms packed identically (ties aside, most rounds) —
+        and there the costs must again agree exactly."""
+        _, sched = warm
+        compared = 0
+        for t, entry in enumerate(sched.round_log):
+            if entry["mig_cost"] is None or entry["packs"] != entry["shadow"]["packs"]:
+                continue
+            compared += 1
+            assert entry["mig_cost"] == pytest.approx(
+                entry["shadow"]["mig_cost"], abs=1e-9
+            ), f"round {t}: warm auction migration cost != cold scipy"
+        assert compared >= MIN_ROUNDS // 2
+
+    def test_packing_weight_within_bound(self, warm):
+        _, sched = warm
+        for t, entry in enumerate(sched.round_log):
+            # documented engine bound: S * eps_min < 1 with S the short
+            # side of the packing graph (eps_min = 1/(S+1))
+            assert entry["pack_w"] >= entry["shadow"]["pack_w"] - 1.0 - 1e-6, (
+                f"round {t}: packing weight beyond the auction bound"
+            )
+
+    def test_jct_sanity(self, warm):
+        """Not a strict differential (ties break differently): the warm
+        auction replay must still finish every job with the same round
+        count and a makespan within one round of the scipy baseline."""
+        res, _ = warm
+        cold, _ = _run("scipy", cold=True)
+        assert res.num_rounds == pytest.approx(cold.num_rounds, abs=2)
+        assert abs(res.makespan_s - cold.makespan_s) <= 2 * 360.0
+
+
+class TestWarmSpeedup:
+    """Threading ONE identity-keyed context across the replay must
+    strictly cut auction work vs per-round cold resets, with warm hits in
+    (nearly) every round — the steady-state the tentpole exists for."""
+
+    def test_fewer_bid_iterations_and_warm_hits(self):
+        warm, _ = _run("auction", cold=False)
+        cold, _ = _run("auction", cold=True)
+        assert warm.total_bid_iters < cold.total_bid_iters, (
+            warm.total_bid_iters,
+            cold.total_bid_iters,
+        )
+        # observed ~2.2x on this trace; gate conservatively at 1.5x here
+        # (the >= 2x acceptance gate runs on the controlled engine-level
+        # churn replay in CI: matching_microbench --churn)
+        assert cold.total_bid_iters >= 1.5 * warm.total_bid_iters
+        assert warm.warm_hit_rounds(skip=2) >= 0.75 * (warm.num_rounds - 2)
+
+    def test_resume_fraction_knob_still_differentiates(self):
+        """The churn trace must keep exercising the cold-start-vs-resume
+        distinction (PR-2 satellite) — resumes getting free must not be a
+        no-op on this workload."""
+        profile = _profile()
+        cluster = ClusterSpec(4, 4)
+
+        def run(frac):
+            sched = TesseraeScheduler(
+                cluster,
+                TiresiasPolicy(profile, queue_base=900.0),
+                profile,
+                lap_backend="scipy",
+            )
+            sim = Simulator(
+                cluster,
+                _trace(profile),
+                sched,
+                profile,
+                SimConfig(round_duration_s=360.0, resume_fraction=frac),
+            )
+            return sim.run()
+
+        free = run(0.0)
+        costly = run(1.0)
+        assert free.avg_jct_s < costly.avg_jct_s

@@ -1,8 +1,10 @@
-"""Warm-start + rectangular-path properties of the matching engine (PR 2).
+"""Warm-start + rectangular-path properties of the matching engine.
 
-Pins the MatchContext contract: scipy parity of assignments (totals within
-the documented eps bound) when prices are carried across mutated cost
-batches — including the row-invalidation path — plus memoisation, the
+Pins the identity-keyed MatchContext contract: scipy parity of assignments
+(totals within the documented eps bound) when prices are carried across
+mutated cost batches — including the row-invalidation path — plus
+per-instance memoisation with identity remapping (grow / shrink / permute
+of instances, rows and columns), partial-batch compaction edge cases, the
 padding-free rectangular dispatch, the a-posteriori price certificate, and
 the strictly-fewer-bid-iterations acceptance criterion on a replayed
 multi-round trace.
@@ -13,7 +15,11 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.matching import MatchContext, solve_lap_batched
-from repro.core.matching.engine import _rect_bound_violation, _row_fingerprints
+from repro.core.matching.engine import (
+    _f64_bits,
+    _rect_bound_violation,
+    _rows_unchanged_dev,
+)
 
 scipy_lsa = pytest.importorskip("scipy.optimize").linear_sum_assignment
 
@@ -169,7 +175,11 @@ class TestMemoisation:
         assert ctx.stats["memo_hits"] == 0 and not r.warm.any()
         assert len(ctx) == 2
 
-    def test_shape_change_is_a_cold_start(self):
+    def test_shape_change_without_ids_is_not_warm(self):
+        """With DEFAULT (positional) identities, a grown batch of fresh
+        random contents matches positions 0-3 but every row's content
+        changed — no instance is memoised or schedule-warm.  (Callers who
+        want shape changes to stay warm pass stable instance_ids.)"""
         rng = np.random.default_rng(4)
         ctx = MatchContext()
         solve_lap_batched(
@@ -242,11 +252,17 @@ class TestCertificate:
         entry = next(iter(ctx._entries.values()))
         assigned = np.zeros((4, 16), bool)
         np.put_along_axis(assigned, entry.col_solve, entry.col_solve >= 0, axis=1)
-        entry.prices = np.where(assigned, entry.prices, 1e6).astype(np.float32)
-        # mutate one OTHER instance so the re-solve is a real warm solve
-        # (identical costs would memo-hit and never consult the prices)
+        entry.prices = np.where(
+            assigned, np.asarray(entry.prices), 1e6
+        ).astype(np.float32)
+        # mutate the poisoned instances so they actually RE-SOLVE with the
+        # poisoned warm prices: an unchanged instance memo-hits (partial-
+        # batch compaction) and never consults its prices at all.  The
+        # mutation re-randomises a row, so the stale 1e6 prices on the
+        # unassigned columns survive into the warm solve.
         costs2 = costs.copy()
-        costs2[0, 0] = rng.uniform(0, 10, 16)
+        for i in range(4):
+            costs2[i, i % 4] = rng.uniform(0, 10, 16)
         res = solve_lap_batched(costs2, backend="auction", context=ctx, context_key="c")
         assert ctx.stats["memo_hits"] == 0
         # the certificate must flag the poisoned warm instances and force
@@ -305,17 +321,334 @@ class TestReplayedTrace:
 
 
 class TestFingerprints:
-    def test_row_sensitivity(self):
+    """The context's fingerprints are the exact f64 bit patterns of the
+    benefit cells (device-resident uint32 lanes) — comparison is
+    collision-free, so a memo hit can never return a stale result."""
+
+    def _unchanged(self, new, old, old_idx, row_pos, col_pos):
+        import jax.numpy as jnp
+
+        return np.asarray(
+            _rows_unchanged_dev(
+                jnp.asarray(_f64_bits(new)),
+                jnp.asarray(_f64_bits(old)),
+                jnp.asarray(old_idx),
+                jnp.asarray(row_pos),
+                jnp.asarray(col_pos),
+            )
+        )
+
+    def test_bits_roundtrip_exact(self):
         rng = np.random.default_rng(11)
+        a = rng.uniform(-5, 5, (3, 4, 6))
+        bits = _f64_bits(a)
+        assert bits.shape == (3, 4, 6, 2) and bits.dtype == np.uint32
+        assert (bits.reshape(3, 4, 6 * 2).view(np.float64) == a).all()
+
+    def test_single_cell_sensitivity(self):
+        rng = np.random.default_rng(12)
         ben = rng.uniform(-5, 5, (3, 6, 9))
-        fp = _row_fingerprints(ben)
-        assert fp.shape == (3, 6)
         ben2 = ben.copy()
-        ben2[1, 4, 8] += 1e-9
-        fp2 = _row_fingerprints(ben2)
-        changed = fp != fp2
+        ben2[1, 4, 8] += 1e-12  # far below any float32 resolution
+        b, n, m = ben.shape
+        idx = np.arange(b)
+        rp = np.broadcast_to(np.arange(n), (b, n))
+        cp = np.broadcast_to(np.arange(m), (b, m))
+        changed = ~self._unchanged(ben2, ben, idx, rp, cp)
         assert changed[1, 4] and changed.sum() == 1
 
-    def test_deterministic_across_calls(self):
-        ben = np.arange(24, dtype=np.float64).reshape(1, 4, 6)
-        assert (_row_fingerprints(ben) == _row_fingerprints(ben.copy())).all()
+    def test_new_columns_do_not_count_against_a_row(self):
+        """A row that only GAINED a column is unchanged on survivors: the
+        comparison is restricted to surviving column identities."""
+        rng = np.random.default_rng(13)
+        old = rng.uniform(0, 1, (1, 3, 4))
+        new = np.concatenate([old, rng.uniform(0, 1, (1, 3, 1))], axis=2)
+        rp = np.broadcast_to(np.arange(3), (1, 3))
+        cp = np.array([[0, 1, 2, 3, -1]])  # last col is new
+        assert self._unchanged(new, old, np.zeros(1, np.int64), rp, cp).all()
+
+    def test_negative_zero_is_a_change(self):
+        """-0.0 == 0.0 numerically but differs at the bit level; treating
+        it as changed only costs a spurious (still valid) re-solve."""
+        old = np.zeros((1, 2, 2))
+        new = old.copy()
+        new[0, 0, 0] = -0.0
+        rp = np.broadcast_to(np.arange(2), (1, 2))
+        cp = np.broadcast_to(np.arange(2), (1, 2))
+        un = self._unchanged(new, old, np.zeros(1, np.int64), rp, cp)
+        assert not un[0, 0] and un[0, 1]
+
+
+class TestIdentityKeying:
+    """Tentpole satellite: grow/shrink/permute instances, rows and columns
+    between rounds — surviving identities reuse state, parity always
+    holds, and unchanged-identity subsets pay zero bid iterations."""
+
+    def test_instance_permutation_is_pure_memo(self):
+        rng = np.random.default_rng(20)
+        costs = rng.integers(0, 16, (6, 5, 5)).astype(float)
+        ids = np.arange(6) * 7 + 3
+        ctx = MatchContext()
+        r1 = solve_lap_batched(
+            costs, backend="auction", context=ctx, context_key="i",
+            instance_ids=ids,
+        )
+        perm = rng.permutation(6)
+        r2 = solve_lap_batched(
+            costs[perm], backend="auction", context=ctx, context_key="i",
+            instance_ids=ids[perm],
+        )
+        assert r2.warm.all() and r2.bid_iters.sum() == 0
+        assert ctx.stats["memo_hits"] == 1
+        assert (r2.col_of == r1.col_of[perm]).all()
+
+    def test_instance_arrival_departure(self):
+        """Survivors memo-hit with remapped assignments; only arrivals
+        solve (the compaction path) — and parity holds for everyone."""
+        rng = np.random.default_rng(21)
+        costs = rng.integers(0, 16, (8, 4, 4)).astype(float)
+        ids = np.arange(8)
+        ctx = MatchContext()
+        r1 = solve_lap_batched(
+            costs, backend="auction", context=ctx, context_key="a",
+            instance_ids=ids,
+        )
+        keep = np.array([0, 2, 3, 6, 7])
+        fresh = rng.integers(0, 16, (2, 4, 4)).astype(float)
+        costs2 = np.concatenate([costs[keep], fresh])
+        ids2 = np.concatenate([ids[keep], [100, 101]])
+        r2 = solve_lap_batched(
+            costs2, backend="auction", context=ctx, context_key="a",
+            instance_ids=ids2,
+        )
+        assert r2.warm[:5].all() and not r2.warm[5:].any()
+        assert r2.bid_iters[:5].sum() == 0 and (r2.bid_iters[5:] > 0).all()
+        assert (r2.col_of[:5] == r1.col_of[keep]).all()
+        np.testing.assert_allclose(r2.total_cost, _scipy_totals(costs2))
+
+    def test_row_col_permutation_within_instance(self):
+        """Permuting rows AND columns of an unchanged instance memo-hits,
+        with the cached assignment remapped through both identity maps."""
+        rng = np.random.default_rng(22)
+        cost = rng.integers(0, 30, (1, 6, 6)).astype(float)
+        rid = np.arange(10, 16)
+        cid = np.arange(50, 56)
+        ctx = MatchContext()
+        r1 = solve_lap_batched(
+            cost, backend="auction", context=ctx, context_key="p",
+            row_ids=rid, col_ids=cid,
+        )
+        rp = rng.permutation(6)
+        cp = rng.permutation(6)
+        cost2 = cost[:, rp][:, :, cp]
+        r2 = solve_lap_batched(
+            cost2, backend="auction", context=ctx, context_key="p",
+            row_ids=rid[rp], col_ids=cid[cp],
+        )
+        assert r2.warm.all() and r2.bid_iters.sum() == 0
+        np.testing.assert_allclose(r2.total_cost, r1.total_cost)
+        # remapped assignment must BE the permuted original assignment
+        inv_cp = np.argsort(cp)
+        assert (r2.col_of[0] == inv_cp[r1.col_of[0][rp]]).all()
+
+    def test_column_growth_keeps_surviving_prices(self):
+        """Packing shape: pending set gains a job (one new column).  The
+        surviving columns keep their prices (identity re-assembly), so
+        the warm solve converges in fewer bid rounds than a cold solve of
+        the same instance."""
+        rng = np.random.default_rng(23)
+        w = rng.uniform(0, 5, (1, 6, 24))
+        cid = np.arange(24)
+        ctx = MatchContext()
+        solve_lap_batched(
+            w, maximize=True, backend="auction", context=ctx,
+            context_key="g", col_ids=cid,
+        )
+        w2 = np.concatenate([w, rng.uniform(0, 5, (1, 6, 1))], axis=2)
+        warm = solve_lap_batched(
+            w2, maximize=True, backend="auction", context=ctx,
+            context_key="g", col_ids=np.concatenate([cid, [99]]),
+        )
+        cold = solve_lap_batched(w2, maximize=True, backend="auction")
+        assert warm.warm[0]  # identity-only delta: schedule skipped
+        assert warm.bid_iters.sum() < cold.bid_iters.sum(), (
+            warm.bid_iters, cold.bid_iters
+        )
+        bound = 6 / 7 + 1e-6
+        assert abs(warm.total_cost[0] - _scipy_totals(w2, True)[0]) <= bound
+
+    def test_pad_cells_do_not_couple_instances(self):
+        """Masked/forbidden-edge batches: the pad constant is PER
+        instance, so the batch's max-|benefit| instance departing must not
+        change the pad bit pattern of (and thereby un-memo) survivors."""
+        rng = np.random.default_rng(25)
+        b, n, m = 6, 4, 7  # rect auction path; forbidden cells take the pad
+        costs = rng.uniform(0, 5, (b, n, m))
+        costs[0] *= 100.0  # instance 0 holds the batch max
+        costs[:, 1, 2] = np.inf  # forbidden edges -> pad cells everywhere
+        ids = np.arange(b)
+        ctx = MatchContext()
+        solve_lap_batched(
+            costs, backend="auction", context=ctx, context_key="pad",
+            instance_ids=ids,
+        )
+        res = solve_lap_batched(
+            costs[1:], backend="auction", context=ctx, context_key="pad",
+            instance_ids=ids[1:],
+        )
+        assert res.warm.all() and res.bid_iters.sum() == 0, (
+            "survivors lost memo status when the batch-max instance left"
+        )
+        bound = 4 / 5 + 1e-6
+        assert np.all(np.abs(res.total_cost - _scipy_totals(costs[1:])) <= bound)
+
+    def test_transposed_rect_permutation_memo(self):
+        """n > m (skew packing orientation): permuting instances, rows AND
+        columns of an unchanged batch memo-hits with the assignment
+        remapped exactly through all three identity maps."""
+        rng = np.random.default_rng(24)
+        B, n, m = 5, 20, 6
+        costs = rng.uniform(0, 10, (B, n, m))
+        ids, rid, cid = np.arange(B), np.arange(100, 100 + n), np.arange(500, 500 + m)
+        ctx = MatchContext()
+        r1 = solve_lap_batched(
+            costs, backend="auction", context=ctx, context_key="t",
+            instance_ids=ids, row_ids=rid, col_ids=cid,
+        )
+        pi, pr, pc = rng.permutation(B), rng.permutation(n), rng.permutation(m)
+        r2 = solve_lap_batched(
+            costs[pi][:, pr][:, :, pc], backend="auction", context=ctx,
+            context_key="t", instance_ids=ids[pi], row_ids=rid[pr],
+            col_ids=cid[pc],
+        )
+        assert r2.embedding == "rect"
+        assert r2.warm.all() and r2.bid_iters.sum() == 0
+        inv_pc = np.argsort(pc)
+        for b in range(B):
+            orig = r1.col_of[pi[b]]
+            expect = np.where(orig[pr] >= 0, inv_pc[np.clip(orig[pr], 0, None)], -1)
+            assert (r2.col_of[b] == expect).all()
+        # totals only differ by float summation order under permutation
+        np.testing.assert_allclose(r2.total_cost, r1.total_cost[pi], rtol=1e-12)
+
+    @given(
+        st.integers(2, 8),    # starting batch
+        st.integers(3, 6),    # n
+        st.integers(2, 5),    # rounds
+        st.integers(0, 2**32 - 1),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_churn_property(self, b, n, rounds, seed):
+        """Random instance arrivals/departures + row mutations every
+        round: parity always holds, unchanged surviving instances always
+        memo-hit with zero bid iterations."""
+        rng = np.random.default_rng(seed)
+        costs = rng.integers(0, 16, (b, n, n)).astype(float)
+        ids = np.arange(b, dtype=np.int64)
+        next_id = b
+        ctx = MatchContext()
+        prev = {}
+        for _ in range(rounds):
+            res = solve_lap_batched(
+                costs, backend="auction", context=ctx, context_key="h",
+                instance_ids=ids,
+            )
+            np.testing.assert_allclose(res.total_cost, _scipy_totals(costs))
+            for k, i in enumerate(ids):
+                if i in prev and prev[i] is not None:
+                    assert res.warm[k], f"surviving unchanged {i} not warm"
+                    assert res.bid_iters[k] == 0
+            # next round: drop one, add one, mutate one survivor
+            prev = {int(i): True for i in ids}
+            order = rng.permutation(len(ids))
+            keep = order[: max(1, len(ids) - 1)]
+            costs, ids = costs[keep], ids[keep]
+            if rng.random() < 0.8:
+                costs = np.concatenate(
+                    [costs, rng.integers(0, 16, (1, n, n)).astype(float)]
+                )
+                ids = np.concatenate([ids, [next_id]])
+                prev[next_id] = None  # new this round: no memo claim
+                next_id += 1
+            mi = int(rng.integers(len(keep)))
+            costs = costs.copy()
+            costs[mi, rng.integers(n)] = rng.integers(0, 16, n)
+            prev[int(ids[mi])] = None  # mutated: no memo claim
+
+
+class TestCompaction:
+    """Satellite: partial-batch compaction edge cases — 0-changed (pure
+    memo), 1-changed, all-changed and majority-changed sub-batches all
+    match the uncompacted path bit-for-bit, and the scatter preserves
+    per-instance converged flags."""
+
+    def _round_pair(self, n_changed, b=8, k=5, seed=30):
+        rng = np.random.default_rng(seed)
+        costs = rng.integers(0, 16, (b, k, k)).astype(float)
+        ctx = MatchContext()
+        solve_lap_batched(costs, backend="auction", context=ctx, context_key="e")
+        costs2 = costs.copy()
+        changed = rng.choice(b, n_changed, replace=False)
+        # changed instances get FRESH identities so their compacted solve
+        # is a cold solve — bit-for-bit comparable to the uncompacted path
+        ids2 = np.arange(b, dtype=np.int64)
+        for j, i in enumerate(changed):
+            costs2[i] = rng.integers(0, 16, (k, k)).astype(float)
+            ids2[i] = 1000 + j
+        return ctx, costs, costs2, ids2, changed
+
+    @pytest.mark.parametrize("n_changed", [0, 1, 5, 8])
+    def test_compacted_matches_uncompacted_bitwise(self, n_changed):
+        ctx, costs, costs2, ids2, changed = self._round_pair(n_changed)
+        res = solve_lap_batched(
+            costs2, backend="auction", context=ctx, context_key="e",
+            instance_ids=ids2,
+        )
+        # uncompacted reference: the same batch, no context at all
+        ref = solve_lap_batched(costs2, backend="auction")
+        assert (res.col_of == ref.col_of).all()
+        np.testing.assert_array_equal(res.total_cost, ref.total_cost)
+        assert res.warm.sum() == 8 - n_changed
+        assert (res.bid_iters[changed] > 0).all() if n_changed else True
+        unchanged = np.setdiff1d(np.arange(8), changed)
+        assert (res.bid_iters[unchanged] == 0).all()
+
+    def test_scatter_preserves_converged_flags(self):
+        """Regression: memoised instances keep their cached converged /
+        fallback flags while a starved compacted solve reports its own —
+        the scatter must not smear either across the batch."""
+        # seed chosen so the 2-iteration solve is genuinely suboptimal
+        # (some seeds luck into the optimum, where not counting a
+        # fallback is the documented behaviour)
+        rng = np.random.default_rng(32)
+        b, k = 6, 8
+        costs = rng.integers(0, 50, (b, k, k)).astype(float)
+        ctx = MatchContext()
+        r1 = solve_lap_batched(costs, backend="auction", context=ctx, context_key="f")
+        assert r1.converged.all()
+        costs2 = costs.copy()
+        costs2[2] = rng.integers(0, 50, (k, k)).astype(float)
+        ids2 = np.arange(b, dtype=np.int64)
+        ids2[2] = 777  # fresh identity -> cold compacted solve
+        res = solve_lap_batched(
+            costs2, backend="auction", context=ctx, context_key="f",
+            instance_ids=ids2, max_iters=2,  # starve ONLY the compacted lane
+        )
+        assert not res.converged[2] and res.used_fallback[2]
+        keep = np.setdiff1d(np.arange(b), [2])
+        assert res.converged[keep].all()
+        assert not res.used_fallback[keep].any()
+        np.testing.assert_allclose(res.total_cost, _scipy_totals(costs2))
+
+    def test_memo_round_is_bit_identical(self):
+        """0-changed: the pure-memo round reproduces the previous result
+        bit-for-bit (assignments AND totals)."""
+        ctx, costs, costs2, ids2, _ = self._round_pair(0)
+        base = solve_lap_batched(costs, backend="auction")
+        res = solve_lap_batched(
+            costs2, backend="auction", context=ctx, context_key="e",
+            instance_ids=ids2,
+        )
+        assert (res.col_of == base.col_of).all()
+        np.testing.assert_array_equal(res.total_cost, base.total_cost)
+        assert res.bid_iters.sum() == 0 and res.warm.all()
