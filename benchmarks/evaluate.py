@@ -1,0 +1,277 @@
+"""End-to-end policy-evaluation harness: {policy x scenario x cluster}.
+
+The repo's first full reproduction of the paper's comparison methodology:
+every arm drives one scheduler configuration (Tesserae-T vs the
+Tiresias / Tiresias-Single / Gavel baselines already in
+``repro.core.policies``) over one named workload scenario from the
+:mod:`repro.workloads` registry, through the round-based
+:class:`~repro.core.simulator.Simulator`, with ONE identity-keyed
+:class:`~repro.core.matching.MatchContext` threaded across the arm's
+rounds (the production configuration — warm-start telemetry is recorded
+per arm).  Emits ``BENCH_endtoend.json``:
+
+* per-arm metrics: avg / p50 / p90 / p99 JCT, makespan, migrations,
+  rounds, scheduler overhead;
+* per-arm warm-hit telemetry: memo / warm / cold instances, warm-hit
+  rounds, auction bid iterations;
+* per-scenario derived speedups of the Tesserae arm over each baseline
+  (the paper's headline avg-JCT / makespan ratios).
+
+``--smoke`` is the CI lane: a tiny sweep (2 policies x 2 scenarios x 16
+GPUs) gated on metric-schema validity, bit-identical determinism across
+two seeded runs, and warm-hit presence — NEVER on timing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import build_scheduler
+from repro import workloads
+from repro.core.profiler import ThroughputProfile
+from repro.core.simulator import SimConfig, Simulator
+
+DEFAULT_POLICIES = ("tesserae-t", "tiresias", "tiresias-single", "gavel")
+DEFAULT_SCENARIOS = (
+    "poisson-steady",
+    "diurnal-lognorm",
+    "philly-like-burst",
+    "tiresias-churn",
+    "philly-sample",
+    "hetero-mixed",
+)
+
+#: fields that must be identical across two runs of the same seed (wall
+#: times excluded — they are measurements, not decisions)
+DETERMINISTIC_METRICS = (
+    "avg_jct_s",
+    "p50_jct_s",
+    "p90_jct_s",
+    "p99_jct_s",
+    "makespan_s",
+    "migrations",
+    "rounds",
+)
+TELEMETRY_KEYS = (
+    "warm_instances",
+    "memo_instances",
+    "cold_instances",
+    "bid_iters",
+    "warm_hit_rounds",
+    "lru_restored_cols",
+)
+
+
+def run_arm(
+    policy: str,
+    scenario_name: str,
+    num_gpus: int,
+    num_jobs: int,
+    seed: int,
+    backend: str = "auto",
+    profile: Optional[ThroughputProfile] = None,
+) -> Dict:
+    profile = profile or ThroughputProfile()
+    sc = workloads.scenario(scenario_name)
+    cluster = sc.make_cluster(num_gpus)
+    trace = workloads.to_jobspecs(
+        sc.make_trace(seed=seed, num_jobs=num_jobs, profile=profile), profile
+    )
+    sched = build_scheduler(policy, cluster, profile)
+    sched.lap_backend = backend
+    t0 = time.perf_counter()
+    res = Simulator(cluster, trace, sched, profile, SimConfig()).run()
+    wall = time.perf_counter() - t0
+
+    jcts = res.jcts
+    telemetry = {k: 0 for k in TELEMETRY_KEYS}
+    for rs in res.match_rounds:
+        for k in ("warm_instances", "memo_instances", "cold_instances", "bid_iters"):
+            telemetry[k] += int(rs.get(k, 0))
+    telemetry["warm_hit_rounds"] = int(res.warm_hit_rounds(skip=1))
+    telemetry["lru_restored_cols"] = int(
+        sched.match_context.stats.get("lru_restored_cols", 0)
+    )
+    return {
+        "policy": policy,
+        "scenario": scenario_name,
+        "num_gpus": num_gpus,
+        "num_jobs": len(trace),
+        "seed": seed,
+        "backend": backend,
+        "heterogeneous": bool(cluster.is_heterogeneous),
+        "metrics": {
+            # SimResult.summary() is the single source of truth for the
+            # shared metrics; the harness only adds the p99 tail and
+            # integer-types the counters for the JSON record.
+            **res.summary(),
+            "p99_jct_s": float(np.percentile(jcts, 99)),
+            "migrations": int(res.total_migrations),
+            "rounds": int(res.num_rounds),
+        },
+        "match_telemetry": telemetry,
+        "wall_s": wall,
+    }
+
+
+def derive_speedups(arms: List[Dict], tesserae: str) -> Dict[str, Dict]:
+    """Per-scenario avg-JCT / makespan ratios of every baseline over the
+    Tesserae arm (ratio > 1: Tesserae wins)."""
+    out: Dict[str, Dict] = {}
+    by_scenario: Dict[str, Dict[str, Dict]] = {}
+    for a in arms:
+        by_scenario.setdefault(a["scenario"], {})[a["policy"]] = a
+    for sc_name, by_pol in sorted(by_scenario.items()):
+        tess = by_pol.get(tesserae)
+        if tess is None:
+            continue
+        entry = {}
+        for pol, arm in sorted(by_pol.items()):
+            if pol == tesserae:
+                continue
+            entry[pol] = {
+                "jct_x": arm["metrics"]["avg_jct_s"] / tess["metrics"]["avg_jct_s"],
+                "makespan_x": arm["metrics"]["makespan_s"]
+                / tess["metrics"]["makespan_s"],
+            }
+        out[sc_name] = entry
+    return out
+
+
+def validate_schema(doc: Dict) -> List[str]:
+    """Structural gate for the smoke lane: every arm carries finite
+    metrics and the full telemetry key set."""
+    problems = []
+    for a in doc["arms"]:
+        tag = f"{a.get('policy')}/{a.get('scenario')}"
+        for k in DETERMINISTIC_METRICS + ("overhead_total_s",):
+            v = a.get("metrics", {}).get(k)
+            if v is None or not math.isfinite(float(v)):
+                problems.append(f"{tag}: metric {k} missing/non-finite: {v!r}")
+        for k in TELEMETRY_KEYS:
+            if k not in a.get("match_telemetry", {}):
+                problems.append(f"{tag}: telemetry key {k} missing")
+        if a.get("metrics", {}).get("rounds", 0) <= 0:
+            problems.append(f"{tag}: simulation ran 0 rounds")
+    return problems
+
+
+def _deterministic_view(arms: List[Dict]) -> List[Dict]:
+    return [
+        {
+            "policy": a["policy"],
+            "scenario": a["scenario"],
+            "metrics": {k: a["metrics"][k] for k in DETERMINISTIC_METRICS},
+            "telemetry": dict(a["match_telemetry"]),
+        }
+        for a in arms
+    ]
+
+
+def run_sweep(
+    policies, scenarios, num_gpus, num_jobs, seed, backend, verbose=True
+) -> Dict:
+    profile = ThroughputProfile()
+    arms = []
+    for sc_name in scenarios:
+        for pol in policies:
+            arm = run_arm(pol, sc_name, num_gpus, num_jobs, seed, backend, profile)
+            arms.append(arm)
+            if verbose:
+                m = arm["metrics"]
+                t = arm["match_telemetry"]
+                print(
+                    f"{sc_name:>18s} x {pol:<16s} avg_jct={m['avg_jct_s']:8.0f}s "
+                    f"p99={m['p99_jct_s']:8.0f}s makespan={m['makespan_s']:8.0f}s "
+                    f"mig={m['migrations']:4d} warm={t['warm_instances']:6d} "
+                    f"({arm['wall_s']:.1f}s)"
+                )
+    tesserae = next((p for p in policies if p.startswith("tesserae")), policies[0])
+    return {
+        "benchmark": "endtoend_policy_eval",
+        "config": {
+            "policies": list(policies),
+            "scenarios": list(scenarios),
+            "num_gpus": num_gpus,
+            "num_jobs": num_jobs,
+            "seed": seed,
+            "backend": backend,
+        },
+        "arms": arms,
+        "speedups_vs_" + tesserae: derive_speedups(arms, tesserae),
+    }
+
+
+def smoke(args) -> int:
+    """CI gate: tiny sweep, structural + determinism + warm-hit checks."""
+    policies = ("tesserae-t", "tiresias")
+    scenarios = ("poisson-steady", "tiresias-churn")
+    kw = dict(
+        policies=policies,
+        scenarios=scenarios,
+        num_gpus=16,
+        num_jobs=args.jobs or 24,
+        seed=args.seed,
+        backend=args.backend,
+    )
+    doc1 = run_sweep(**kw)
+    doc2 = run_sweep(**kw, verbose=False)
+    failures = validate_schema(doc1)
+    if _deterministic_view(doc1["arms"]) != _deterministic_view(doc2["arms"]):
+        failures.append("two seeded runs disagree: sweep is not deterministic")
+    warm = [
+        a
+        for a in doc1["arms"]
+        if a["policy"] == "tesserae-t" and a["match_telemetry"]["warm_instances"] > 0
+    ]
+    if not warm:
+        failures.append("no tesserae arm served warm instances from its MatchContext")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(doc1, f, indent=1, sort_keys=True)
+    for p in failures:
+        print("SMOKE FAIL:", p, file=sys.stderr)
+    print("eval-smoke:", "FAIL" if failures else "PASS")
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--policies", default=",".join(DEFAULT_POLICIES))
+    ap.add_argument("--scenarios", default=",".join(DEFAULT_SCENARIOS))
+    ap.add_argument("--gpus", type=int, default=48)
+    ap.add_argument("--jobs", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="auto")
+    ap.add_argument("--json", default=None, help="write the result document here")
+    ap.add_argument("--smoke", action="store_true", help="CI smoke lane")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return smoke(args)
+    doc = run_sweep(
+        policies=tuple(args.policies.split(",")),
+        scenarios=tuple(args.scenarios.split(",")),
+        num_gpus=args.gpus,
+        num_jobs=args.jobs or 100,
+        seed=args.seed,
+        backend=args.backend,
+    )
+    problems = validate_schema(doc)
+    for p in problems:
+        print("SCHEMA:", p, file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        print("wrote", args.json)
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,15 +9,20 @@ int array
 with ``pack_slot < MAX_PACK = 2`` because "Tesserae imposes a limit of two
 models running simultaneously on each GPU" (§5).
 
-GPUs are homogeneous within a cluster (§4.1 assumption); heterogeneous
-evaluations (A100 vs V100, Fig. 12b) swap the *throughput profile*, not the
-topology.
+GPUs are homogeneous within a cluster by default (§4.1 assumption).  The
+workload scenario lab extends the spec with OPT-IN heterogeneity:
+``node_gpu_types`` gives every node its own GPU type (A100 vs V100 mixes,
+Fig. 12b / Gavel's heterogeneity regime) and ``nodes_per_rack`` imposes a
+rack/pod topology.  Both default to off, in which case every code path
+that consults them is bit-for-bit the homogeneous seed behaviour —
+placement, migration and packing only become type/topology-aware when a
+scenario asks for it.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, FrozenSet, Iterable, List, Tuple
+from typing import Dict, FrozenSet, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -31,6 +36,26 @@ class ClusterSpec:
     gpus_per_node: int
     #: label only (profiles key off it): "a100", "v100", "tpu-v5e", ...
     gpu_type: str = "a100"
+    #: OPT-IN per-node GPU types (len == num_nodes).  ``None`` (default) =
+    #: homogeneous cluster of ``gpu_type`` — the seed semantics, where the
+    #: profile alone decides throughput.  When set, the cluster is the
+    #: authority: schedulers/simulators derive per-node profiles from it.
+    node_gpu_types: Optional[Tuple[str, ...]] = None
+    #: OPT-IN rack topology: nodes [k*r, (k+1)*r) form rack k.  ``0``
+    #: (default) = topology-unaware (single rack, no locality terms).
+    nodes_per_rack: int = 0
+
+    def __post_init__(self):
+        if self.node_gpu_types is not None:
+            types = tuple(self.node_gpu_types)
+            object.__setattr__(self, "node_gpu_types", types)
+            if len(types) != self.num_nodes:
+                raise ValueError(
+                    f"node_gpu_types has {len(types)} entries for "
+                    f"{self.num_nodes} nodes"
+                )
+        if self.nodes_per_rack < 0:
+            raise ValueError("nodes_per_rack must be >= 0")
 
     @property
     def num_gpus(self) -> int:
@@ -44,6 +69,37 @@ class ClusterSpec:
 
     def local_of(self, gpu_id: int) -> int:
         return gpu_id % self.gpus_per_node
+
+    # -- heterogeneity / topology (all trivially constant when disabled) -- #
+    @property
+    def is_heterogeneous(self) -> bool:
+        """True iff at least two nodes carry different GPU types."""
+        return self.node_gpu_types is not None and len(set(self.node_gpu_types)) > 1
+
+    @property
+    def has_topology(self) -> bool:
+        """True iff the rack structure partitions the nodes non-trivially."""
+        return 0 < self.nodes_per_rack < self.num_nodes
+
+    def gpu_type_of(self, node: int) -> str:
+        return (
+            self.gpu_type
+            if self.node_gpu_types is None
+            else self.node_gpu_types[node]
+        )
+
+    def node_types(self) -> Tuple[str, ...]:
+        """Per-node GPU types, materialised even for homogeneous clusters."""
+        return self.node_gpu_types or (self.gpu_type,) * self.num_nodes
+
+    def rack_of(self, node: int) -> int:
+        return 0 if self.nodes_per_rack <= 0 else node // self.nodes_per_rack
+
+    @property
+    def num_racks(self) -> int:
+        if not self.has_topology:
+            return 1
+        return -(-self.num_nodes // self.nodes_per_rack)
 
 
 class PlacementPlan:

@@ -79,6 +79,20 @@ Reuse rules (per instance, after matching identities across rounds):
   prices as a head start.
 * **invalidation** — anything else (orientation flip, context-key or
   backend change, unseen instance id) is a cold start.
+* **departed-identity LRU** — prices of identities that LEAVE a family are
+  parked in a bounded per-family LRU; an identity resuming after absent
+  rounds (Tiresias demotion-resume) re-enters with its parked prices as a
+  head start (single phase at ``eps_min`` — valid for any initial prices)
+  but is *not* reported warm: its content was never fingerprint-verified.
+
+**Deterministic tie-breaking** (``tie_break=True``): equally-optimal
+assignments are normally solver-dependent (scipy row order vs auction bid
+order).  The canonical perturbation (:func:`_tie_break_perturb`) makes the
+optimum unique without leaving the original optimal set; for integral
+benefits the auction epsilon is tightened below the perturbation quantum,
+so EVERY backend returns the identical assignment — the churn-replay
+differential compares physical plans bit-for-bit across backends under
+this flag.  Default off (seed assignments preserved).
 
 **Partial-batch compaction**: instances that memo-hit never occupy solver
 lanes — the changed instances are gathered into a dense sub-batch (padded
@@ -118,6 +132,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
+from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -141,6 +156,71 @@ RECT_BACKENDS = ("scipy", "numpy", "auction", "auction_kernel")
 #: caller-supplied identities must stay above this (they are job/node/GPU
 #: ids in practice, so any id > -2^40 is safe).
 _PAD_ID_BASE = -(1 << 40)
+
+#: Default capacity of the departed-identity price LRU (see MatchContext).
+_DEPARTED_LRU_CAPACITY = 4096
+
+
+def _tie_break_perturb(benefit: np.ndarray) -> Tuple[np.ndarray, Optional[float]]:
+    """Canonical tie-break perturbation (``tie_break=True``).
+
+    Adds ``scale * (i+1)^2 * (j+1)`` to every cell of the embedded benefit
+    — a fixed, position-canonical ramp under which two assignments that
+    differ by swapping tied rows/columns (the dominant tie pattern:
+    same-model pending jobs, interchangeable empty nodes) ALWAYS get
+    distinct totals (the pairwise-swap delta is ``(i2^2-i1^2)(j2-j1) != 0``;
+    some higher-order rotations can still collide — documented best
+    effort).  ``scale`` is a power of two small enough that any
+    assignment's total perturbation stays below half the benefit quantum,
+    so the perturbed optimum is always one of the ORIGINAL optima:
+
+    * integral benefits (quantised migration costs): quantum 1.  Returns
+      the scale so the caller can tighten the auction epsilon below it —
+      the perturbed problem then has a unique optimum that EVERY backend
+      (exact f64 or f32 auction) finds, making equally-optimal
+      assignments solver-independent.
+    * float benefits (packing throughputs): quantum ``span * 2^-20`` — a
+      relative-precision heuristic, NOT a lower bound on real gaps, so
+      for floats the optimal-set preservation is best-effort: two
+      assignments whose true totals differ by less than ~``span * 2^-21``
+      may be reordered (a relative error below 5e-7 — far inside the
+      profile-noise floor these weights carry anyway).  The perturbation
+      canonicalises the exact f64 backends; it is below f32 resolution,
+      so the auction keeps its documented ``S*eps`` bound unchanged
+      (returns ``None``: no epsilon tightening).
+
+    Position-canonical rather than identity-keyed: the perturbation of a
+    surviving row changes when the batch permutes, so ``tie_break`` trades
+    some identity-keyed memo hits under churn for cross-solver
+    reproducibility (both solvers still see the identical perturbed
+    instance — parity is unconditional).
+    """
+    b, n, m = benefit.shape
+    integral = bool(np.all(benefit == np.rint(benefit)))
+    if integral:
+        quantum = 1.0
+    else:
+        span = float(np.abs(benefit).max())
+        quantum = max(span, 1.0) * 2.0**-20
+    w = (np.arange(1, n + 1, dtype=np.float64) ** 2)[:, None] * np.arange(
+        1, m + 1, dtype=np.float64
+    )[None, :]
+    # any assignment picks min(n, m) cells, each below n^2 * m
+    bound = 2.0 * min(n, m) * float(n) * float(n) * float(m)
+    scale = 2.0 ** np.floor(np.log2(quantum / bound))
+    return benefit + scale * w, (float(scale) if integral else None)
+
+
+def _benefit_total(benefit_nm: np.ndarray, col_of: np.ndarray) -> np.ndarray:
+    """Per-instance total of ``benefit_nm`` cells selected by ``col_of``
+    (original row space; -1 = unassigned).  Used to rank a primary solve
+    against its exact fallback in PERTURBED space when tie-breaking."""
+    b, n, m = benefit_nm.shape
+    cols = col_of[:, :n]
+    valid = (cols >= 0) & (cols < m)
+    safe = np.where(valid, cols, 0)
+    picked = np.take_along_axis(benefit_nm, safe[:, :, None], axis=2)[:, :, 0]
+    return np.where(valid, picked, 0.0).sum(axis=1)
 
 
 # --------------------------------------------------------------------------- #
@@ -215,11 +295,25 @@ class MatchContext:
     (device-resident), and the final assignment.  See the module docstring
     for the memo / warm / invalidation semantics.
 
+    A bounded **departed-identity LRU** rides along: when an instance or
+    column identity leaves a family (a job finishes or is demoted, a node
+    pair drops out of the fan-out), its final auction price is parked in a
+    per-family LRU instead of being forgotten.  An identity that RETURNS
+    after one or more absent rounds (the Tiresias demotion-resume pattern
+    — the dominant Philly-trace event after plain arrivals) re-enters with
+    its parked price as a head start instead of bidding up from zero.
+    Correctness is unaffected: any initial price vector is valid (module
+    docstring), and restored instances still run the full epsilon schedule
+    (plus the rectangular certificate), so every bound survives.
+
     Thread-safety: none — one context per scheduler instance.
     """
 
-    def __init__(self):
+    def __init__(self, departed_lru_capacity: int = _DEPARTED_LRU_CAPACITY):
         self._entries: Dict[tuple, _CtxEntry] = {}
+        #: (context_key, backend) -> OrderedDict[(instance_id, col_id) -> price]
+        self._departed: Dict[tuple, "OrderedDict[Tuple[int, int], float]"] = {}
+        self.departed_lru_capacity = departed_lru_capacity
         self.stats: Dict[str, int] = {
             "solves": 0,          # engine calls that consulted this context
             "memo_hits": 0,       # calls where EVERY instance memo-hit
@@ -230,6 +324,8 @@ class MatchContext:
             "cert_violations": 0,   # rect bound certificate failures
             "compacted_solves": 0,  # calls that solved a proper sub-batch
             "bid_iters": 0,         # total auction bid rounds through this context
+            "lru_parked_cols": 0,   # departed column prices parked in the LRU
+            "lru_restored_cols": 0,  # cold columns re-seeded from the LRU
         }
 
     def get(self, key: tuple) -> Optional[_CtxEntry]:
@@ -240,15 +336,112 @@ class MatchContext:
         matched against the *latest* round only, so an older round's state
         is dead weight — and without eviction a long-running scheduler
         would grow the cache by one entry per (maximize, eps) variant ever
-        seen."""
+        seen.  Prices of identities the new entry no longer carries are
+        parked in the departed-identity LRU on the way out."""
         family = key[:2]
+        old = self._entries.get(key)
+        if (
+            old is not None
+            and old.prices is not None
+            and self.departed_lru_capacity > 0
+        ):
+            self._park_departed(family, old, entry)
         for k in [k for k in self._entries if k[:2] == family and k != key]:
             del self._entries[k]
         self._entries[key] = entry
 
+    # -- departed-identity LRU ------------------------------------------- #
+    @staticmethod
+    def _oriented_col_ids(entry: _CtxEntry) -> np.ndarray:
+        """Identity of each ORIENTED price column: original columns, or —
+        for transposed rectangular solves, where the original rows bid as
+        columns — the original row ids."""
+        return entry.row_ids if entry.transposed else entry.col_ids
+
+    def _park_departed(self, family: tuple, old: _CtxEntry, new: _CtxEntry) -> None:
+        oc_old = self._oriented_col_ids(old)
+        oc_new = self._oriented_col_ids(new)
+        if (
+            old.transposed == new.transposed
+            and old.instance_ids.shape == new.instance_ids.shape
+            and oc_old.shape == oc_new.shape
+            and np.array_equal(old.instance_ids, new.instance_ids)
+            and np.array_equal(oc_old, oc_new)
+        ):
+            return  # steady state: nothing departed
+        pos = _positions_in(old.instance_ids[None, :], new.instance_ids[None, :])[0]
+        safe = np.clip(pos, 0, new.instance_ids.shape[0] - 1)
+        col_pos = _positions_in(oc_old, oc_new[safe])
+        departed = ((col_pos < 0) | (pos < 0)[:, None]) & (oc_old > _PAD_ID_BASE)
+        bb, cc = np.nonzero(departed)
+        if bb.size == 0:
+            return
+        # one small device->host transfer of ONLY the departed prices
+        vals = np.asarray(
+            jnp.asarray(old.prices)[jnp.asarray(bb), jnp.asarray(cc)], np.float32
+        )
+        lru = self._departed.setdefault(family, OrderedDict())
+        parked = 0
+        for b, c, v in zip(bb, cc, vals):
+            if v == 0.0:
+                continue  # a cold price is not worth a slot
+            k = (int(old.instance_ids[b]), int(oc_old[b, c]))
+            lru.pop(k, None)
+            lru[k] = float(v)
+            parked += 1
+        self.stats["lru_parked_cols"] += parked
+        while len(lru) > self.departed_lru_capacity:
+            lru.popitem(last=False)
+
+    def restore_departed(
+        self,
+        family: tuple,
+        instance_ids: np.ndarray,
+        oriented_col_ids: np.ndarray,
+        cold_mask: np.ndarray,
+    ) -> Optional[np.ndarray]:
+        """Prices for cold (b, c) slots whose identity is parked in the
+        LRU, or ``None`` when nothing matches.  Hits are popped — the
+        price returns to the live entry at the next ``store``.
+
+        Iterates the BOUNDED LRU (not the cold cells): a large fan-out
+        with a few percent churn has far more cold slots than parked
+        prices, and the per-instance column lookup is built lazily only
+        for instances the LRU actually mentions."""
+        lru = self._departed.get(family)
+        if not lru:
+            return None
+        inst_pos: Dict[int, int] = {}
+        for b, v in enumerate(instance_ids):
+            inst_pos.setdefault(int(v), b)
+        out = None
+        restored = 0
+        col_lut: Dict[int, Dict[int, int]] = {}
+        for (iid, cid), price in list(lru.items()):
+            b = inst_pos.get(iid)
+            if b is None:
+                continue
+            lut = col_lut.get(b)
+            if lut is None:
+                lut = col_lut[b] = {
+                    int(v): j for j, v in enumerate(oriented_col_ids[b])
+                }
+            j = lut.get(cid)
+            if j is None or not cold_mask[b, j]:
+                continue
+            if out is None:
+                out = np.zeros(cold_mask.shape, np.float32)
+            out[b, j] = price
+            del lru[(iid, cid)]
+            restored += 1
+        self.stats["lru_restored_cols"] += restored
+        return out
+
     def reset(self) -> None:
-        """Drop all cached state (prices, fingerprints, memoised results)."""
+        """Drop all cached state (prices, fingerprints, memoised results,
+        parked departed-identity prices)."""
         self._entries.clear()
+        self._departed.clear()
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -621,6 +814,7 @@ def solve_lap_batched(
     instance_ids: Optional[np.ndarray] = None,
     row_ids: Optional[np.ndarray] = None,
     col_ids: Optional[np.ndarray] = None,
+    tie_break: bool = False,
 ) -> BatchedMatchResult:
     """Solve a batch of (rectangular, masked) LAPs with one backend call.
 
@@ -648,6 +842,12 @@ def solve_lap_batched(
         stable identities to keep surviving state warm across shape
         changes.  Identities must be unique within an instance and greater
         than ``-2^40`` (smaller values are reserved for embedding pads).
+      tie_break: apply the canonical tie-break perturbation
+        (:func:`_tie_break_perturb`) so equally-optimal assignments are
+        solver-independent — for integral benefits the auction epsilon is
+        tightened below the perturbation quantum, making the returned
+        assignment bit-for-bit the one every exact backend returns.
+        Default off: the unperturbed (seed) assignments are preserved.
     """
     t0 = time.perf_counter()
     costs = np.asarray(costs, dtype=np.float64)
@@ -692,11 +892,24 @@ def solve_lap_batched(
         )
     else:
         benefit_nm = oriented = masked_square_benefit(costs, maximize, row_mask, col_mask)
+    if tie_break:
+        benefit_nm, tb_scale = _tie_break_perturb(benefit_nm)
+        oriented = (
+            np.ascontiguousarray(np.swapaxes(benefit_nm, 1, 2))
+            if transposed
+            else benefit_nm
+        )
+        if tb_scale is not None and approx and eps_min is None:
+            # resolve the perturbation: S * eps below the smallest gap
+            # between distinct perturbed totals (>= tb_scale on the
+            # integral quantum).  Deterministic in the shape alone, so
+            # the context key stays stable across rounds.
+            eps_min = tb_scale / (size + 1)
     ne, me = benefit_nm.shape[1:]
     r, c = oriented.shape[1:]
 
     # ---- context lookup: identity matching + memo + warm prices --------- #
-    key = (context_key, backend, maximize, eps_min)
+    key = (context_key, backend, maximize, eps_min, tie_break)
     entry = None
     bits = None
     inst = rids = cids = None
@@ -713,6 +926,7 @@ def solve_lap_batched(
     memo_b = np.zeros(b, bool)
     warm_result = np.zeros(b, bool)
     warm_solver = np.zeros(b, bool)
+    lru_warm = np.zeros(b, bool)  # instances re-seeded from the departed LRU
     init_prices_full = None  # (B, C) device, assembled by column identity
     col_of_memo = None
     stale = None
@@ -826,12 +1040,29 @@ def solve_lap_batched(
                 stale = (own >= 0) & ~np.take_along_axis(
                     survived, np.clip(own, 0, None), axis=1
                 )
-            keep = jnp.asarray(matched[:, None] & (col_pos_or >= 0) & ~stale)
+            keep_host = matched[:, None] & (col_pos_or >= 0) & ~stale
             gathered = jnp.asarray(entry.prices)[
                 jnp.asarray(safe_b)[:, None],
                 jnp.asarray(np.clip(col_pos_or, 0, c0 - 1)),
             ]
-            init_prices_full = jnp.where(keep, gathered, 0.0)
+            # columns NOT carried over from last round may still have a
+            # parked price from an earlier departure (demotion-resume):
+            # seed them from the departed-identity LRU instead of zero.
+            cold_seed = context.restore_departed(
+                key[:2], inst, rids if transposed else cids, ~keep_host
+            )
+            if cold_seed is not None:
+                # a resumed instance restarts near its parked equilibrium:
+                # skip the epsilon-scaling schedule (valid for ANY initial
+                # prices — module docstring) but do NOT report it warm,
+                # its content was never fingerprint-verified.
+                lru_warm = (cold_seed != 0.0).any(axis=1)
+            keep = jnp.asarray(keep_host)
+            init_prices_full = jnp.where(
+                keep,
+                gathered,
+                0.0 if cold_seed is None else jnp.asarray(cold_seed),
+            )
         context.stats["memo_instances"] += int(memo_b.sum())
         context.stats["warm_instances"] += int(warm_result.sum())
         context.stats["cold_instances"] += int(b - warm_result.sum())
@@ -870,7 +1101,7 @@ def solve_lap_batched(
             ip_sub = warm_sub = None
             if init_prices_full is not None:
                 ip_sub = init_prices_full[jnp.asarray(sidx)]
-                warm_sub = warm_solver[sidx]
+                warm_sub = (warm_solver | lru_warm)[sidx]
             pb = _bucket_size(sidx.size, b) if context is not None else sidx.size
             if pb > sidx.size:
                 pad = pb - sidx.size
@@ -936,7 +1167,15 @@ def solve_lap_batched(
         # equally good matching there is nothing to fix — and counting it
         # as a fallback would poison the auction-quality metric the
         # microbench records.
-        if maximize:
+        if tie_break:
+            # rank in PERTURBED benefit space: two original-optimal
+            # assignments tie on original cost, but only the canonical
+            # one wins the perturbed comparison — a fallback that found
+            # it must displace a non-canonical primary result.
+            improves = _benefit_total(benefit_nm[idx], fb_res) > _benefit_total(
+                benefit_nm[idx], col_of[idx]
+            )
+        elif maximize:
             improves = fb_total > total[idx]
         else:
             improves = fb_total < total[idx]
@@ -1056,6 +1295,7 @@ def solve_lap(
     context_key: str = "default",
     row_ids: Optional[np.ndarray] = None,
     col_ids: Optional[np.ndarray] = None,
+    tie_break: bool = False,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Single-instance LAP with the same backend knob as the batched engine.
 
@@ -1065,9 +1305,11 @@ def solve_lap(
     engine.  With a ``context``, EVERY backend routes through the engine so
     identical consecutive solves memo-hit and the auction carries prices;
     ``row_ids``/``col_ids`` key that state by identity (e.g. node ids for
-    the final migration match).  Returns scipy-style ``(row_ind, col_ind)``.
+    the final migration match).  ``tie_break`` always routes through the
+    engine (the canonical perturbation must apply).  Returns scipy-style
+    ``(row_ind, col_ind)``.
     """
-    if context is None and backend in ("auto", "numpy", "scipy"):
+    if context is None and not tie_break and backend in ("auto", "numpy", "scipy"):
         return hungarian.solve_lap(cost, maximize=maximize, backend=backend)
     res = solve_lap_batched(
         np.asarray(cost)[None],
@@ -1077,5 +1319,6 @@ def solve_lap(
         context_key=context_key,
         row_ids=row_ids,
         col_ids=col_ids,
+        tie_break=tie_break,
     )
     return res.pairs(0)

@@ -81,6 +81,45 @@ def pairwise_migration_cost(
     return cost_out + cost_in
 
 
+#: Extra node-relabel cost for crossing a rack boundary: checkpoints must
+#: transit the aggregation layer, so the relabelling only does it when it
+#: saves at least one half-migration.  A multiple of 1/2 keeps the
+#: auction's integer quantisation exact (the cost scale is always even).
+CROSS_RACK_COST = 0.5
+
+
+def _relabel_penalties(cluster) -> Optional[np.ndarray]:
+    """(kc, kc) additive node-relabel penalties for heterogeneous / racked
+    clusters: ``pen[k, l]`` is added to the cost of hosting logical node
+    ``l`` on physical node ``k``.
+
+    * GPU-type mismatch gets a penalty strictly larger than any achievable
+      real matching cost (``2 * kl * kc`` bounds the total), making the
+      relabelling TYPE-PRESERVING: a plan row laid out for an A100 node is
+      never silently renamed onto a V100 node (which would invalidate every
+      throughput belief behind the plan).  Always feasible — the identity
+      relabelling is type-preserving by construction.
+    * Crossing a rack boundary costs :data:`CROSS_RACK_COST`.
+
+    Returns ``None`` for homogeneous single-rack clusters — the seed path,
+    where the node cost matrix is untouched (bit-for-bit).
+    """
+    hetero = cluster.is_heterogeneous
+    racked = cluster.has_topology
+    if not hetero and not racked:
+        return None
+    kc = cluster.num_nodes
+    pen = np.zeros((kc, kc), dtype=np.float64)
+    if hetero:
+        types = np.array(cluster.node_types())
+        mismatch = 2.0 * cluster.gpus_per_node * kc + 1.0
+        pen += mismatch * (types[:, None] != types[None, :])
+    if racked:
+        racks = np.array([cluster.rack_of(i) for i in range(kc)])
+        pen += CROSS_RACK_COST * (racks[:, None] != racks[None, :])
+    return pen
+
+
 def _cost_scale(num_gpus_of: Dict[int, int], backend: str) -> float:
     """Quantisation scale for the approximate (auction) backends.
 
@@ -142,6 +181,7 @@ def plan_migration(
     algorithm: str = "node",  # "node" (Alg 2+3) | "flat" (Alg 5) | "none"
     backend: str = "auto",
     context: Optional[MatchContext] = None,
+    tie_break: bool = False,
 ) -> MigrationResult:
     """Compute the relabelling that minimises migrations, then apply it to
     the *full* new plan (jobs unique to one round are excluded from the cost
@@ -159,6 +199,13 @@ def plan_migration(
     compaction) and changed pairs warm-start from last round's auction
     prices; identity keying keeps all of that valid if the cluster itself
     is ever resized between rounds.
+
+    On heterogeneous / racked clusters the node-level cost gains the
+    :func:`_relabel_penalties` terms (type-preserving relabelling, rack
+    locality); ``matching_cost`` then includes those penalties.
+    ``tie_break`` threads the engine's canonical tie-break perturbation
+    through every LAP so equally-optimal relabellings are
+    solver-independent.
     """
     t0 = time.perf_counter()
     cluster = prev.cluster
@@ -178,6 +225,12 @@ def plan_migration(
         flat_i = pi.slots.reshape(-1, MAX_PACK)
         flat_j = pj.slots.reshape(-1, MAX_PACK)
         cost = pairwise_migration_cost(flat_i, flat_j, weights)
+        pen = _relabel_penalties(cluster)
+        if pen is not None:
+            # expand node-level penalties to every (physical, logical) GPU
+            # pair: each relabelled GPU's state crosses the boundary
+            kl = cluster.gpus_per_node
+            cost = cost + np.repeat(np.repeat(pen, kl, axis=0), kl, axis=1)
         gpu_ids = np.arange(cluster.num_gpus, dtype=np.int64)
         rows, cols = solve_lap(
             cost * _cost_scale(num_gpus_of, backend),
@@ -186,6 +239,7 @@ def plan_migration(
             context_key="migration_flat",
             row_ids=gpu_ids,
             col_ids=gpu_ids,
+            tie_break=tie_break,
         )
         gpu_of_logical = np.empty(cluster.num_gpus, dtype=np.int64)
         gpu_of_logical[cols] = rows
@@ -234,8 +288,12 @@ def plan_migration(
         instance_ids=pair_ids,
         row_ids=np.repeat(slot_ids, kc, axis=0),
         col_ids=np.tile(slot_ids, (kc, 1)),
+        tie_break=tie_break,
     )
     node_cost = (res.total_cost / scale).reshape(kc, kc)
+    pen = _relabel_penalties(cluster)
+    if pen is not None:
+        node_cost = node_cost + pen
     # res.col_of[b, u] = v  ->  gpu_assign[.., v] = u
     gpu_assign = np.argsort(res.col_of, axis=-1).reshape(kc, kc, kl)
     n_rows, n_cols = solve_lap(
@@ -245,6 +303,7 @@ def plan_migration(
         context_key="migration_node",
         row_ids=node_ids,
         col_ids=node_ids,
+        tie_break=tie_break,
     )
     node_assignment = np.empty(kc, dtype=np.int64)
     node_assignment[n_cols] = n_rows  # logical node l -> physical node k

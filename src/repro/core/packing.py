@@ -51,13 +51,20 @@ def build_packing_graph(
     profile: ThroughputProfile,
     optimize_strategy: bool = True,
     packed_ok=None,
+    placed_gpu_types: Optional[Sequence[str]] = None,
 ) -> np.ndarray:
     """Benefit matrix (|placed| x |pending|), fully vectorised.
 
     The per-MODEL-pair weight is memoised in the profile; the per-JOB-pair
     matrix is assembled with numpy indexing (the O(n^2) loop in pure Python
     was the scalability bottleneck — see EXPERIMENTS.md §Perf, scheduler
-    iteration 1)."""
+    iteration 1).
+
+    ``placed_gpu_types`` (heterogeneous clusters) gives the GPU type of
+    the node each PLACED job occupies; the edge weight — including memory
+    feasibility, the thing that actually flips on 16 GB parts — is then
+    profiled per type via :meth:`ThroughputProfile.for_gpu_type`.  ``None``
+    (the default, and every homogeneous caller) is the seed path."""
     p, q = len(placed), len(pending)
     if p == 0 or q == 0:
         return np.zeros((p, q), dtype=np.float64)
@@ -65,14 +72,34 @@ def build_packing_graph(
     models = sorted({u.spec.model for u in placed} | {v.spec.model for v in pending})
     midx = {m: i for i, m in enumerate(models)}
     n_m = len(models)
-    pairw = np.zeros((n_m, n_m), dtype=np.float64)
-    for a in models:
-        for b in models:
-            pairw[midx[a], midx[b]] = profile.combined_weight(
-                a, b, optimize_strategy=optimize_strategy
-            )[0]
-
-    mp = np.array([midx[u.spec.model] for u in placed])
+    if placed_gpu_types is None:
+        pairw = np.zeros((n_m, n_m), dtype=np.float64)
+        for a in models:
+            for b in models:
+                pairw[midx[a], midx[b]] = profile.combined_weight(
+                    a, b, optimize_strategy=optimize_strategy
+                )[0]
+        mp = np.array([midx[u.spec.model] for u in placed])
+    else:
+        # one weight table per GPU type present among the placed jobs; the
+        # placed row then indexes (its node's type, its model)
+        types = sorted(set(placed_gpu_types))
+        tidx = {t: k for k, t in enumerate(types)}
+        pairw = np.zeros((len(types), n_m, n_m), dtype=np.float64)
+        for t in types:
+            prof_t = profile.for_gpu_type(t)
+            for a in models:
+                for b in models:
+                    pairw[tidx[t], midx[a], midx[b]] = prof_t.combined_weight(
+                        a, b, optimize_strategy=optimize_strategy
+                    )[0]
+        mp = np.array(
+            [
+                tidx[t] * n_m + midx[u.spec.model]
+                for u, t in zip(placed, placed_gpu_types)
+            ]
+        )
+        pairw = pairw.reshape(len(types) * n_m, n_m)
     mq = np.array([midx[v.spec.model] for v in pending])
     gi = np.array([u.num_gpus for u in placed])
     gj = np.array([v.num_gpus for v in pending])
@@ -101,6 +128,8 @@ def pack_jobs(
     backend: str = "auto",
     packed_ok=None,
     context: Optional[MatchContext] = None,
+    placed_gpu_types: Optional[Sequence[str]] = None,
+    tie_break: bool = False,
 ) -> PackingResult:
     """Algorithm 4.
 
@@ -120,7 +149,9 @@ def pack_jobs(
     t0 = time.perf_counter()
     if not placed or not pending:
         return PackingResult({}, {}, 0.0, time.perf_counter() - t0, 0)
-    w = build_packing_graph(placed, pending, profile, optimize_strategy, packed_ok)
+    w = build_packing_graph(
+        placed, pending, profile, optimize_strategy, packed_ok, placed_gpu_types
+    )
     num_edges = int((w > 0).sum())
     if num_edges == 0:
         return PackingResult({}, {}, 0.0, time.perf_counter() - t0, 0)
@@ -133,6 +164,7 @@ def pack_jobs(
         instance_ids=np.zeros(1, np.int64),
         row_ids=np.array([u.job_id for u in placed], np.int64),
         col_ids=np.array([v.job_id for v in pending], np.int64),
+        tie_break=tie_break,
     ).pairs(0)
     matches: Dict[int, int] = {}
     strategies: Dict[int, str] = {}
@@ -142,7 +174,12 @@ def pack_jobs(
             continue  # zero-weight assignment = leave unpacked
         u, v = placed[i], pending[j]
         matches[v.job_id] = u.job_id
-        _, s = profile.combined_weight(
+        prof_u = (
+            profile
+            if placed_gpu_types is None
+            else profile.for_gpu_type(placed_gpu_types[i])
+        )
+        _, s = prof_u.combined_weight(
             u.spec.model, v.spec.model, optimize_strategy=optimize_strategy
         )
         if s != "dp":

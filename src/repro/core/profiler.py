@@ -135,6 +135,31 @@ class ThroughputProfile:
         #: same (model_a, model_b) pair thousands of times per round.
         self._weight_cache: Dict = {}
 
+    def for_gpu_type(self, gpu_type: str) -> "ThroughputProfile":
+        """Profile variant keyed to another GPU type (heterogeneous
+        clusters: a job placed on a V100 node reads V100 speed and HBM).
+
+        Returns ``self`` when the type already matches — the homogeneous
+        path never allocates — and a cached plain
+        :class:`ThroughputProfile` otherwise.  Wrapper subclasses
+        (:class:`NoisyProfile`, :class:`TabulatedProfile`) intentionally
+        degrade to the clean analytic profile for foreign types: their
+        noise/tables were observed on the base type only.
+        """
+        if gpu_type == self.gpu.name:
+            return self
+        cache = self.__dict__.setdefault("_type_variants", {})
+        hit = cache.get(gpu_type)
+        if hit is None:
+            hit = ThroughputProfile(
+                gpu_type=gpu_type,
+                gamma=self.gamma,
+                jitter=self.jitter,
+                strategy_jitter=self.strategy_jitter,
+            )
+            cache[gpu_type] = hit
+        return hit
+
     # -- catalog helpers ------------------------------------------------- #
     def model(self, name: str) -> ModelProfile:
         try:

@@ -71,6 +71,11 @@ class TesseraeScheduler:
         lap_backend: str = "auto",
         packed_ok: Optional[Callable[[JobState, JobState], bool]] = None,
         match_context: Optional[MatchContext] = None,
+        # canonical tie-break perturbation on every LAP, so equally-optimal
+        # packings/relabellings are solver-independent (bit-for-bit
+        # differential testing across backends); off by default — the seed
+        # placements are preserved exactly.
+        tie_break: bool = False,
     ):
         self.cluster = cluster
         self.policy = policy
@@ -80,6 +85,7 @@ class TesseraeScheduler:
         self.migration_algorithm = migration_algorithm
         self.lap_backend = lap_backend
         self.packed_ok = packed_ok
+        self.tie_break = tie_break
         #: identity-keyed warm-start state threaded across rounds: the
         #: packing matching (keyed by job ids), the Algorithm-2 node-pair
         #: fan-out (node-pair / GPU-slot ids) and the final node match
@@ -110,6 +116,17 @@ class TesseraeScheduler:
 
         t0 = time.perf_counter()
         if self.enable_packing:
+            placed_types = None
+            if self.cluster.node_gpu_types is not None and placed:
+                # heterogeneous cluster: each placed job's packing weights
+                # (incl. HBM feasibility) are profiled on its node's type
+                gmap_placed = plan.job_gpu_map()
+                placed_types = [
+                    self.cluster.gpu_type_of(
+                        self.cluster.node_of(min(gmap_placed[j.job_id]))
+                    )
+                    for j in placed
+                ]
             packing = pack_jobs(
                 placed,
                 pending,
@@ -118,6 +135,8 @@ class TesseraeScheduler:
                 backend=self.lap_backend,
                 packed_ok=self.packed_ok,
                 context=self.match_context,
+                placed_gpu_types=placed_types,
+                tie_break=self.tie_break,
             )
             if packing.matches:
                 placed_lookup = {j.job_id: j for j in placed}
@@ -139,6 +158,7 @@ class TesseraeScheduler:
                 algorithm=self.migration_algorithm,
                 backend=self.lap_backend,
                 context=self.match_context,
+                tie_break=self.tie_break,
             )
             plan = migration.physical_plan
         timings["migrate_s"] = time.perf_counter() - t0

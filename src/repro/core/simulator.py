@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -34,7 +35,7 @@ from repro.core.jobs import JobSpec, JobState, migration_overhead_s
 from repro.core.policies.base import SchedulingPolicy
 from repro.core.policies.gavel import GavelPolicy
 from repro.core.policies.themis import ThemisFtfPolicy
-from repro.core.profiler import ThroughputProfile
+from repro.core.profiler import GPU_TYPES, ThroughputProfile
 from repro.core.scheduler import RoundDecision, TesseraeScheduler
 
 
@@ -55,7 +56,11 @@ class SimConfig:
     #: has advanced), so the scheduler's :class:`MatchContext` is warm and
     #: the *measured* ``decide()`` critical path collapses to memo/warm
     #: hits.  Models a production scheduler using its idle time between
-    #: rounds; off by default so seed timings stay comparable.
+    #: rounds; off by default so seed timings stay comparable.  The
+    #: speculation runs on a background thread that is joined before the
+    #: next ``decide`` touches the scheduler, so the sim loop no longer
+    #: pays the 2x serial decide work (overlap is reported in
+    #: :attr:`SimResult.prewarm_overlap_s`).
     speculative_prewarm: bool = False
 
 
@@ -73,6 +78,12 @@ class SimResult:
     #: invalidations) — the identity-keyed warm-start telemetry the churn
     #: replay tests and the CI perf-smoke gate read.
     match_rounds: List[Dict[str, int]] = dataclasses.field(default_factory=list)
+    #: total wall time the speculative-prewarm thread spent deciding, and
+    #: the portion of it that OVERLAPPED the main sim loop (prewarm wall
+    #: minus the time the loop actually blocked waiting for it) — both 0.0
+    #: when ``speculative_prewarm`` is off.
+    prewarm_wall_s: float = 0.0
+    prewarm_overlap_s: float = 0.0
 
     @property
     def jcts(self) -> np.ndarray:
@@ -163,81 +174,115 @@ class Simulator:
         contention_num: Dict[int, float] = {}
         contention_den: Dict[int, float] = {}
         rounds = 0
-
-        while now < cfg.max_time_s:
-            active = [
-                s
-                for s in states.values()
-                if s.spec.arrival_time <= now and not s.finished
-            ]
-            future = [
-                s
-                for s in states.values()
-                if s.spec.arrival_time > now and not s.finished
-            ]
-            if not active and not future:
-                break
-            if not active:
-                # idle until the next arrival's round boundary
-                next_arrival = min(s.spec.arrival_time for s in future)
-                k = int(np.floor(next_arrival / cfg.round_duration_s))
-                now = max(now + cfg.round_duration_s, k * cfg.round_duration_s)
-                continue
-
-            # LP-based policies re-solve their optimisation once per round.
-            if isinstance(self.scheduler.policy, GavelPolicy):
-                lp_refresh_s += self.scheduler.policy.refresh(active, self.cluster)
-            if isinstance(self.scheduler.policy, ThemisFtfPolicy):
-                demand = sum(j.num_gpus for j in active)
-                self.scheduler.policy.avg_contention = max(
-                    1.0, demand / self.cluster.num_gpus
-                )
-
-            decision = self.scheduler.decide(active, now, prev_plan, num_gpus_of)
-            match_rounds.append(dict(decision.match_stats))
-            for k, v in decision.timings.items():
-                overhead[k] = overhead.get(k, 0.0) + v
-            if decision.migration is not None:
-                total_migrations += decision.migration.num_migrations
-            if isinstance(self.scheduler.policy, GavelPolicy):
-                self.scheduler.policy.note_round(
-                    [j.job_id for j in decision.placed]
-                )
-
-            self._advance_round(
-                decision, states, now, prev_gpus, num_gpus_of
+        executor: Optional[ThreadPoolExecutor] = None
+        pending_prewarm = None
+        prewarm_wall = 0.0
+        prewarm_overlap = 0.0
+        if cfg.speculative_prewarm:
+            executor = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="sim-prewarm"
             )
 
-            # contention bookkeeping for FTF
-            demand = sum(j.num_gpus for j in active)
-            ratio = demand / self.cluster.num_gpus
-            for j in active:
-                contention_num[j.job_id] = (
-                    contention_num.get(j.job_id, 0.0) + ratio
-                )
-                contention_den[j.job_id] = contention_den.get(j.job_id, 0.0) + 1.0
+        def _timed_prewarm(spec_active, t, plan, gmap):
+            t0 = time.perf_counter()
+            self.scheduler.prewarm(spec_active, t, plan, gmap)
+            return time.perf_counter() - t0
 
-            plan_map = decision.plan.job_gpu_map()
-            prev_gpus = dict(plan_map)
-            prev_plan = decision.plan.restricted_to(
-                [j for j in plan_map if not states[j].finished]
-            )
-            now += cfg.round_duration_s
-            rounds += 1
-
-            if cfg.speculative_prewarm:
-                # The round has advanced, so the NEXT round's active set is
-                # known exactly; batch its expected LAP fan-outs through
-                # the engine now (one solve_lap_batched call per family)
-                # so the next decide() memo/warm-hits.  Purely a cache
-                # side effect — decisions are unaffected.
-                spec_active = [
+        try:
+            while now < cfg.max_time_s:
+                # the prewarm thread owns the scheduler (MatchContext and
+                # policy state) until joined — block before anything below
+                # touches it.  Join wait below the prewarm's own wall time
+                # is loop work the speculation overlapped with.
+                if pending_prewarm is not None:
+                    t_join = time.perf_counter()
+                    w = pending_prewarm.result()
+                    waited = time.perf_counter() - t_join
+                    prewarm_wall += w
+                    prewarm_overlap += max(0.0, w - waited)
+                    pending_prewarm = None
+                active = [
                     s
                     for s in states.values()
                     if s.spec.arrival_time <= now and not s.finished
                 ]
-                if spec_active:
-                    self.scheduler.prewarm(spec_active, now, prev_plan, num_gpus_of)
+                future = [
+                    s
+                    for s in states.values()
+                    if s.spec.arrival_time > now and not s.finished
+                ]
+                if not active and not future:
+                    break
+                if not active:
+                    # idle until the next arrival's round boundary
+                    next_arrival = min(s.spec.arrival_time for s in future)
+                    k = int(np.floor(next_arrival / cfg.round_duration_s))
+                    now = max(now + cfg.round_duration_s, k * cfg.round_duration_s)
+                    continue
+
+                # LP-based policies re-solve their optimisation once per round.
+                if isinstance(self.scheduler.policy, GavelPolicy):
+                    lp_refresh_s += self.scheduler.policy.refresh(active, self.cluster)
+                if isinstance(self.scheduler.policy, ThemisFtfPolicy):
+                    demand = sum(j.num_gpus for j in active)
+                    self.scheduler.policy.avg_contention = max(
+                        1.0, demand / self.cluster.num_gpus
+                    )
+
+                decision = self.scheduler.decide(active, now, prev_plan, num_gpus_of)
+                match_rounds.append(dict(decision.match_stats))
+                for k, v in decision.timings.items():
+                    overhead[k] = overhead.get(k, 0.0) + v
+                if decision.migration is not None:
+                    total_migrations += decision.migration.num_migrations
+                if isinstance(self.scheduler.policy, GavelPolicy):
+                    self.scheduler.policy.note_round(
+                        [j.job_id for j in decision.placed]
+                    )
+
+                self._advance_round(
+                    decision, states, now, prev_gpus, num_gpus_of
+                )
+
+                plan_map = decision.plan.job_gpu_map()
+                prev_gpus = dict(plan_map)
+                prev_plan = decision.plan.restricted_to(
+                    [j for j in plan_map if not states[j].finished]
+                )
+                now += cfg.round_duration_s
+                rounds += 1
+
+                if executor is not None:
+                    # The round has advanced, so the NEXT round's active
+                    # set is known exactly; batch its expected LAP
+                    # fan-outs through the engine on the prewarm thread
+                    # (in production: the scheduler's idle time between
+                    # rounds) so the next decide() memo/warm-hits.
+                    # Purely a cache side effect — decisions are
+                    # unaffected.  The FTF bookkeeping below overlaps it.
+                    spec_active = [
+                        s
+                        for s in states.values()
+                        if s.spec.arrival_time <= now and not s.finished
+                    ]
+                    if spec_active:
+                        pending_prewarm = executor.submit(
+                            _timed_prewarm, spec_active, now, prev_plan, num_gpus_of
+                        )
+
+                # contention bookkeeping for FTF
+                demand = sum(j.num_gpus for j in active)
+                ratio = demand / self.cluster.num_gpus
+                for j in active:
+                    contention_num[j.job_id] = (
+                        contention_num.get(j.job_id, 0.0) + ratio
+                    )
+                    contention_den[j.job_id] = contention_den.get(j.job_id, 0.0) + 1.0
+        finally:
+            if pending_prewarm is not None:
+                prewarm_wall += pending_prewarm.result()
+            if executor is not None:
+                executor.shutdown(wait=True)
 
         unfinished = [s for s in states.values() if not s.finished]
         for s in unfinished:  # should not happen with max_time high enough
@@ -257,9 +302,26 @@ class Simulator:
             lp_refresh_s,
             contention,
             match_rounds,
+            prewarm_wall_s=prewarm_wall,
+            prewarm_overlap_s=prewarm_overlap,
         )
 
     # ------------------------------------------------------------------ #
+    def _typed_profile(self, gpus) -> ThroughputProfile:
+        """Ground-truth profile for a job on ``gpus`` (physical GPU ids).
+
+        Homogeneous clusters (``node_gpu_types`` unset) always return
+        ``true_profile`` itself.  On heterogeneous clusters the job runs
+        at the profile of the SLOWEST GPU type it touches (synchronous
+        training is bound by its slowest worker)."""
+        if self.cluster.node_gpu_types is None or not gpus:
+            return self.true_profile
+        types = {
+            self.cluster.gpu_type_of(self.cluster.node_of(g)) for g in gpus
+        }
+        slowest = min(types, key=lambda t: (GPU_TYPES[t].speed, t))
+        return self.true_profile.for_gpu_type(slowest)
+
     def _advance_round(
         self,
         decision: RoundDecision,
@@ -302,18 +364,21 @@ class Simulator:
                     s.migration_debt += migration_overhead_s(s.spec.model)
             s.gpus = gpus
 
+            # heterogeneous clusters: the job's TRUE rate (and packing
+            # interference, incl. HBM feasibility) is profiled on the GPU
+            # type it actually landed on — the slowest participating node
+            # bounds a synchronous job.  Homogeneous clusters return
+            # ``true_profile`` itself (the bit-identical seed path).
+            prof = self._typed_profile(gpus)
             partner = packed_partner.get(jid)
             factor = 1.0
             if partner is not None and partner in plan_map:
                 me, other = s.spec.model, states[partner].spec.model
-                na, nb = self.true_profile.normalized_packed(
+                na, nb = prof.normalized_packed(
                     me, other, strat_a=s.strategy, strat_b=states[partner].strategy
                 )
                 factor = na if na > 0 else 1.0
-            rate = (
-                self.true_profile.isolated(s.spec.model, s.num_gpus, s.strategy)
-                * factor
-            )
+            rate = prof.isolated(s.spec.model, s.num_gpus, s.strategy) * factor
 
             debt = min(s.migration_debt, cfg.round_duration_s)
             s.migration_debt -= debt

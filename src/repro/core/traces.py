@@ -44,6 +44,16 @@ _SHOCKWAVE_GPUS = ([1, 2, 4, 8], [0.60, 0.30, 0.09, 0.01])
 _GAVEL_GPUS = ([1, 2, 4, 8], [0.70, 0.10, 0.15, 0.05])
 
 
+def iters_for_duration(
+    model: str, num_gpus: int, duration_s: float, profile: ThroughputProfile
+) -> float:
+    """Iteration count that runs for ``duration_s`` at the job's own GPU
+    count (linear scaling) — the one conversion rule shared by these
+    fixture generators and the :mod:`repro.workloads` trace schema, so a
+    duration-profiled trace row materialises identically everywhere."""
+    return duration_s * profile.isolated(model, num_gpus)
+
+
 def _mk_job(
     rng: np.random.Generator,
     job_id: int,
@@ -55,9 +65,7 @@ def _mk_job(
 ) -> JobSpec:
     model = models[int(rng.integers(len(models)))]
     is_llm = MODEL_CATALOG[model].is_llm
-    # duration is defined at the job's own GPU count (linear scaling)
-    tput = profile.isolated(model, num_gpus)
-    total_iters = duration_s * tput
+    total_iters = iters_for_duration(model, num_gpus, duration_s, profile)
     batch_pow = int(rng.integers(0, 4))
     return JobSpec(
         job_id=job_id,

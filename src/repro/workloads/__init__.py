@@ -1,0 +1,79 @@
+"""Workload scenario lab (the evaluation side of the reproduction).
+
+Everything the scheduler is *driven with* lives here, behind one schema:
+
+* :mod:`repro.workloads.schema` — the canonical :class:`JobTrace` record
+  (arrival, gang size, duration/iteration profile, model tag, priority
+  class) with JSON round-tripping and materialisation into simulator
+  :class:`~repro.core.jobs.JobSpec` lists;
+* :mod:`repro.workloads.generators` — seeded, composable synthetic
+  generators (Poisson / diurnal / bursty arrivals, lognormal / Pareto
+  heavy-tail durations, gang-size skew, priority mixes);
+* :mod:`repro.workloads.loaders` — Philly-style CSV loader (+ committed
+  sample) and loaders for the in-repo fixture generators;
+* :mod:`repro.workloads.scenarios` — the named-scenario registry:
+  ``workloads.scenario("philly-like-burst")`` returns a trace factory and
+  a (possibly heterogeneous / racked) cluster factory the evaluation
+  harness (``benchmarks/evaluate.py``) sweeps.
+
+Determinism contract: every scenario trace is a pure function of
+``(scenario, seed, num_jobs)`` — CI gates on it.
+"""
+
+from repro.workloads.generators import (
+    Arrivals,
+    Durations,
+    GangSizes,
+    TraceRecipe,
+    generate_trace,
+)
+from repro.workloads.loaders import (
+    gavel_fixture,
+    load_philly_csv,
+    philly_sample,
+    save_philly_csv,
+    shockwave_fixture,
+)
+from repro.workloads.scenarios import (
+    Scenario,
+    homogeneous_cluster,
+    list_scenarios,
+    mixed_a100_v100_cluster,
+    register_scenario,
+    scenario,
+)
+from repro.workloads.schema import (
+    PRIORITY_CLASSES,
+    SCHEMA_VERSION,
+    JobTrace,
+    from_jobspecs,
+    load_json,
+    save_json,
+    to_jobspecs,
+)
+
+__all__ = [
+    "Arrivals",
+    "Durations",
+    "GangSizes",
+    "JobTrace",
+    "PRIORITY_CLASSES",
+    "SCHEMA_VERSION",
+    "Scenario",
+    "TraceRecipe",
+    "from_jobspecs",
+    "gavel_fixture",
+    "generate_trace",
+    "homogeneous_cluster",
+    "list_scenarios",
+    "load_json",
+    "load_philly_csv",
+    "mixed_a100_v100_cluster",
+    "philly_sample",
+    "register_scenario",
+    "save_json",
+    "save_philly_csv",
+    "scenario",
+    "shockwave_fixture",
+    "to_jobspecs",
+]

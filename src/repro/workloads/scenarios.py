@@ -1,0 +1,246 @@
+"""Named workload scenarios: ``workloads.scenario("philly-like-burst")``.
+
+A :class:`Scenario` bundles everything one evaluation arm needs — a trace
+source (synthetic recipe, CSV loader or fixture generator) plus a cluster
+shape (optionally heterogeneous / racked) — behind a name, so the
+evaluation harness, tests and CI all sweep the same registry instead of
+re-hand-rolling workloads.  Every scenario is **seeded-deterministic**:
+``make_trace(seed)`` is a pure function of its arguments.
+
+Registry (see README for the full table):
+
+====================  =======================================================
+``poisson-steady``    stationary Poisson arrivals, Shockwave-class durations
+``diurnal-lognorm``   diurnal arrivals (4x peak/trough), lognormal durations
+``philly-like-burst`` bursty arrivals, Pareto heavy-tail durations, gang
+                      skew, 10% production (non-packable) jobs
+``tiresias-churn``    oversubscribed arrivals + bimodal durations — drives
+                      Tiresias demotion/resume churn, the warm-start
+                      stress regime
+``philly-sample``     loader-backed: the committed Philly-style CSV
+``shockwave-fixture`` the paper's Shockwave-like fixture generator
+``gavel-fixture``     the paper's Gavel-like fixture generator
+``hetero-mixed``      philly-like workload on a half-A100 / half-V100
+                      two-rack cluster (type- and topology-aware paths on)
+====================  =======================================================
+
+Custom scenarios register with :func:`register_scenario`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.cluster import ClusterSpec
+from repro.core.profiler import ThroughputProfile
+from repro.workloads import loaders
+from repro.workloads.generators import (
+    Arrivals,
+    Durations,
+    GangSizes,
+    TraceRecipe,
+    generate_trace,
+)
+from repro.workloads.schema import JobTrace
+
+
+def homogeneous_cluster(num_gpus: int, gpus_per_node: int = 4) -> ClusterSpec:
+    if num_gpus % gpus_per_node:
+        raise ValueError(f"{num_gpus} GPUs not a multiple of node size {gpus_per_node}")
+    return ClusterSpec(num_gpus // gpus_per_node, gpus_per_node)
+
+
+def mixed_a100_v100_cluster(num_gpus: int, gpus_per_node: int = 4) -> ClusterSpec:
+    """Half A100 / half V100 nodes, one rack per type — the Gavel-style
+    heterogeneity regime where packing feasibility (16 vs 40 GB HBM) and
+    per-type speed flip policy rankings."""
+    base = homogeneous_cluster(num_gpus, gpus_per_node)
+    kc = base.num_nodes
+    half = max(1, kc // 2)
+    types = ("a100",) * half + ("v100",) * (kc - half)
+    return ClusterSpec(
+        kc,
+        gpus_per_node,
+        node_gpu_types=types,
+        nodes_per_rack=half,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str
+    kind: str  # "synthetic" | "loader" | "fixture"
+    #: trace factory: (seed, num_jobs, profile) -> List[JobTrace]
+    trace_fn: Callable[[int, int, Optional[ThroughputProfile]], List[JobTrace]]
+    #: cluster factory: (num_gpus) -> ClusterSpec
+    cluster_fn: Callable[[int], ClusterSpec] = homogeneous_cluster
+    default_num_jobs: int = 120
+    heterogeneous: bool = False
+
+    def make_trace(
+        self,
+        seed: int,
+        num_jobs: Optional[int] = None,
+        profile: Optional[ThroughputProfile] = None,
+    ) -> List[JobTrace]:
+        return self.trace_fn(seed, num_jobs or self.default_num_jobs, profile)
+
+    def make_cluster(self, num_gpus: int) -> ClusterSpec:
+        return self.cluster_fn(num_gpus)
+
+
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def register_scenario(s: Scenario) -> Scenario:
+    if s.name in _REGISTRY:
+        raise ValueError(f"scenario {s.name!r} already registered")
+    _REGISTRY[s.name] = s
+    return s
+
+
+def scenario(name: str) -> Scenario:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; registered: {list_scenarios()}"
+        ) from None
+
+
+def list_scenarios() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def _synthetic(recipe: TraceRecipe):
+    def fn(seed: int, num_jobs: int, profile=None) -> List[JobTrace]:
+        return generate_trace(recipe, num_jobs, seed, profile)
+
+    return fn
+
+
+# --------------------------------------------------------------------------- #
+# Built-in registry
+# --------------------------------------------------------------------------- #
+register_scenario(
+    Scenario(
+        name="poisson-steady",
+        description="stationary Poisson arrivals, Shockwave-class durations",
+        kind="synthetic",
+        trace_fn=_synthetic(
+            TraceRecipe(
+                arrivals=Arrivals(kind="poisson", rate_per_hour=60.0),
+                durations=Durations(kind="lognormal", median_s=2400.0, sigma=1.1),
+                gangs=GangSizes(probs=(0.60, 0.30, 0.09, 0.01)),
+            )
+        ),
+    )
+)
+
+register_scenario(
+    Scenario(
+        name="diurnal-lognorm",
+        description="diurnal arrivals (4x peak/trough), lognormal durations",
+        kind="synthetic",
+        trace_fn=_synthetic(
+            TraceRecipe(
+                arrivals=Arrivals(kind="diurnal", rate_per_hour=60.0, peak_ratio=4.0),
+                durations=Durations(kind="lognormal", median_s=1800.0, sigma=1.6),
+            )
+        ),
+    )
+)
+
+register_scenario(
+    Scenario(
+        name="philly-like-burst",
+        description=(
+            "bursty arrivals, Pareto heavy-tail durations, gang skew, "
+            "10% production jobs"
+        ),
+        kind="synthetic",
+        trace_fn=_synthetic(
+            TraceRecipe(
+                arrivals=Arrivals(kind="bursty", rate_per_hour=70.0),
+                durations=Durations(kind="pareto", median_s=900.0, alpha=1.1),
+                gangs=GangSizes(probs=(0.55, 0.25, 0.12, 0.08)),
+                production_fraction=0.10,
+            )
+        ),
+    )
+)
+
+register_scenario(
+    Scenario(
+        name="tiresias-churn",
+        description=(
+            "oversubscribed arrivals + bimodal durations: sustained "
+            "Tiresias demotion/resume churn (warm-start stress regime)"
+        ),
+        kind="synthetic",
+        trace_fn=_synthetic(
+            TraceRecipe(
+                arrivals=Arrivals(kind="poisson", rate_per_hour=200.0),
+                durations=Durations(kind="lognormal", median_s=3600.0, sigma=0.9),
+                gangs=GangSizes(probs=(0.70, 0.20, 0.08, 0.02)),
+            )
+        ),
+    )
+)
+
+register_scenario(
+    Scenario(
+        name="philly-sample",
+        description="loader-backed: committed Philly-style CSV sample",
+        kind="loader",
+        # the file IS the workload: seed and num_jobs only subsample
+        trace_fn=lambda seed, num_jobs, profile=None: loaders.philly_sample()[
+            :num_jobs
+        ],
+        default_num_jobs=10**9,  # whole file
+    )
+)
+
+register_scenario(
+    Scenario(
+        name="shockwave-fixture",
+        description="the paper's Shockwave-like fixture generator (§6.1)",
+        kind="fixture",
+        trace_fn=lambda seed, num_jobs, profile=None: loaders.shockwave_fixture(
+            num_jobs, seed, profile
+        ),
+    )
+)
+
+register_scenario(
+    Scenario(
+        name="gavel-fixture",
+        description="the paper's Gavel-like fixture generator (Fig. 17)",
+        kind="fixture",
+        trace_fn=lambda seed, num_jobs, profile=None: loaders.gavel_fixture(
+            num_jobs, seed, profile
+        ),
+    )
+)
+
+register_scenario(
+    Scenario(
+        name="hetero-mixed",
+        description=(
+            "philly-like workload on a half-A100/half-V100 two-rack "
+            "cluster (type- & topology-aware migration and packing)"
+        ),
+        kind="synthetic",
+        heterogeneous=True,
+        cluster_fn=mixed_a100_v100_cluster,
+        trace_fn=_synthetic(
+            TraceRecipe(
+                arrivals=Arrivals(kind="poisson", rate_per_hour=60.0),
+                durations=Durations(kind="lognormal", median_s=2400.0, sigma=1.2),
+                gangs=GangSizes(probs=(0.55, 0.30, 0.10, 0.05)),
+            )
+        ),
+    )
+)

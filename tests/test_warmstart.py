@@ -652,3 +652,171 @@ class TestCompaction:
         assert (res.col_of == base.col_of).all()
         np.testing.assert_array_equal(res.total_cost, base.total_cost)
         assert res.bid_iters.sum() == 0 and res.warm.all()
+
+
+class TestDepartedIdentityLru:
+    """Departed-identity LRU (ROADMAP): a column/instance identity that
+    leaves a family parks its final auction price in a bounded LRU, and an
+    identity that RESUMES after absent rounds (Tiresias demotion-resume)
+    re-enters with that price as a head start instead of cold — with
+    assignments still exactly scipy's (integer costs)."""
+
+    def _solve(self, ctx, costs, ids, key="lru"):
+        rows = np.arange(costs.shape[1], dtype=np.int64)
+        return solve_lap_batched(
+            costs,
+            backend="auction",
+            context=ctx,
+            context_key=key,
+            instance_ids=ids,
+            row_ids=rows,
+            col_ids=rows,
+        )
+
+    def _replay(self, ctx):
+        """Round 1: three instances; round 2: instance 12 absent;
+        round 3: it resumes unchanged.  Returns (r1, r3)."""
+        rng = np.random.default_rng(42)
+        costs = rng.integers(0, 50, (3, 8, 8)).astype(float)
+        ids = np.array([10, 11, 12])
+        r1 = self._solve(ctx, costs, ids)
+        self._solve(ctx, costs[:2], ids[:2])
+        r3 = self._solve(ctx, costs, ids)
+        return costs, r1, r3
+
+    def test_absent_round_resume_re_enters_warm(self):
+        ctx = MatchContext()
+        costs, r1, r3 = self._replay(ctx)
+        assert ctx.stats["lru_parked_cols"] > 0, "departure parked nothing"
+        assert ctx.stats["lru_restored_cols"] > 0, "resume restored nothing"
+        # exactness and bit-stability vs the first solve
+        np.testing.assert_array_equal(r3.col_of, r1.col_of)
+        np.testing.assert_allclose(r3.total_cost, _scipy_totals(costs))
+        # the resumed instance must NOT be reported warm (content was
+        # never fingerprint-verified) ...
+        assert not r3.warm[2]
+        # ... but must beat its own cold-start cost
+        assert r3.bid_iters[2] < r1.bid_iters[2]
+
+    def test_lru_disabled_resume_is_cold(self):
+        ctx = MatchContext(departed_lru_capacity=0)
+        costs, r1, r3 = self._replay(ctx)
+        assert ctx.stats["lru_parked_cols"] == 0
+        assert ctx.stats["lru_restored_cols"] == 0
+        # still correct, just cold: full schedule re-run
+        np.testing.assert_allclose(r3.total_cost, _scipy_totals(costs))
+        assert r3.bid_iters[2] >= r1.bid_iters[2]
+
+    def test_lru_beats_cold_on_resume_iterations(self):
+        with_lru = MatchContext()
+        without = MatchContext(departed_lru_capacity=0)
+        _, _, warm3 = self._replay(with_lru)
+        _, _, cold3 = self._replay(without)
+        assert warm3.bid_iters[2] < cold3.bid_iters[2]
+        np.testing.assert_array_equal(warm3.col_of, cold3.col_of)
+
+    def test_capacity_bound_evicts_lru_order(self):
+        ctx = MatchContext(departed_lru_capacity=4)
+        rng = np.random.default_rng(0)
+        costs = rng.integers(0, 30, (4, 3, 3)).astype(float)
+        self._solve(ctx, costs, np.array([1, 2, 3, 4]))
+        # drop all four instances -> 4*3 = 12 departed cols, capacity 4
+        self._solve(ctx, costs[:1] * 0 + 1.0, np.array([99]))
+        lru = ctx._departed[("lru", "auction")]
+        assert len(lru) <= 4
+
+    def test_reset_clears_parked_prices(self):
+        ctx = MatchContext()
+        costs, _, _ = self._replay(ctx)
+        ctx.reset()
+        assert not ctx._departed
+        r = self._solve(ctx, costs, np.array([10, 11, 12]))
+        assert ctx.stats["lru_restored_cols"] == 0 or r.bid_iters.sum() > 0
+
+    def test_exact_backend_has_no_price_state_to_park(self):
+        ctx = MatchContext()
+        rng = np.random.default_rng(1)
+        costs = rng.integers(0, 20, (2, 4, 4)).astype(float)
+        rows = np.arange(4, dtype=np.int64)
+        kw = dict(backend="scipy", context=ctx, context_key="x",
+                  row_ids=rows, col_ids=rows)
+        solve_lap_batched(costs, instance_ids=np.array([1, 2]), **kw)
+        solve_lap_batched(costs[:1], instance_ids=np.array([1]), **kw)
+        assert ctx.stats["lru_parked_cols"] == 0
+
+
+class TestTieBreakEngine:
+    """Canonical tie-break perturbation: solver-independent assignments on
+    tied instances, optimal totals preserved, default-off bit-compat."""
+
+    BACKENDS = ("scipy", "numpy", "smallperm", "auction")
+
+    def _all_backends(self, costs, **kw):
+        return {
+            be: solve_lap_batched(costs, backend=be, tie_break=True, **kw)
+            for be in self.BACKENDS
+        }
+
+    def test_all_backends_agree_on_fully_tied_instances(self):
+        costs = np.zeros((3, 5, 5))
+        outs = self._all_backends(costs)
+        ref = outs["scipy"].col_of
+        for be, r in outs.items():
+            np.testing.assert_array_equal(r.col_of, ref, err_msg=be)
+            np.testing.assert_array_equal(r.total_cost, np.zeros(3))
+
+    def test_all_backends_agree_under_duplicated_columns(self):
+        rng = np.random.default_rng(7)
+        costs = rng.integers(0, 5, (6, 6, 6)).astype(float)
+        costs[:, :, 4] = costs[:, :, 1]  # interchangeable columns
+        costs[:, 3, :] = costs[:, 0, :]  # interchangeable rows
+        outs = self._all_backends(costs)
+        ref = outs["scipy"]
+        for be, r in outs.items():
+            np.testing.assert_array_equal(r.col_of, ref.col_of, err_msg=be)
+        # totals are still the UNPERTURBED optimum
+        np.testing.assert_allclose(ref.total_cost, _scipy_totals(costs))
+
+    def test_perturbation_never_changes_the_optimal_total(self):
+        rng = np.random.default_rng(3)
+        for _ in range(5):
+            costs = rng.integers(0, 40, (4, 7, 7)).astype(float)
+            r = solve_lap_batched(costs, backend="auction", tie_break=True)
+            np.testing.assert_allclose(r.total_cost, _scipy_totals(costs))
+
+    def test_rectangular_and_masked_instances(self):
+        rng = np.random.default_rng(5)
+        costs = rng.integers(0, 9, (3, 4, 7)).astype(float)
+        costs[:, :, 5] = costs[:, :, 2]
+        outs = {
+            be: solve_lap_batched(costs, backend=be, tie_break=True)
+            for be in ("scipy", "numpy", "auction")
+        }
+        ref = outs["scipy"]
+        for be, r in outs.items():
+            np.testing.assert_array_equal(r.col_of, ref.col_of, err_msg=be)
+        np.testing.assert_allclose(ref.total_cost, _scipy_totals(costs))
+
+    def test_default_off_matches_pre_knob_behaviour(self):
+        rng = np.random.default_rng(9)
+        costs = rng.integers(0, 25, (4, 6, 6)).astype(float)
+        a = solve_lap_batched(costs, backend="auction")
+        b = solve_lap_batched(costs, backend="auction", tie_break=False)
+        np.testing.assert_array_equal(a.col_of, b.col_of)
+
+    def test_tie_break_composes_with_identity_context(self):
+        """Memo/warm machinery still works under the perturbation: an
+        unchanged round memo-hits and stays canonical."""
+        rng = np.random.default_rng(11)
+        costs = rng.integers(0, 12, (4, 5, 5)).astype(float)
+        costs[:, :, 3] = costs[:, :, 0]
+        ctx = MatchContext()
+        ids = np.arange(4)
+        kw = dict(backend="auction", context=ctx, context_key="tb",
+                  instance_ids=ids, tie_break=True)
+        r1 = solve_lap_batched(costs, **kw)
+        r2 = solve_lap_batched(costs, **kw)
+        assert r2.bid_iters.sum() == 0 and r2.warm.all()
+        np.testing.assert_array_equal(r2.col_of, r1.col_of)
+        ref = solve_lap_batched(costs, backend="scipy", tie_break=True)
+        np.testing.assert_array_equal(r1.col_of, ref.col_of)

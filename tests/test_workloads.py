@@ -1,0 +1,385 @@
+"""Workload scenario lab: schema round-trips, loader semantics, generator
+distribution sanity (KS-style bounds), scenario-registry determinism, and
+heterogeneous-cluster backward compatibility (homogeneous configs must be
+bit-identical to the seed paths)."""
+
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro import workloads as W
+from repro.core.cluster import ClusterSpec
+from repro.core.migration import CROSS_RACK_COST, _relabel_penalties, plan_migration
+from repro.core.packing import build_packing_graph, pack_jobs
+from repro.core.policies import TiresiasPolicy
+from repro.core.profiler import GPU_TYPES, ThroughputProfile
+from repro.core.scheduler import TesseraeScheduler
+from repro.core.simulator import SimConfig, Simulator
+from repro.core.traces import iters_for_duration, shockwave_trace
+from repro.workloads.generators import Arrivals, Durations, GangSizes
+
+pytest.importorskip("scipy.optimize")
+
+PROFILE = ThroughputProfile()
+
+
+# --------------------------------------------------------------------------- #
+# Schema
+# --------------------------------------------------------------------------- #
+class TestSchema:
+    def test_exactly_one_profile_field(self):
+        with pytest.raises(ValueError):
+            W.JobTrace(0, "resnet50", 1, 0.0)
+        with pytest.raises(ValueError):
+            W.JobTrace(0, "resnet50", 1, 0.0, duration_s=10.0, total_iters=5.0)
+
+    def test_priority_validation(self):
+        with pytest.raises(ValueError):
+            W.JobTrace(0, "resnet50", 1, 0.0, duration_s=10.0, priority="vip")
+
+    def test_duration_materialisation_matches_fixture_rule(self):
+        t = W.JobTrace(7, "vgg19", 4, 30.0, duration_s=1800.0)
+        spec = t.to_jobspec(PROFILE)
+        assert spec.total_iters == iters_for_duration("vgg19", 4, 1800.0, PROFILE)
+        assert spec.arrival_time == 30.0
+        assert spec.packable  # best-effort packs
+
+    def test_production_jobs_bypass_packing(self):
+        t = W.JobTrace(1, "gpt3-xl", 8, 0.0, duration_s=600.0, priority="production")
+        spec = t.to_jobspec(PROFILE)
+        assert not spec.packable
+        assert spec.is_llm
+
+    def test_json_round_trip(self, tmp_path):
+        trace = W.scenario("philly-like-burst").make_trace(seed=11, num_jobs=40)
+        p = tmp_path / "trace.json"
+        W.save_json(str(p), trace, meta={"note": "round-trip"})
+        assert W.load_json(str(p)) == trace
+        doc = json.loads(p.read_text())
+        assert doc["schema"] == W.SCHEMA_VERSION
+
+    def test_json_rejects_wrong_schema(self, tmp_path):
+        p = tmp_path / "bad.json"
+        p.write_text(json.dumps({"schema": "v0", "jobs": []}))
+        with pytest.raises(ValueError):
+            W.load_json(str(p))
+
+    def test_fixture_round_trip_is_lossless(self):
+        specs = shockwave_trace(num_jobs=25, seed=4, profile=PROFILE)
+        back = W.to_jobspecs(W.from_jobspecs(specs), PROFILE)
+        assert back == sorted(specs, key=lambda s: (s.arrival_time, s.job_id))
+
+
+# --------------------------------------------------------------------------- #
+# Loaders
+# --------------------------------------------------------------------------- #
+class TestPhillyLoader:
+    def test_sample_loads(self):
+        trace = W.philly_sample()
+        assert len(trace) >= 40
+        assert all(t.duration_s and t.duration_s > 0 for t in trace)
+        # arrivals re-based and sorted
+        arr = [t.arrival_s for t in trace]
+        assert arr[0] == 0.0 and arr == sorted(arr)
+        # ids dense
+        assert [t.job_id for t in trace] == list(range(len(trace)))
+
+    def test_failed_rows_dropped_and_vc_priority(self):
+        trace = W.philly_sample()
+        # the committed sample contains one Failed row out of 48
+        assert len(trace) == 47
+        assert any(t.priority == "production" for t in trace)
+
+    def test_unknown_models_map_deterministically(self):
+        from repro.core.profiler import MODEL_CATALOG
+        from repro.workloads.loaders import _canonical_model
+
+        assert _canonical_model("resnet50") == "resnet50"
+        m1, m2 = _canonical_model("bert-large"), _canonical_model("bert-large")
+        assert m1 == m2
+        assert m1 in MODEL_CATALOG
+
+    def test_csv_round_trip(self, tmp_path):
+        trace = W.scenario("poisson-steady").make_trace(seed=2, num_jobs=20)
+        p = tmp_path / "t.csv"
+        W.save_philly_csv(str(p), trace)
+        back = W.load_philly_csv(str(p))
+        assert len(back) == len(trace)
+        for a, b in zip(trace, back):
+            assert a.model == b.model and a.num_gpus == b.num_gpus
+            assert b.duration_s == pytest.approx(a.duration_s, abs=0.05)
+
+    def test_missing_columns_rejected(self, tmp_path):
+        p = tmp_path / "bad.csv"
+        p.write_text("job_id,num_gpus\n0,1\n")
+        with pytest.raises(ValueError):
+            W.load_philly_csv(str(p))
+
+
+# --------------------------------------------------------------------------- #
+# Generators: seeded determinism + distribution sanity
+# --------------------------------------------------------------------------- #
+def _ks_exponential(samples: np.ndarray, mean: float) -> float:
+    """KS statistic of ``samples`` against Exp(mean)."""
+    x = np.sort(samples) / mean
+    cdf = 1.0 - np.exp(-x)
+    emp_hi = np.arange(1, len(x) + 1) / len(x)
+    emp_lo = np.arange(0, len(x)) / len(x)
+    return float(np.maximum(np.abs(cdf - emp_hi), np.abs(cdf - emp_lo)).max())
+
+
+class TestGenerators:
+    def test_seeded_determinism_every_kind(self):
+        for kind in ("poisson", "diurnal", "bursty"):
+            a = Arrivals(kind=kind).sample(np.random.default_rng(9), 200)
+            b = Arrivals(kind=kind).sample(np.random.default_rng(9), 200)
+            np.testing.assert_array_equal(a, b)
+        for kind in ("lognormal", "pareto", "loguniform"):
+            a = Durations(kind=kind).sample(np.random.default_rng(9), 200)
+            b = Durations(kind=kind).sample(np.random.default_rng(9), 200)
+            np.testing.assert_array_equal(a, b)
+
+    def test_poisson_interarrivals_are_exponential(self):
+        arr = Arrivals(kind="poisson", rate_per_hour=120.0).sample(
+            np.random.default_rng(0), 4000
+        )
+        gaps = np.diff(arr)
+        # KS bound: 1.63/sqrt(n) is the 1% critical value; allow slack
+        assert _ks_exponential(gaps, 3600.0 / 120.0) < 2.0 / math.sqrt(len(gaps))
+        assert gaps.mean() == pytest.approx(30.0, rel=0.1)
+
+    def test_diurnal_peak_trough_ratio(self):
+        spec = Arrivals(kind="diurnal", rate_per_hour=60.0, peak_ratio=4.0)
+        arr = spec.sample(np.random.default_rng(1), 6000)
+        period = spec.period_h * 3600.0
+        phase = (arr % period) / period
+        # peak half-period (phase around 0.5) vs trough half (around 0.0)
+        peak = np.sum((phase > 0.25) & (phase < 0.75))
+        trough = len(arr) - peak
+        assert peak / max(trough, 1) > 2.0
+
+    def test_bursty_is_burstier_than_poisson(self):
+        rng = np.random.default_rng(2)
+        bur = np.diff(Arrivals(kind="bursty", rate_per_hour=60.0).sample(rng, 3000))
+        poi = np.diff(
+            Arrivals(kind="poisson", rate_per_hour=60.0).sample(
+                np.random.default_rng(2), 3000
+            )
+        )
+        # coefficient of variation: bursts push it well above Poisson's ~1
+        cv = lambda g: g.std() / g.mean()
+        assert cv(bur) > 1.5 * cv(poi)
+
+    def test_lognormal_median_and_shape(self):
+        d = Durations(kind="lognormal", median_s=1800.0, sigma=1.2, min_s=1.0).sample(
+            np.random.default_rng(3), 5000
+        )
+        assert np.median(d) == pytest.approx(1800.0, rel=0.12)
+        logs = np.log(d)
+        assert logs.std() == pytest.approx(1.2, rel=0.12)
+
+    def test_pareto_tail_is_heavy(self):
+        d = Durations(
+            kind="pareto", median_s=600.0, alpha=1.1, cap_s=10**9, min_s=1.0
+        ).sample(np.random.default_rng(4), 5000)
+        med = np.median(d)
+        # heavy tail: the top decile dominates total mass (untrue for
+        # lognormal sigma<<1 / exponential at these sizes)
+        top = np.sort(d)[-len(d) // 10 :]
+        assert top.sum() > 0.5 * d.sum()
+        assert d.max() > 50 * med
+
+    def test_gang_size_frequencies(self):
+        g = GangSizes(sizes=(1, 2, 4, 8), probs=(0.6, 0.25, 0.1, 0.05)).sample(
+            np.random.default_rng(5), 8000
+        )
+        freq = {s: np.mean(g == s) for s in (1, 2, 4, 8)}
+        for s, p in zip((1, 2, 4, 8), (0.6, 0.25, 0.1, 0.05)):
+            assert freq[s] == pytest.approx(p, abs=0.03)
+
+    def test_generate_trace_deterministic_and_valid(self):
+        sc = W.scenario("tiresias-churn")
+        t1 = sc.make_trace(seed=6, num_jobs=60)
+        t2 = sc.make_trace(seed=6, num_jobs=60)
+        assert t1 == t2
+        assert t1 != sc.make_trace(seed=7, num_jobs=60)
+        for t in t1:
+            t.to_jobspec(PROFILE)  # validates model/gang/profile coupling
+
+
+# --------------------------------------------------------------------------- #
+# Scenario registry
+# --------------------------------------------------------------------------- #
+class TestScenarioRegistry:
+    def test_registry_contract(self):
+        names = W.list_scenarios()
+        assert len(names) >= 6
+        kinds = {n: W.scenario(n).kind for n in names}
+        assert sum(k == "synthetic" for k in kinds.values()) >= 4
+        assert sum(k in ("loader", "fixture") for k in kinds.values()) >= 1
+        assert any(W.scenario(n).heterogeneous for n in names)
+
+    def test_every_scenario_seeded_deterministic(self):
+        for name in W.list_scenarios():
+            sc = W.scenario(name)
+            t1 = sc.make_trace(seed=13, num_jobs=20, profile=PROFILE)
+            t2 = sc.make_trace(seed=13, num_jobs=20, profile=PROFILE)
+            assert t1 == t2, name
+            assert len(t1) > 0, name
+
+    def test_unknown_scenario_raises(self):
+        with pytest.raises(KeyError):
+            W.scenario("no-such-scenario")
+
+    def test_duplicate_registration_rejected(self):
+        sc = W.scenario("poisson-steady")
+        with pytest.raises(ValueError):
+            W.register_scenario(sc)
+
+
+# --------------------------------------------------------------------------- #
+# Heterogeneous clusters: semantics + backward compatibility
+# --------------------------------------------------------------------------- #
+def _run_sim(cluster, num_jobs=18, seed=5, backend="scipy"):
+    trace = shockwave_trace(num_jobs=num_jobs, seed=seed, profile=PROFILE)
+    sched = TesseraeScheduler(
+        cluster, TiresiasPolicy(PROFILE, queue_base=900.0), PROFILE, lap_backend=backend
+    )
+    res = Simulator(cluster, trace, sched, PROFILE, SimConfig()).run()
+    return res, sched
+
+
+class TestHeterogeneousClusters:
+    def test_cluster_spec_accessors(self):
+        cl = ClusterSpec(4, 4, node_gpu_types=("a100", "a100", "v100", "v100"),
+                         nodes_per_rack=2)
+        assert cl.is_heterogeneous and cl.has_topology
+        assert cl.gpu_type_of(0) == "a100" and cl.gpu_type_of(3) == "v100"
+        assert cl.rack_of(1) == 0 and cl.rack_of(2) == 1
+        assert cl.num_racks == 2
+        with pytest.raises(ValueError):
+            ClusterSpec(4, 4, node_gpu_types=("a100",))
+
+    def test_homogeneous_defaults_unchanged(self):
+        plain = ClusterSpec(4, 4)
+        assert not plain.is_heterogeneous and not plain.has_topology
+        assert plain.node_types() == ("a100",) * 4
+        assert _relabel_penalties(plain) is None
+
+    def test_uniform_typed_cluster_bit_identical_to_untyped(self):
+        """The heterogeneity plumbing must be inert when every node has
+        the profile's own type: placements, JCTs, migrations identical."""
+        plain, _ = _run_sim(ClusterSpec(4, 4))
+        typed, _ = _run_sim(ClusterSpec(4, 4, node_gpu_types=("a100",) * 4))
+        np.testing.assert_array_equal(
+            [plain.jobs[j].finish_time for j in sorted(plain.jobs)],
+            [typed.jobs[j].finish_time for j in sorted(typed.jobs)],
+        )
+        assert plain.total_migrations == typed.total_migrations
+        assert plain.makespan_s == typed.makespan_s
+
+    def test_v100_nodes_actually_slower(self):
+        fast, _ = _run_sim(ClusterSpec(4, 4, node_gpu_types=("a100",) * 4))
+        slow, _ = _run_sim(ClusterSpec(4, 4, node_gpu_types=("v100",) * 4))
+        assert slow.avg_jct_s > fast.avg_jct_s
+        assert slow.makespan_s > fast.makespan_s
+
+    def test_relabel_penalties_structure(self):
+        cl = ClusterSpec(4, 2, node_gpu_types=("a100", "a100", "v100", "v100"),
+                         nodes_per_rack=2)
+        pen = _relabel_penalties(cl)
+        assert pen.shape == (4, 4)
+        assert pen[0, 1] == 0.0  # same type, same rack
+        assert pen[0, 2] > 2.0 * cl.gpus_per_node * cl.num_nodes  # type wall
+        # same-type cross-rack pair does not exist here; racked-only case:
+        cl2 = ClusterSpec(4, 2, nodes_per_rack=2)
+        pen2 = _relabel_penalties(cl2)
+        assert pen2[0, 1] == 0.0 and pen2[0, 2] == CROSS_RACK_COST
+
+    def test_migration_relabel_is_type_preserving(self):
+        """A plan shifted wholesale across node indices must relabel back
+        within its type class — never rename an A100 plan row onto V100."""
+        from repro.core.cluster import PlacementPlan
+
+        cl = ClusterSpec(4, 2, node_gpu_types=("a100", "a100", "v100", "v100"))
+        prev = PlacementPlan(cl)
+        prev.place_job(1, [0, 1])  # node 0 (a100)
+        prev.place_job(2, [4, 5])  # node 2 (v100)
+        new = PlacementPlan(cl)
+        new.place_job(1, [2, 3])   # logically node 1 (a100)
+        new.place_job(2, [6, 7])   # logically node 3 (v100)
+        res = plan_migration(prev, new, {1: 2, 2: 2}, algorithm="node")
+        # relabelling keeps each job on its original node: zero migrations
+        assert res.num_migrations == 0
+        phys = res.physical_plan.job_gpu_map()
+        assert phys[1] == frozenset({0, 1})
+        assert phys[2] == frozenset({4, 5})
+
+    def test_rack_penalty_prefers_local_relabel(self):
+        from repro.core.cluster import PlacementPlan
+
+        cl = ClusterSpec(4, 2, nodes_per_rack=2)
+        prev = PlacementPlan(cl)
+        prev.place_job(1, [0, 1])  # rack 0
+        new = PlacementPlan(cl)
+        new.place_job(1, [2, 3])   # logical node 1, still rack 0
+        res = plan_migration(prev, new, {1: 2}, algorithm="node")
+        assert res.num_migrations == 0
+        assert res.physical_plan.job_gpu_map()[1] == frozenset({0, 1})
+
+    def test_packing_weights_respect_node_hbm(self):
+        """A pair that fits in 40 GB but OOMs in 16 GB must lose its edge
+        exactly when the placed job sits on a V100 node."""
+        from repro.core.jobs import JobSpec, JobState
+
+        mk = lambda jid, model: JobState(
+            spec=JobSpec(job_id=jid, model=model, num_gpus=1, total_iters=1e5,
+                         arrival_time=0.0)
+        )
+        placed, pending = [mk(0, "gpt3-xl")], [mk(1, "gpt3-medium")]
+        w_a100 = build_packing_graph(placed, pending, PROFILE,
+                                     placed_gpu_types=["a100"])
+        w_v100 = build_packing_graph(placed, pending, PROFILE,
+                                     placed_gpu_types=["v100"])
+        assert w_a100[0, 0] > 0.0
+        assert w_v100[0, 0] == 0.0  # 25 + 17 GB >> 16 GB HBM
+        # and the None path is bit-identical to the uniform-type path
+        w_none = build_packing_graph(placed, pending, PROFILE)
+        np.testing.assert_array_equal(w_none, w_a100)
+
+    def test_hetero_scenario_end_to_end(self):
+        sc = W.scenario("hetero-mixed")
+        cl = sc.make_cluster(16)
+        assert cl.is_heterogeneous and cl.has_topology
+        trace = W.to_jobspecs(sc.make_trace(seed=1, num_jobs=16, profile=PROFILE),
+                              PROFILE)
+        sched = TesseraeScheduler(cl, TiresiasPolicy(PROFILE), PROFILE)
+        res = Simulator(cl, trace, sched, PROFILE, SimConfig()).run()
+        assert all(s.finished for s in res.jobs.values())
+        # the same workload on an all-A100 cluster of equal size finishes
+        # sooner: the V100 half really runs at V100 speed
+        homo = ClusterSpec(cl.num_nodes, cl.gpus_per_node)
+        sched2 = TesseraeScheduler(homo, TiresiasPolicy(PROFILE), PROFILE)
+        res2 = Simulator(homo, trace, sched2, PROFILE, SimConfig()).run()
+        assert res.avg_jct_s > res2.avg_jct_s
+
+
+# --------------------------------------------------------------------------- #
+# Evaluation harness plumbing (smoke-level, never timing)
+# --------------------------------------------------------------------------- #
+class TestEvaluateHarness:
+    def test_run_arm_schema_and_determinism(self):
+        import sys, os
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+        from benchmarks.evaluate import DETERMINISTIC_METRICS, run_arm, validate_schema
+
+        a1 = run_arm("tesserae-t", "poisson-steady", 16, 12, seed=3)
+        a2 = run_arm("tesserae-t", "poisson-steady", 16, 12, seed=3)
+        for k in DETERMINISTIC_METRICS:
+            assert a1["metrics"][k] == a2["metrics"][k], k
+        assert a1["match_telemetry"] == a2["match_telemetry"]
+        assert a1["match_telemetry"]["warm_instances"] > 0
+        assert validate_schema({"arms": [a1]}) == []
