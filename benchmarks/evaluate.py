@@ -77,6 +77,7 @@ def run_arm(
     seed: int,
     backend: str = "auto",
     profile: Optional[ThroughputProfile] = None,
+    type_affinity: bool = True,
 ) -> Dict:
     profile = profile or ThroughputProfile()
     sc = workloads.scenario(scenario_name)
@@ -86,6 +87,7 @@ def run_arm(
     )
     sched = build_scheduler(policy, cluster, profile)
     sched.lap_backend = backend
+    sched.type_affinity = type_affinity
     t0 = time.perf_counter()
     res = Simulator(cluster, trace, sched, profile, SimConfig()).run()
     wall = time.perf_counter() - t0
@@ -233,6 +235,25 @@ def smoke(args) -> int:
     ]
     if not warm:
         failures.append("no tesserae arm served warm instances from its MatchContext")
+    # hetero type-affinity gate (placement type-blindness bugfix): on the
+    # heterogeneous scenario, the affinity placement key must not regress
+    # average JCT vs the type-blind best-fit it replaces.
+    kw_h = dict(
+        num_gpus=16, num_jobs=args.jobs or 24, seed=args.seed, backend=args.backend
+    )
+    aff_on = run_arm("tesserae-t", "hetero-mixed", type_affinity=True, **kw_h)
+    aff_off = run_arm("tesserae-t", "hetero-mixed", type_affinity=False, **kw_h)
+    jct_on = aff_on["metrics"]["avg_jct_s"]
+    jct_off = aff_off["metrics"]["avg_jct_s"]
+    if jct_on > jct_off:
+        failures.append(
+            f"hetero-mixed avg JCT regressed with type affinity on: "
+            f"{jct_on:.1f}s (on) > {jct_off:.1f}s (off)"
+        )
+    doc1["hetero_affinity_gate"] = {
+        "avg_jct_s_affinity_on": jct_on,
+        "avg_jct_s_affinity_off": jct_off,
+    }
     if args.json:
         with open(args.json, "w") as f:
             json.dump(doc1, f, indent=1, sort_keys=True)

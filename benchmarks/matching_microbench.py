@@ -52,6 +52,28 @@ Three parts:
    outright (see the ``decide_scale_warmstart`` records):
 
        PYTHONPATH=src:. python benchmarks/matching_microbench.py --churn
+
+5. The **fused decide() replay** (``--fused``): the migrate stage routed
+   through :class:`repro.core.fused.FusedMigrationPlanner` — one jitted
+   XLA program (occupancy diff, in-program cost assembly, the sharded
+   pair-LAP fan-out, node match, physical scatter) and ONE device→host
+   readout per round.  Two parts: a small-scale churn replay comparing
+   fused plans bit-for-bit against the host planner under ``tie_break``,
+   and a warm steady-state replay at the 2048-GPU sweep point (512 nodes
+   x 4) recording per-round wall time and the per-round host-sync budget
+   (``fused_readouts`` plus any ``MatchContext.host_syncs``).  JSON
+   record defaults to ``BENCH_fused_decide.json``; with
+   ``--check-convergence`` it gates on bit-parity, zero host fallbacks,
+   exactly one readout per migration round, and full cache cleanliness
+   (zero dirty pairs) once the steady state is reached — never on
+   timing.  Shard-count invariance across forced host devices is the
+   test suite's job (``tests/test_fused_decide.py``); run this lane
+   under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to give
+   ``--fused-shards`` real devices:
+
+       XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+           PYTHONPATH=src:. python benchmarks/matching_microbench.py \\
+           --fused --fused-shards 8
 """
 
 from __future__ import annotations
@@ -434,6 +456,160 @@ def bench_decide_scale(args, rows: List[str], records: List[Dict]) -> None:
         )
 
 
+def bench_fused_decide(args, rows: List[str], records: List[Dict]) -> bool:
+    """Fused decide() replay: bit-parity churn gate + warm steady-state
+    scale replay; returns True when every parity / fallback / readout /
+    cleanliness gate passed (timings recorded, never gated)."""
+    from repro.core.cluster import ClusterSpec
+    from repro.core.policies import TiresiasPolicy
+    from repro.core.profiler import ThroughputProfile
+    from repro.core.scheduler import TesseraeScheduler
+    from repro.core.traces import synthetic_active_jobs
+
+    profile = ThroughputProfile()
+    ok = True
+
+    # --- part 1: small-scale churn replay, fused vs host, bit-identical --- #
+    # tie_break makes the perturbed optimum unique, so the fused program
+    # and the host planner must emit the SAME physical plan every round —
+    # membership churn (jobs leaving/rejoining) exercises the per-node
+    # invalidation path, not just the all-clean steady state.
+    cluster = ClusterSpec(args.fused_check_nodes, 4)
+    jobs = synthetic_active_jobs(
+        args.fused_check_nodes * 3 // 2, seed=3, profile=profile
+    )
+
+    def _mk(fused: bool) -> TesseraeScheduler:
+        return TesseraeScheduler(
+            cluster,
+            TiresiasPolicy(profile),
+            profile,
+            enable_packing=False,
+            tie_break=True,
+            lap_backend="auto",
+            fused_fanout=fused,
+            fanout_shards=args.fused_shards,
+        )
+
+    f_sched, h_sched = _mk(True), _mk(False)
+    prev_f = prev_h = None
+    parity_rounds = parity_ok_rounds = 0
+    for r in range(args.fused_check_rounds):
+        active = jobs[(r % 3):] if r % 2 else jobs  # membership churn
+        df = f_sched.decide(active, now=360.0 * r, prev_plan=prev_f)
+        dh = h_sched.decide(active, now=360.0 * r, prev_plan=prev_h)
+        if prev_f is not None:
+            parity_rounds += 1
+            if bool(np.array_equal(df.plan.slots, dh.plan.slots)):
+                parity_ok_rounds += 1
+        prev_f, prev_h = df.plan, dh.plan
+    fstats = dict(f_sched._fused_planner.stats)
+    checks = {
+        "parity_rounds": parity_rounds,
+        "parity_ok_rounds": parity_ok_rounds,
+        "fused_rounds": fstats["fused_rounds"],
+        "host_fallbacks": fstats["fused_host_fallbacks"],
+        "readouts": fstats["fused_readouts"],
+    }
+    ok &= parity_ok_rounds == parity_rounds > 0
+    ok &= fstats["fused_host_fallbacks"] == 0
+    ok &= fstats["fused_readouts"] == parity_rounds  # ONE readout per round
+    records.append(
+        {
+            "bench": "fused_parity_churn",
+            "nodes": args.fused_check_nodes,
+            "shards": args.fused_shards,
+            **checks,
+        }
+    )
+    rows.append(
+        csv_row(
+            f"matching/fused_parity_n{args.fused_check_nodes}",
+            0.0,
+            f"parity={parity_ok_rounds}/{parity_rounds};"
+            f"fallbacks={fstats['fused_host_fallbacks']}",
+        )
+    )
+
+    # --- part 2: warm steady-state replay at the 2048-GPU sweep point ----- #
+    # static job set: after the physical plan reaches its fixed point the
+    # occupancy diff marks every pair clean, the while_loop auctions exit
+    # with zero bid rounds, and the round's entire host-sync budget is the
+    # single fused readout — the tentpole's O(1)-transfer contract.
+    cluster = ClusterSpec(args.fused_nodes, 4)
+    jobs = synthetic_active_jobs(args.fused_jobs, seed=1, profile=profile)
+    sched = TesseraeScheduler(
+        cluster,
+        TiresiasPolicy(profile),
+        profile,
+        enable_packing=False,
+        lap_backend="auto",
+        fused_fanout=True,
+        fanout_shards=args.fused_shards,
+    )
+    d = sched.decide(jobs, now=0.0)  # round 0: no prev plan, no migrate
+    prev = d.plan
+    per_round = []
+    for r in range(1, args.fused_rounds + 1):
+        stats0 = dict(sched._fused_planner.stats) if sched._fused_planner else {}
+        sync0 = sched.match_context.stats["host_syncs"]
+        t0 = time.perf_counter()
+        d = sched.decide(jobs, now=360.0 * r, prev_plan=prev)
+        dt = time.perf_counter() - t0
+        prev = d.plan
+        st = sched._fused_planner.stats
+        per_round.append(
+            {
+                "round": r,
+                "decide_s": dt,
+                "migrate_s": d.timings["migrate_s"],
+                # the round's host-sync budget: fused readouts plus any
+                # MatchContext device readouts (packing is off, so the
+                # context stays untouched — this pins that)
+                "fused_readouts": st["fused_readouts"] - stats0.get("fused_readouts", 0),
+                "context_host_syncs": sched.match_context.stats["host_syncs"] - sync0,
+                "dirty_pairs": st["fused_dirty_pairs"] - stats0.get("fused_dirty_pairs", 0),
+                "pair_instances": st["fused_pair_instances"]
+                - stats0.get("fused_pair_instances", 0),
+                "bid_iters": st["fused_bid_iters"] - stats0.get("fused_bid_iters", 0),
+                "host_fallbacks": st["fused_host_fallbacks"]
+                - stats0.get("fused_host_fallbacks", 0),
+            }
+        )
+    warm = [p for p in per_round if p["dirty_pairs"] == 0]
+    steady_wall = float(np.mean([p["decide_s"] for p in warm])) if warm else None
+    rec = {
+        "bench": "fused_decide_scale",
+        "nodes": args.fused_nodes,
+        "gpus": cluster.num_gpus,
+        "jobs": args.fused_jobs,
+        "shards": args.fused_shards,
+        "rounds": args.fused_rounds,
+        "warm_steady_rounds": len(warm),
+        "warm_steady_decide_s": steady_wall,
+        "host_syncs_per_round": [
+            p["fused_readouts"] + p["context_host_syncs"] for p in per_round
+        ],
+        "per_round": per_round,
+    }
+    records.append(rec)
+    ok &= all(p["host_fallbacks"] == 0 for p in per_round)
+    ok &= all(p["fused_readouts"] == 1 for p in per_round)
+    ok &= all(p["context_host_syncs"] == 0 for p in per_round)
+    # the steady state must actually be reached and be all-clean
+    ok &= len(warm) > 0 and per_round[-1]["dirty_pairs"] == 0
+    rows.append(
+        csv_row(
+            f"matching/fused_decide_n{args.fused_nodes}",
+            (steady_wall or 0.0) * 1e6,
+            f"gpus={cluster.num_gpus};shards={args.fused_shards};"
+            f"warm_rounds={len(warm)}/{args.fused_rounds};"
+            f"syncs_per_round={rec['host_syncs_per_round'][-1]}",
+        )
+    )
+    return ok
+
+
 def main(argv=None, print_csv: bool = True) -> List[str]:
     """``argv``: CLI arg list; ``None`` when driven programmatically by
     ``benchmarks/run.py`` — that path drops the ``auction_kernel`` backend
@@ -464,6 +640,28 @@ def main(argv=None, print_csv: bool = True) -> List[str]:
         help="run the identity-keyed churn replay (arrival/departure rate "
         "sweep): identity-keyed vs shape-keyed (PR-2 emulation) vs cold",
     )
+    parser.add_argument(
+        "--fused",
+        action="store_true",
+        help="run the fused decide() replay: bit-parity churn gate plus the "
+        "warm steady-state scale replay through the one-readout-per-round "
+        "FusedMigrationPlanner",
+    )
+    parser.add_argument("--fused-rounds", type=int, default=6,
+                        help="rounds of the fused scale replay")
+    parser.add_argument("--fused-nodes", type=int, default=512,
+                        help="nodes (x4 GPUs) of the fused scale replay "
+                        "(512 = the 2048-GPU sweep point)")
+    parser.add_argument("--fused-jobs", type=int, default=512,
+                        help="steady-state job count of the fused scale replay")
+    parser.add_argument("--fused-shards", type=int, default=1,
+                        help="devices to shard_map the pair fan-out over "
+                        "(clamped to the visible device count; force host "
+                        "devices via XLA_FLAGS to exceed 1 on CPU)")
+    parser.add_argument("--fused-check-nodes", type=int, default=8,
+                        help="nodes of the fused-vs-host bit-parity churn gate")
+    parser.add_argument("--fused-check-rounds", type=int, default=10,
+                        help="rounds of the fused-vs-host bit-parity churn gate")
     parser.add_argument("--churn-rounds", type=int, default=30,
                         help="churn replay length")
     parser.add_argument("--churn-pool", type=int, default=64,
@@ -500,10 +698,10 @@ def main(argv=None, print_csv: bool = True) -> List[str]:
     )
     from_cli = argv is not None
     args = parser.parse_args(list(argv) if from_cli else [])
-    if args.churn and args.warm_start:
+    if sum([args.churn, args.warm_start, args.fused]) > 1:
         parser.error(
-            "--churn and --warm-start are separate replays with separate "
-            "JSON records and gates; run them as two invocations"
+            "--churn, --warm-start and --fused are separate replays with "
+            "separate JSON records and gates; run them as separate invocations"
         )
     backends = SWEEP_BACKENDS if args.backend == "all" else [args.backend]
     if not from_cli:
@@ -514,6 +712,31 @@ def main(argv=None, print_csv: bool = True) -> List[str]:
 
     rows: List[str] = []
     records: List[Dict] = []
+    if args.fused:
+        import jax
+
+        json_path = args.json or "BENCH_fused_decide.json"
+        gates_ok = bench_fused_decide(args, rows, records)
+        report = {
+            "benchmark": "fused_decide",
+            "nodes": args.fused_nodes,
+            "jobs": args.fused_jobs,
+            "shards": args.fused_shards,
+            "rounds": args.fused_rounds,
+            "devices": len(jax.devices()),
+            "gates_ok": gates_ok,
+            "records": records,
+        }
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        rows.append(csv_row("matching/json_report", 0.0, f"path={json_path}"))
+        if print_csv:
+            for r in rows:
+                print(r)
+        if args.check_convergence and not gates_ok:
+            print("fused decide parity/readout gate FAILED", file=sys.stderr)
+            raise SystemExit(2)
+        return rows
     if args.churn:
         json_path = args.json or "BENCH_matching_churn.json"
         gates_ok = bench_churn(args, rows, records)

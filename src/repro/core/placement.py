@@ -11,21 +11,41 @@ GPUs subject to **consolidated placement**:
 Placement can fail (line 8) when no consolidated hole exists even if the
 total free GPU count suffices — those jobs go to ``pending_jobs`` and
 become packing candidates (Algorithm 4).
+
+On **heterogeneous** clusters the best-fit key additionally carries a
+type-affinity term (``type_affinity=True``): sub-node jobs prefer the
+SLOWEST GPU type that still fits before tie-breaking on hole size, and
+multi-node gangs take the fastest empty nodes.  Without it, a 1-GPU job
+arriving first can squat an A100 node while an 8-GPU gang lands on V100s
+— the type-blindness bug; the affinity key is the minimal fix (the full
+Gavel policy-as-optimization treatment stays future work).  On
+homogeneous clusters every speed ties and the order degenerates
+bit-identically to the seed best-fit.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.cluster import EMPTY, ClusterSpec, PlacementPlan
 from repro.core.jobs import JobState
+from repro.core.profiler import GPU_TYPES
+
+
+def _node_speeds(cluster: ClusterSpec) -> Optional[np.ndarray]:
+    """Per-node relative GPU speed, or None when every node ties (the
+    homogeneous fast path — no key change at all)."""
+    if not cluster.is_heterogeneous:
+        return None
+    return np.array([GPU_TYPES[t].speed for t in cluster.node_types()])
 
 
 def place_without_packing(
     cluster: ClusterSpec,
     sorted_jobs: Sequence[JobState],
+    type_affinity: bool = True,
 ) -> Tuple[PlacementPlan, List[JobState], List[JobState]]:
     """Greedy consolidated placement of priority-sorted jobs.
 
@@ -38,6 +58,7 @@ def place_without_packing(
     pending: List[JobState] = []
     free_per_node = np.full(cluster.num_nodes, cluster.gpus_per_node, np.int64)
     gpn = cluster.gpus_per_node
+    speeds = _node_speeds(cluster) if type_affinity else None
 
     for job in sorted_jobs:
         g = job.num_gpus
@@ -45,12 +66,22 @@ def place_without_packing(
             pending.append(job)
             continue
         if g <= gpn:
-            # best fit: smallest adequate hole
             candidates = np.nonzero(free_per_node >= g)[0]
             if len(candidates) == 0:
                 pending.append(job)
                 continue
-            node = int(candidates[np.argmin(free_per_node[candidates])])
+            if speeds is None:
+                # best fit: smallest adequate hole (first index on ties)
+                node = int(candidates[np.argmin(free_per_node[candidates])])
+            else:
+                # type-affinity best fit: the job runs at its node's
+                # speed, so break hole-size ties toward the FASTEST type
+                # (explicitly — not via the index-order accident) while
+                # still filling partial holes before opening empty nodes
+                order = np.lexsort(
+                    (candidates, -speeds[candidates], free_per_node[candidates])
+                )
+                node = int(candidates[order[0]])
             gpus = _take_free_gpus(plan, node, g)
         else:
             if g % gpn != 0:
@@ -62,6 +93,25 @@ def place_without_packing(
             if len(empty_nodes) < need_nodes:
                 pending.append(job)
                 continue
+            if speeds is not None and len(empty_nodes) >= need_nodes:
+                # a gang runs at the pace of its SLOWEST node, so a
+                # type-mixed gang throttles every fast GPU it holds to
+                # the slow type's speed (the squat bug's worst case).
+                # Prefer a type-PURE node set — fastest pure type first —
+                # and fall back to the maximum-min-speed mixed set only
+                # when no single type has enough empty nodes.
+                esp = speeds[empty_nodes]
+                pure = None
+                for sp in sorted(set(esp.tolist()), reverse=True):
+                    ns = empty_nodes[esp == sp]
+                    if len(ns) >= need_nodes:
+                        pure = ns
+                        break
+                empty_nodes = (
+                    pure
+                    if pure is not None
+                    else empty_nodes[np.lexsort((empty_nodes, -esp))]
+                )
             gpus = []
             for node in empty_nodes[:need_nodes]:
                 gpus.extend(_take_free_gpus(plan, int(node), gpn))

@@ -76,6 +76,16 @@ class TesseraeScheduler:
         # differential testing across backends); off by default — the seed
         # placements are preserved exactly.
         tie_break: bool = False,
+        # heterogeneous clusters: type-affinity placement key (sub-node
+        # jobs to the slowest sufficient GPU type, gangs to the fastest
+        # empty nodes).  No-op on homogeneous clusters.
+        type_affinity: bool = True,
+        # route the migrate stage through the fused device-resident
+        # planner (repro.core.fused): one jitted program + one readout per
+        # round, with the pair fan-out sharded over `fanout_shards`
+        # devices.  Only meaningful with migration_algorithm == "node".
+        fused_fanout: bool = False,
+        fanout_shards: int = 1,
     ):
         self.cluster = cluster
         self.policy = policy
@@ -86,6 +96,10 @@ class TesseraeScheduler:
         self.lap_backend = lap_backend
         self.packed_ok = packed_ok
         self.tie_break = tie_break
+        self.type_affinity = type_affinity
+        self.fused_fanout = fused_fanout
+        self.fanout_shards = fanout_shards
+        self._fused_planner = None  # lazily built FusedMigrationPlanner
         #: identity-keyed warm-start state threaded across rounds: the
         #: packing matching (keyed by job ids), the Algorithm-2 node-pair
         #: fan-out (node-pair / GPU-slot ids) and the final node match
@@ -111,7 +125,9 @@ class TesseraeScheduler:
         timings["schedule_s"] = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        plan, placed, pending = place_without_packing(self.cluster, ordered)
+        plan, placed, pending = place_without_packing(
+            self.cluster, ordered, type_affinity=self.type_affinity
+        )
         timings["place_s"] = time.perf_counter() - t0
 
         t0 = time.perf_counter()
@@ -147,19 +163,32 @@ class TesseraeScheduler:
 
         t0 = time.perf_counter()
         migration: Optional[MigrationResult] = None
+        fused_before: Dict[str, int] = {}
         if prev_plan is not None:
             gmap: Dict[int, int] = dict(num_gpus_of or {})
             for j in active_jobs:
                 gmap.setdefault(j.job_id, j.num_gpus)
-            migration = plan_migration(
-                prev_plan,
-                plan,
-                gmap,
-                algorithm=self.migration_algorithm,
-                backend=self.lap_backend,
-                context=self.match_context,
-                tie_break=self.tie_break,
-            )
+            if self.fused_fanout and self.migration_algorithm == "node":
+                if self._fused_planner is None:
+                    from repro.core.fused import FusedMigrationPlanner
+
+                    self._fused_planner = FusedMigrationPlanner(
+                        shards=self.fanout_shards
+                    )
+                fused_before = dict(self._fused_planner.stats)
+                migration = self._fused_planner.plan(
+                    prev_plan, plan, gmap, tie_break=self.tie_break
+                )
+            else:
+                migration = plan_migration(
+                    prev_plan,
+                    plan,
+                    gmap,
+                    algorithm=self.migration_algorithm,
+                    backend=self.lap_backend,
+                    context=self.match_context,
+                    tie_break=self.tie_break,
+                )
             plan = migration.physical_plan
         timings["migrate_s"] = time.perf_counter() - t0
 
@@ -168,6 +197,14 @@ class TesseraeScheduler:
             for k, v in self.match_context.stats.items()
             if v != stats_before.get(k, 0)
         }
+        if self._fused_planner is not None:
+            # the fused planner's per-round telemetry rides the same dict
+            # the simulator already aggregates (its readout count is the
+            # migrate stage's entire host-sync budget for the round)
+            for k, v in self._fused_planner.stats.items():
+                d = v - fused_before.get(k, 0)
+                if d:
+                    match_stats[k] = match_stats.get(k, 0) + d
         return RoundDecision(
             plan, placed, pending, packing, migration, timings, match_stats
         )

@@ -13,7 +13,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.lap_bid import lap_bid_pallas, lap_bid_pallas_batched
+from repro.kernels.lap_bid import (
+    lap_bid_fused_pallas,
+    lap_bid_fused_pallas_batched,
+    lap_bid_pallas,
+    lap_bid_pallas_batched,
+)
 from repro.kernels.migration_cost import migration_cost_pallas
 
 
@@ -50,6 +55,19 @@ def lap_bid(a: jax.Array, prices: jax.Array):
     if a.ndim == 3:
         return lap_bid_pallas_batched(a, prices, interpret=_default_interpret())
     return lap_bid_pallas(a, prices, interpret=_default_interpret())
+
+
+def lap_bid_fused(cost: jax.Array, prices: jax.Array, tb_scale=0.0):
+    """Fused-benefit bid step on a raw COST matrix (2-D or batched 3-D):
+    the ``-cost`` negation and the positional tie-break ramp assemble
+    inside the kernel's tiled sweep, so no perturbed benefit matrix is
+    ever materialised in HBM (see ``lap_bid.lap_bid_fused_pallas``).
+    ``tb_scale=0`` is the plain (un-perturbed) bid on ``-cost``."""
+    if cost.ndim == 3:
+        return lap_bid_fused_pallas_batched(
+            cost, prices, tb_scale, interpret=_default_interpret()
+        )
+    return lap_bid_fused_pallas(cost, prices, tb_scale, interpret=_default_interpret())
 
 
 def migration_cost_matrix(

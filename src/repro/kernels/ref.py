@@ -27,6 +27,26 @@ def lap_bid_top2(vals: jnp.ndarray):
     return best_v, best_j.astype(jnp.int32), second_v
 
 
+def lap_bid_fused_top2(vals_or_cost, prices=None, tb_scale=0.0):
+    """Oracle for the fused-benefit bid step (``lap_bid_fused_pallas``).
+
+    ``vals_or_cost``: (n, m) raw COST matrix; the benefit is assembled
+    here exactly as the kernel does per tile —
+    ``(tb_scale * (i+1)^2 * (j+1) - cost) - p`` with global indices and
+    matching operation order, so integer costs + power-of-two scales give
+    bit-identical f32 values.
+    """
+    cost = vals_or_cost
+    n, m = cost.shape[-2], cost.shape[-1]
+    if prices is None:
+        prices = jnp.zeros(cost.shape[:-2] + (m,), cost.dtype)
+    gi = (jnp.arange(n, dtype=cost.dtype) + 1.0)[:, None]
+    gj = (jnp.arange(m, dtype=cost.dtype) + 1.0)[None, :]
+    tb = jnp.asarray(tb_scale, cost.dtype)
+    vals = (tb * (gi * gi) * gj - cost) - prices[..., None, :]
+    return lap_bid_top2(vals)
+
+
 def migration_cost(
     slots_u: jnp.ndarray,
     slots_v: jnp.ndarray,

@@ -3,7 +3,15 @@
 1. Make ``repro`` importable even when neither ``PYTHONPATH=src`` nor the
    ``pythonpath`` pytest ini option took effect (e.g. pytest invoked from
    another directory).
-2. Gate the optional ``hypothesis`` dependency: in hermetic containers
+2. Force a multi-device CPU topology BEFORE jax initialises: the fused
+   sharded ``decide()`` parity suite (tests/test_fused_decide.py) builds
+   1/2/8-device meshes from these forced host devices, so the shard_map
+   fan-out is validated in-process without a TPU (the SNIPPETS.md
+   ``--xla_force_host_platform_device_count`` idiom).  Single-device
+   semantics are unchanged — arrays still default to device 0 — and an
+   XLA_FLAGS value that already pins a device count (e.g. the fused-smoke
+   CI lane) wins.
+3. Gate the optional ``hypothesis`` dependency: in hermetic containers
    where it cannot be installed, install the API-compatible fallback from
    :mod:`repro.testing.hypothesis_fallback` so the 4 property-test modules
    still collect and run as seeded random property checks.
@@ -11,6 +19,12 @@
 
 import os
 import sys
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8"
+    ).strip()
 
 _SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), os.pardir, "src"))
 if os.path.isdir(_SRC) and _SRC not in (os.path.abspath(p) for p in sys.path):

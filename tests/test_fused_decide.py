@@ -1,0 +1,215 @@
+"""Multi-device fused-decide parity suite.
+
+The fused migration planner (:mod:`repro.core.fused`) compiles the whole
+Algorithm-2 stage — occupancy diff, in-program cost assembly, the sharded
+pair-LAP fan-out, the node match and the physical scatter — into one
+jitted XLA program with a single readout per round.  This suite is its
+churn-replay differential gate:
+
+* **fused vs host, bit-identical**: the 60+ round churn replay of
+  ``test_churn_replay`` driven with ``fused_fanout=True`` and a cold
+  scipy shadow deciding from the SAME per-round inputs must produce
+  bit-identical physical plans every round under ``tie_break`` (the
+  perturbed optimum is unique, so every exact solver agrees), and
+  exactly equal integer-quantised matching costs without it.
+* **shard invariance**: conftest forces 8 host devices
+  (``--xla_force_host_platform_device_count=8``); replays sharded over
+  1 / 2 / 8 of them must be bit-identical to each other — sharding the
+  fan-out batch is pure partitioning, never semantics.
+* **hypothesis property**: for random plan pairs, ANY shard split of the
+  pair axis preserves the full physical relabelling.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+from repro.core.cluster import ClusterSpec
+from repro.core.fused import FusedMigrationPlanner
+from repro.core.migration import plan_migration
+from repro.core.placement import place_without_packing
+from repro.core.profiler import ThroughputProfile
+from repro.core.simulator import SimConfig, Simulator
+from repro.core.policies import TiresiasPolicy
+from repro.core.traces import shockwave_trace, synthetic_active_jobs
+
+from tests.test_churn_replay import MIN_ROUNDS, N_JOBS, ARRIVAL_RATE, SEED, RecordingScheduler
+
+pytest.importorskip("scipy.optimize")
+
+SHARD_COUNTS = (1, 2, 8)
+
+
+def _run_fused(shards, tie_break, shadow=True):
+    profile = ThroughputProfile()
+    cluster = ClusterSpec(4, 4)
+    shadow_sched = None
+    if shadow:
+        from repro.core.scheduler import TesseraeScheduler
+
+        shadow_sched = TesseraeScheduler(
+            cluster,
+            TiresiasPolicy(profile, queue_base=900.0),
+            profile,
+            lap_backend="scipy",
+            enable_packing=False,
+            tie_break=tie_break,
+        )
+    sched = RecordingScheduler(
+        cluster,
+        TiresiasPolicy(profile, queue_base=900.0),
+        profile,
+        lap_backend="scipy",
+        cold=False,
+        shadow=shadow_sched,
+        enable_packing=False,
+        tie_break=tie_break,
+        fused_fanout=True,
+        fanout_shards=shards,
+    )
+    trace = shockwave_trace(
+        num_jobs=N_JOBS, arrival_rate_per_hour=ARRIVAL_RATE, seed=SEED, profile=profile
+    )
+    sim = Simulator(
+        cluster,
+        trace,
+        sched,
+        profile,
+        SimConfig(round_duration_s=360.0, resume_fraction=0.25),
+    )
+    return sim.run(), sched
+
+
+class TestFusedChurnParity:
+    """Fused planner vs the cold scipy shadow over the full churn replay."""
+
+    @pytest.fixture(scope="class")
+    def replays(self):
+        # one replay per shard count, shadow only on the first (the others
+        # are compared against it round-by-round)
+        out = {}
+        for s in SHARD_COUNTS:
+            out[s] = _run_fused(s, tie_break=True, shadow=(s == SHARD_COUNTS[0]))
+        return out
+
+    def test_devices_actually_forced(self):
+        assert len(jax.devices()) >= max(SHARD_COUNTS), (
+            "conftest did not force 8 host devices — shard parity is vacuous"
+        )
+
+    def test_plans_bit_identical_to_host_all_rounds(self, replays):
+        _, sched = replays[SHARD_COUNTS[0]]
+        assert len(sched.round_log) >= MIN_ROUNDS
+        for t, entry in enumerate(sched.round_log):
+            assert entry["plan"] == entry["shadow"]["plan"], (
+                f"round {t}: fused physical plan != cold scipy shadow"
+            )
+
+    def test_matching_costs_exact(self, replays):
+        _, sched = replays[SHARD_COUNTS[0]]
+        compared = 0
+        for t, entry in enumerate(sched.round_log):
+            if entry["mig_cost"] is None:
+                continue
+            compared += 1
+            assert entry["mig_cost"] == pytest.approx(
+                entry["shadow"]["mig_cost"], abs=1e-9
+            ), f"round {t}"
+        assert compared >= MIN_ROUNDS
+
+    def test_shard_counts_bit_identical(self, replays):
+        ref_res, ref_sched = replays[SHARD_COUNTS[0]]
+        for s in SHARD_COUNTS[1:]:
+            res, sched = replays[s]
+            assert len(sched.round_log) == len(ref_sched.round_log)
+            for t, (a, b) in enumerate(zip(sched.round_log, ref_sched.round_log)):
+                assert a["plan"] == b["plan"], f"shards={s} round {t}: plans differ"
+                assert a["mig_cost"] == b["mig_cost"], f"shards={s} round {t}"
+            np.testing.assert_array_equal(
+                [res.jobs[j].finish_time for j in sorted(res.jobs)],
+                [ref_res.jobs[j].finish_time for j in sorted(ref_res.jobs)],
+            )
+
+    def test_fused_lane_actually_ran(self, replays):
+        """The replay must have been served by the fused program, not the
+        host fallback, with exactly ONE device readout per migration
+        round — the tentpole's O(1)-readout contract."""
+        _, sched = replays[SHARD_COUNTS[0]]
+        rounds = [e["match_stats"] for e in sched.round_log]
+        fused_rounds = sum(r.get("fused_rounds", 0) for r in rounds)
+        fallbacks = sum(r.get("fused_host_fallbacks", 0) for r in rounds)
+        readouts = sum(r.get("fused_readouts", 0) for r in rounds)
+        mig_rounds = sum(1 for e in sched.round_log if e["mig_cost"] is not None)
+        assert fused_rounds == mig_rounds, (fused_rounds, mig_rounds)
+        assert fallbacks == 0
+        assert readouts == mig_rounds
+
+    def test_invalidation_is_partial(self, replays):
+        """Occupancy diffing must keep some pairs clean on most rounds —
+        a full-batch invalidation every round would make the device cache
+        pointless."""
+        _, sched = replays[SHARD_COUNTS[0]]
+        partial = 0
+        total = 0
+        for e in sched.round_log:
+            st_ = e["match_stats"]
+            if not st_.get("fused_pair_instances"):
+                continue
+            total += 1
+            if st_.get("fused_dirty_pairs", 0) < st_["fused_pair_instances"]:
+                partial += 1
+        assert total >= MIN_ROUNDS
+        assert partial >= total // 2, (partial, total)
+
+
+class TestFusedCostParityNoTieBreak:
+    """Without tie-breaking, assignments may legitimately differ between
+    solvers, but the integer-quantised matching cost must still be exact
+    every round."""
+
+    def test_costs_exact(self):
+        _, sched = _run_fused(1, tie_break=False, shadow=True)
+        compared = 0
+        for t, entry in enumerate(sched.round_log):
+            if entry["mig_cost"] is None:
+                continue
+            compared += 1
+            assert entry["mig_cost"] == pytest.approx(
+                entry["shadow"]["mig_cost"], abs=1e-9
+            ), f"round {t}"
+        assert compared >= MIN_ROUNDS
+
+
+class TestShardSplitProperty:
+    """Hypothesis: sharding the fan-out batch along ANY split of the pair
+    axis preserves the physical relabelling bit-for-bit."""
+
+    @given(
+        seed=st.integers(0, 2**32 - 1),
+        drop=st.integers(0, 3),
+        shards=st.sampled_from(SHARD_COUNTS + (3, 5)),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_any_split_preserves_plan(self, seed, drop, shards):
+        profile = ThroughputProfile()
+        cluster = ClusterSpec(4, 4)
+        jobs = synthetic_active_jobs(12, seed=seed, profile=profile)
+        jobs = [j for j in jobs if j.num_gpus <= 4 or j.num_gpus % 4 == 0]
+        prev, _, _ = place_without_packing(cluster, jobs)
+        new, _, _ = place_without_packing(cluster, jobs[drop:] or jobs)
+        g = {j.job_id: j.num_gpus for j in jobs}
+
+        base = FusedMigrationPlanner(shards=1).plan(prev, new, g, tie_break=True)
+        split = FusedMigrationPlanner(shards=shards).plan(prev, new, g, tie_break=True)
+        host = plan_migration(
+            prev, new, g, algorithm="node", backend="scipy", tie_break=True
+        )
+        np.testing.assert_array_equal(
+            base.physical_plan.slots, split.physical_plan.slots
+        )
+        np.testing.assert_array_equal(
+            base.physical_plan.slots, host.physical_plan.slots
+        )
+        assert base.matching_cost == pytest.approx(host.matching_cost, abs=1e-9)

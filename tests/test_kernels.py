@@ -121,6 +121,95 @@ class TestLapBidKernelBatched:
         np.testing.assert_allclose(sv, rsv, rtol=1e-6)
 
 
+class TestLapBidFusedKernel:
+    """In-kernel benefit assembly (``-cost`` + positional tie-break ramp)
+    vs the ``ref.lap_bid_fused_top2`` oracle, plus the exactness contract:
+    integer costs + power-of-two scales give BIT-identical values to the
+    host f64-assemble-then-cast path."""
+
+    @staticmethod
+    def _tb_scale(n, m):
+        bound = 2.0 * min(n, m) * float(n) * float(n) * float(m)
+        return 2.0 ** np.floor(np.log2(1.0 / bound))
+
+    @pytest.mark.parametrize("n,m", [(4, 4), (8, 8), (7, 13), (64, 64), (130, 300)])
+    def test_matches_ref(self, n, m):
+        from repro.kernels.lap_bid import lap_bid_fused_pallas
+
+        rng = np.random.default_rng(n * 991 + m)
+        cost = jnp.asarray(rng.integers(0, 64, size=(n, m)), jnp.float32)
+        p = jnp.asarray(rng.normal(size=(m,)), jnp.float32)
+        tb = self._tb_scale(n, m)
+        bv, bj, sv = lap_bid_fused_pallas(cost, p, tb, interpret=True)
+        rv, rj, rsv = ref.lap_bid_fused_top2(cost, p, tb)
+        np.testing.assert_array_equal(bv, rv)
+        np.testing.assert_array_equal(bj, rj)
+        np.testing.assert_array_equal(sv, rsv)
+
+    def test_zero_scale_matches_plain_bid(self):
+        from repro.kernels.lap_bid import lap_bid_fused_pallas
+
+        rng = np.random.default_rng(3)
+        cost = jnp.asarray(rng.normal(size=(9, 17)), jnp.float32)
+        p = jnp.asarray(rng.normal(size=(17,)), jnp.float32)
+        fv, fj, fs = lap_bid_fused_pallas(cost, p, 0.0, interpret=True)
+        bv, bj, sv = lap_bid_pallas(-cost, p, interpret=True)
+        np.testing.assert_array_equal(fv, bv)
+        np.testing.assert_array_equal(fj, bj)
+        np.testing.assert_array_equal(fs, sv)
+
+    def test_bit_identical_to_host_assembly(self):
+        """Integer cost + power-of-two ramp: the in-kernel f32 assembly is
+        bit-equal to assembling the perturbed benefit in f64 on the host
+        and casting — the property the fused planner's bit-parity with the
+        host engine rests on (holds while n^2 * m < 2^24)."""
+        from repro.kernels.lap_bid import lap_bid_fused_pallas
+
+        n, m = 8, 8
+        rng = np.random.default_rng(17)
+        cost64 = rng.integers(0, 1 << 10, size=(n, m)).astype(np.float64)
+        tb = self._tb_scale(n, m)
+        gi = (np.arange(n, dtype=np.float64) + 1.0)[:, None]
+        gj = (np.arange(m, dtype=np.float64) + 1.0)[None, :]
+        host = (-cost64 + tb * gi * gi * gj).astype(np.float32)  # f64 then cast
+        p = jnp.zeros((m,), jnp.float32)
+        fv, fj, fs = lap_bid_fused_pallas(jnp.asarray(cost64, jnp.float32), p, tb, interpret=True)
+        hv, hj, hs = ref.lap_bid_top2(jnp.asarray(host))
+        np.testing.assert_array_equal(fv, hv)
+        np.testing.assert_array_equal(fj, hj)
+        np.testing.assert_array_equal(fs, hs)
+
+    @pytest.mark.parametrize("b,n,m", [(1, 4, 4), (16, 8, 8), (3, 130, 300)])
+    def test_batched_matches_unbatched(self, b, n, m):
+        from repro.kernels.lap_bid import (
+            lap_bid_fused_pallas,
+            lap_bid_fused_pallas_batched,
+        )
+
+        rng = np.random.default_rng(b * 7919 + n * 31 + m)
+        cost = jnp.asarray(rng.integers(0, 64, size=(b, n, m)), jnp.float32)
+        p = jnp.asarray(rng.normal(size=(b, m)), jnp.float32)
+        tb = np.full((b,), self._tb_scale(n, m), np.float32)
+        tb[0] = 0.0  # per-instance scales: instance 0 un-perturbed
+        bv, bj, sv = lap_bid_fused_pallas_batched(cost, p, jnp.asarray(tb), interpret=True)
+        for i in range(b):
+            v1, j1, s1 = lap_bid_fused_pallas(cost[i], p[i], float(tb[i]), interpret=True)
+            np.testing.assert_array_equal(bv[i], v1)
+            np.testing.assert_array_equal(bj[i], j1)
+            np.testing.assert_array_equal(sv[i], s1)
+
+    def test_ops_dispatch(self):
+        from repro.kernels.ops import lap_bid_fused
+
+        rng = np.random.default_rng(23)
+        cost = jnp.asarray(rng.integers(0, 64, size=(2, 8, 8)), jnp.float32)
+        p = jnp.zeros((2, 8), jnp.float32)
+        tb = self._tb_scale(8, 8)
+        bv, bj, sv = lap_bid_fused(cost, p, tb)
+        rv, rj, rsv = ref.lap_bid_fused_top2(cost[0], p[0], tb)
+        np.testing.assert_array_equal(bj[0], rj)
+
+
 class TestMigrationCostKernel:
     @pytest.mark.parametrize("u,v", [(4, 4), (8, 8), (130, 70), (256, 256)])
     def test_matches_ref(self, u, v):

@@ -161,3 +161,73 @@ class TestLoopCorrectionFormula:
         truth = glue_out + mb * (mb_glue + trips * body)
         corrected = base + (mb - 1) * (mb_d - layer_d) + (mb * trips - 1) * layer_d
         assert corrected == pytest.approx(truth, rel=1e-9)
+
+
+class TestTypeAffinityPlacement:
+    """Hetero type-blindness bugfix: the placement key is speed-aware on
+    heterogeneous clusters (gangs take a type-PURE node set, fastest pure
+    type first; sub-node ties break toward the fastest type explicitly)
+    and degenerates bit-identically to seed best-fit on homogeneous ones.
+    """
+
+    @staticmethod
+    def _job(jid, g):
+        from repro.core.jobs import JobSpec, JobState
+
+        return JobState(JobSpec(jid, "resnet50", g, 1000.0, 0.0))
+
+    @staticmethod
+    def _hetero(types, gpn=4):
+        return ClusterSpec(len(types), gpn, node_gpu_types=tuple(types))
+
+    def test_gang_prefers_pure_fast_nodes(self):
+        # v100 node 0 free, a100 nodes 2+3 free: the 8-GPU gang must take
+        # the pure-a100 pair, not the index-ordered mixed (0, 2) set
+        cluster = self._hetero(["v100", "a100", "a100", "a100"])
+        blocker = self._job(1, 4)   # fills node 1 (a100: fastest, best fit ties -> idx 1)
+        gang = self._job(2, 8)
+        plan, placed, _ = place_without_packing(cluster, [blocker, gang])
+        gmap = plan.job_gpu_map()
+        gang_nodes = {cluster.node_of(g) for g in gmap[2]}
+        assert gang_nodes == {2, 3}, gang_nodes
+
+    def test_gang_takes_pure_slow_set_over_mixed(self):
+        # one empty a100 + two empty v100s: a mixed set would throttle the
+        # a100 to v100 speed AND burn it — the pure v100 pair is chosen
+        cluster = self._hetero(["a100", "v100", "v100"])
+        gang = self._job(1, 8)
+        plan, placed, _ = place_without_packing(cluster, [gang])
+        gang_nodes = {cluster.node_of(g) for g in plan.job_gpu_map()[1]}
+        assert gang_nodes == {1, 2}, gang_nodes
+
+    def test_gang_falls_back_to_mixed_when_no_pure_set_exists(self):
+        cluster = self._hetero(["v100", "a100"])
+        gang = self._job(1, 8)
+        plan, placed, pending = place_without_packing(cluster, [gang])
+        assert placed and not pending
+        assert {cluster.node_of(g) for g in plan.job_gpu_map()[1]} == {0, 1}
+
+    def test_subnode_tie_breaks_toward_fast_type(self):
+        # equal holes on a v100 (idx 0) and an a100 (idx 1): the 1-GPU job
+        # must take the a100 even though index order says otherwise
+        cluster = self._hetero(["v100", "a100"])
+        job = self._job(1, 1)
+        plan, _, _ = place_without_packing(cluster, [job])
+        assert cluster.node_of(min(plan.job_gpu_map()[1])) == 1
+
+    def test_affinity_off_restores_seed_order(self):
+        cluster = self._hetero(["v100", "a100"])
+        job = self._job(1, 1)
+        plan, _, _ = place_without_packing(cluster, [job], type_affinity=False)
+        assert cluster.node_of(min(plan.job_gpu_map()[1])) == 0
+
+    @given(st.integers(0, 2**32 - 1), st.integers(1, 6))
+    @settings(max_examples=20, deadline=None)
+    def test_homogeneous_is_bit_identical_to_seed(self, seed, nodes):
+        profile = ThroughputProfile()
+        cluster = ClusterSpec(nodes, 4)
+        jobs = synthetic_active_jobs(20, seed=seed, profile=profile)
+        jobs = [j for j in jobs if j.num_gpus <= 4 or j.num_gpus % 4 == 0]
+        p_on, _, _ = place_without_packing(cluster, jobs, type_affinity=True)
+        p_off, _, _ = place_without_packing(cluster, jobs, type_affinity=False)
+        np.testing.assert_array_equal(p_on.slots, p_off.slots)

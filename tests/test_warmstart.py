@@ -722,8 +722,58 @@ class TestDepartedIdentityLru:
         self._solve(ctx, costs, np.array([1, 2, 3, 4]))
         # drop all four instances -> 4*3 = 12 departed cols, capacity 4
         self._solve(ctx, costs[:1] * 0 + 1.0, np.array([99]))
-        lru = ctx._departed[("lru", "auction")]
+        lru = ctx._departed[("lru", "auction", False)]
         assert len(lru) <= 4
+
+    def test_shrink_then_return_drops_stale_columns(self):
+        """ISSUE-6 satellite: an identity that departs and RETURNS with a
+        changed column set gets its surviving columns restored by IDENTITY
+        and its no-longer-present columns dropped — stale parked prices
+        must not linger past the return (they could otherwise seed a
+        later, unrelated incarnation of the column id)."""
+        ctx = MatchContext()
+        rng = np.random.default_rng(7)
+        costs = rng.integers(1, 50, (3, 8, 8)).astype(float)
+        ids = np.array([10, 11, 12])
+        rows = np.arange(8, dtype=np.int64)
+        kw = dict(backend="auction", context=ctx, context_key="lru")
+        solve_lap_batched(costs, instance_ids=ids, row_ids=rows,
+                          col_ids=rows, **kw)
+        # instance 12 departs -> its nonzero prices park in the LRU
+        solve_lap_batched(costs[:2], instance_ids=ids[:2], row_ids=rows,
+                          col_ids=rows, **kw)
+        lru = ctx._departed[("lru", "auction", False)]
+        parked12 = sorted(c for (i, c) in lru if i == 12)
+        assert len(parked12) >= 3, "precondition: several prices parked"
+        # 12 returns with a SHRUNK column set: two parked columns gone,
+        # two brand-new column ids in their place
+        gone = parked12[-2:]
+        cols12 = np.array(
+            [c for c in range(8) if c not in gone][:6] + [90, 91],
+            np.int64,
+        )
+        cids3 = np.broadcast_to(rows, (3, 8)).copy()
+        cids3[2] = cols12
+        costs3 = costs.copy()
+        costs3[2] = rng.integers(1, 50, (8, 8)).astype(float)
+        dropped_before = ctx.stats["lru_dropped_cols"]
+        r3 = solve_lap_batched(costs3, instance_ids=ids, row_ids=rows,
+                               col_ids=cids3, **kw)
+        # every parked (12, *) entry was consumed: survivors restored,
+        # the departed-forever columns DROPPED (pre-fix they lingered)
+        assert not any(i == 12 for (i, _) in lru)
+        assert ctx.stats["lru_dropped_cols"] - dropped_before >= len(gone)
+        assert ctx.stats["lru_restored_cols"] > 0
+        np.testing.assert_allclose(r3.total_cost, _scipy_totals(costs3))
+        # a LATER round that re-introduces the dropped column ids must
+        # come up cold: no stale price resurfaces
+        restored_after_r3 = ctx.stats["lru_restored_cols"]
+        cids4 = np.broadcast_to(rows, (3, 8)).copy()
+        costs4 = costs3.copy()
+        costs4[2] = rng.integers(1, 50, (8, 8)).astype(float)
+        solve_lap_batched(costs4, instance_ids=ids, row_ids=rows,
+                          col_ids=cids4, **kw)
+        assert ctx.stats["lru_restored_cols"] == restored_after_r3
 
     def test_reset_clears_parked_prices(self):
         ctx = MatchContext()
@@ -820,3 +870,145 @@ class TestTieBreakEngine:
         np.testing.assert_array_equal(r2.col_of, r1.col_of)
         ref = solve_lap_batched(costs, backend="scipy", tie_break=True)
         np.testing.assert_array_equal(r1.col_of, ref.col_of)
+
+
+class TestTieBreakIdentityKeyed:
+    """ISSUE-6 satellite: the tie-break perturbation is keyed by (row_id,
+    col_id) identity RANKS, not batch positions — so with tie_break=True a
+    permuted-but-unchanged batch still fingerprint-memo-hits and the
+    remapped plan is bit-identical (pre-fix, the positional ramp moved
+    under permutation, every fingerprint missed, and equally-optimal
+    instances could flip assignments)."""
+
+    def _tied_costs(self):
+        rng = np.random.default_rng(17)
+        costs = rng.integers(0, 6, (4, 6, 6)).astype(float)
+        costs[:, :, 4] = costs[:, :, 1]  # interchangeable columns
+        costs[:, 3, :] = costs[:, 0, :]  # interchangeable rows
+        inst = np.array([20, 21, 22, 23])
+        rids = np.array([[5, 3, 9, 1, 7, 0]] * 4) + 10 * np.arange(4)[:, None]
+        cids = np.array([[2, 8, 4, 6, 11, 13]] * 4) + 10 * np.arange(4)[:, None]
+        return costs, inst, rids, cids
+
+    def _pairs(self, res, rids, cids):
+        out = []
+        for b in range(res.col_of.shape[0]):
+            rows, cols = res.pairs(b)
+            out.append(sorted(zip(rids[b, rows], cids[b, cols])))
+        return out
+
+    def test_permuted_batch_memo_hits_and_plan_is_identical(self):
+        costs, inst, rids, cids = self._tied_costs()
+        ctx = MatchContext()
+        kw = dict(backend="auction", context=ctx, context_key="tbid",
+                  tie_break=True)
+        r1 = solve_lap_batched(costs, instance_ids=inst, row_ids=rids,
+                               col_ids=cids, **kw)
+        # permute the batch AND the rows/columns inside each instance
+        rng = np.random.default_rng(3)
+        bp = rng.permutation(4)
+        rp = rng.permutation(6)
+        cp = rng.permutation(6)
+        costs2 = costs[bp][:, rp][:, :, cp]
+        r2 = solve_lap_batched(
+            costs2, instance_ids=inst[bp], row_ids=rids[bp][:, rp],
+            col_ids=cids[bp][:, cp], **kw,
+        )
+        # identity-keyed perturbation => bit-identical fingerprints => memo
+        assert r2.bid_iters.sum() == 0, "permuted batch missed the memo"
+        assert r2.warm.all()
+        # and the remapped plan is the SAME set of (row_id, col_id) pairs
+        p1 = self._pairs(r1, rids, cids)
+        p2 = self._pairs(r2, rids[bp][:, rp], cids[bp][:, cp])
+        for b_new, b_old in enumerate(bp):
+            assert p2[b_new] == p1[b_old]
+
+    def test_canonical_plan_is_permutation_invariant_across_backends(self):
+        """The canonical optimum itself must not depend on the ORDER the
+        instance arrives in: solving the permuted instance fresh (no
+        context) yields the same identity pairs, on every backend."""
+        costs, inst, rids, cids = self._tied_costs()
+        rng = np.random.default_rng(5)
+        rp = rng.permutation(6)
+        cp = rng.permutation(6)
+        for be in ("scipy", "numpy", "auction"):
+            a = solve_lap_batched(costs, backend=be, tie_break=True,
+                                  row_ids=rids, col_ids=cids)
+            bres = solve_lap_batched(
+                costs[:, rp][:, :, cp], backend=be, tie_break=True,
+                row_ids=rids[:, rp], col_ids=cids[:, cp],
+            )
+            assert self._pairs(a, rids, cids) == self._pairs(
+                bres, rids[:, rp], cids[:, cp]
+            ), be
+
+    def test_positional_ramp_preserved_without_identities(self):
+        """No identities supplied -> ranks degenerate to positions: the
+        perturbed benefit is bit-identical to the historical ramp, so seed
+        tie-break assignments are unchanged."""
+        from repro.core.matching.engine import _tie_break_perturb
+
+        rng = np.random.default_rng(23)
+        ben = rng.integers(0, 9, (3, 5, 7)).astype(float)
+        legacy_w = (np.arange(1, 6, dtype=np.float64) ** 2)[:, None] * np.arange(
+            1, 8, dtype=np.float64
+        )[None, :]
+        pert, scale = _tie_break_perturb(ben)
+        assert scale is not None
+        np.testing.assert_array_equal(pert, ben + scale * legacy_w)
+        # and explicit default identities (arange) give the same ramp
+        rids = np.broadcast_to(np.arange(5, dtype=np.int64), (3, 5))
+        cids = np.broadcast_to(np.arange(7, dtype=np.int64), (3, 7))
+        pert2, scale2 = _tie_break_perturb(ben, np.asarray(rids), np.asarray(cids))
+        assert scale2 == scale
+        np.testing.assert_array_equal(pert2, pert)
+
+
+class TestDeviceProloguePath:
+    """ISSUE-6 tentpole: the context lookup (instance/row/col identity
+    matching + fingerprint compare) runs as one fused device program with
+    a single readout.  Pins host/device agreement and the host fallback
+    for ids outside the int32 encoding bands."""
+
+    def _churn_replay(self, ids_offset=0):
+        rng = np.random.default_rng(31)
+        ctx = MatchContext()
+        plans = []
+        ids = np.array([3, 1, 4, 5]) + ids_offset
+        rows = np.arange(7, dtype=np.int64)
+        costs = rng.integers(0, 30, (4, 7, 7)).astype(float)
+        for _ in range(4):
+            res = solve_lap_batched(
+                costs, backend="auction", context=ctx, context_key="dev",
+                instance_ids=ids, row_ids=rows, col_ids=rows,
+            )
+            plans.append(res.col_of.copy())
+            costs, _ = _mutate(rng, costs, 1)
+        return ctx, plans
+
+    def test_device_and_host_prologue_produce_identical_plans(self):
+        """Ids inside the i32 band take the device prologue; ids beyond
+        2^31 force the host-numpy fallback.  Same costs, same plans."""
+        ctx_dev, plans_dev = self._churn_replay(0)
+        ctx_host, plans_host = self._churn_replay(1 << 32)
+        for a, b in zip(plans_dev, plans_host):
+            np.testing.assert_array_equal(a, b)
+        # both replays counted their readouts
+        assert ctx_dev.stats["host_syncs"] > 0
+        assert ctx_host.stats["host_syncs"] > 0
+
+    def test_steady_state_rounds_are_single_readout(self):
+        """An unchanged round through the fused prologue costs exactly ONE
+        device->host sync (the prologue readout): the full-memo fast path
+        returns without touching the solver."""
+        rng = np.random.default_rng(8)
+        ctx = MatchContext()
+        costs = rng.integers(0, 20, (4, 6, 6)).astype(float)
+        ids = np.arange(4) + 100
+        kw = dict(backend="auction", context=ctx, context_key="steady",
+                  instance_ids=ids)
+        solve_lap_batched(costs, **kw)
+        before = ctx.stats["host_syncs"]
+        res = solve_lap_batched(costs, **kw)
+        assert res.bid_iters.sum() == 0 and res.warm.all()
+        assert ctx.stats["host_syncs"] - before == 1
