@@ -46,6 +46,8 @@ DEFAULT_SCENARIOS = (
     "tiresias-churn",
     "philly-sample",
     "hetero-mixed",
+    "node-flaky",
+    "philly-failures",
 )
 
 #: fields that must be identical across two runs of the same seed (wall
@@ -67,6 +69,15 @@ TELEMETRY_KEYS = (
     "warm_hit_rounds",
     "lru_restored_cols",
 )
+#: per-arm fault/degradation counters (all zero on fault-free scenarios)
+FAULT_KEYS = (
+    "fault_events_applied",
+    "preemptions",
+    "retries_total",
+    "lost_iters_total",
+    "failed_jobs",
+    "fused_host_fallbacks",
+)
 
 
 def run_arm(
@@ -82,14 +93,19 @@ def run_arm(
     profile = profile or ThroughputProfile()
     sc = workloads.scenario(scenario_name)
     cluster = sc.make_cluster(num_gpus)
-    trace = workloads.to_jobspecs(
-        sc.make_trace(seed=seed, num_jobs=num_jobs, profile=profile), profile
-    )
+    rows = sc.make_trace(seed=seed, num_jobs=num_jobs, profile=profile)
+    trace = workloads.to_jobspecs(rows, profile)
+    # failure horizon: the arrival window plus generous drain slack, so
+    # outage processes cover the whole (contended) run
+    horizon_s = max((r.arrival_s for r in rows), default=0.0) + 12 * 3600.0
+    failures = sc.make_failures(seed, cluster, horizon_s, trace=rows)
     sched = build_scheduler(policy, cluster, profile)
     sched.lap_backend = backend
     sched.type_affinity = type_affinity
     t0 = time.perf_counter()
-    res = Simulator(cluster, trace, sched, profile, SimConfig()).run()
+    res = Simulator(
+        cluster, trace, sched, profile, SimConfig(), failures=failures
+    ).run()
     wall = time.perf_counter() - t0
 
     jcts = res.jcts
@@ -101,6 +117,17 @@ def run_arm(
     telemetry["lru_restored_cols"] = int(
         sched.match_context.stats.get("lru_restored_cols", 0)
     )
+    faults = {
+        "fault_events_applied": int(res.fault_events_applied),
+        "preemptions": int(res.preemptions),
+        "retries_total": int(res.retries_total),
+        "lost_iters_total": float(res.lost_iters_total),
+        "failed_jobs": sorted(res.failed_jobs),
+        "fused_host_fallbacks": int(res.fused_host_fallbacks),
+        "degrade_counts": {
+            k: int(v) for k, v in sorted(res.degrade_counts.items())
+        },
+    }
     return {
         "policy": policy,
         "scenario": scenario_name,
@@ -119,6 +146,7 @@ def run_arm(
             "rounds": int(res.num_rounds),
         },
         "match_telemetry": telemetry,
+        "faults": faults,
         "wall_s": wall,
     }
 
@@ -160,6 +188,9 @@ def validate_schema(doc: Dict) -> List[str]:
         for k in TELEMETRY_KEYS:
             if k not in a.get("match_telemetry", {}):
                 problems.append(f"{tag}: telemetry key {k} missing")
+        for k in FAULT_KEYS:
+            if k not in a.get("faults", {}):
+                problems.append(f"{tag}: fault-telemetry key {k} missing")
         if a.get("metrics", {}).get("rounds", 0) <= 0:
             problems.append(f"{tag}: simulation ran 0 rounds")
     return problems
@@ -172,6 +203,7 @@ def _deterministic_view(arms: List[Dict]) -> List[Dict]:
             "scenario": a["scenario"],
             "metrics": {k: a["metrics"][k] for k in DETERMINISTIC_METRICS},
             "telemetry": dict(a["match_telemetry"]),
+            "faults": {k: a["faults"][k] for k in FAULT_KEYS},
         }
         for a in arms
     ]
@@ -263,6 +295,45 @@ def smoke(args) -> int:
     return 1 if failures else 0
 
 
+def chaos_smoke(args) -> int:
+    """CI chaos gate: one failure scenario end-to-end, gated on safety
+    invariants and seeded determinism — NEVER on timing."""
+    kw = dict(
+        policies=("tesserae-t", "tiresias"),
+        scenarios=("node-flaky", "philly-failures"),
+        num_gpus=16,
+        num_jobs=args.jobs or 24,
+        seed=args.seed,
+        backend=args.backend,
+    )
+    doc1 = run_sweep(**kw)
+    doc2 = run_sweep(**kw, verbose=False)
+    failures = validate_schema(doc1)
+    if _deterministic_view(doc1["arms"]) != _deterministic_view(doc2["arms"]):
+        failures.append("two seeded chaos runs disagree: faults are not deterministic")
+    for a in doc1["arms"]:
+        tag = f"{a['policy']}/{a['scenario']}"
+        if a["faults"]["fault_events_applied"] == 0:
+            failures.append(f"{tag}: failure scenario applied zero fault events")
+        # safety: nothing silently lost — the simulator accounts every job
+        # as finished or terminally failed (rounds bounded => no livelock)
+        done = a["num_jobs"]
+        if a["metrics"]["rounds"] <= 0 or not math.isfinite(
+            a["metrics"]["makespan_s"]
+        ):
+            failures.append(f"{tag}: chaos run did not complete ({done} jobs)")
+    flaky = [a for a in doc1["arms"] if a["scenario"] == "node-flaky"]
+    if flaky and all(a["faults"]["preemptions"] == 0 for a in flaky):
+        failures.append("node-flaky: no arm recorded a node-down preemption")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(doc1, f, indent=1, sort_keys=True)
+    for p in failures:
+        print("CHAOS FAIL:", p, file=sys.stderr)
+    print("chaos-smoke:", "FAIL" if failures else "PASS")
+    return 1 if failures else 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--policies", default=",".join(DEFAULT_POLICIES))
@@ -273,9 +344,14 @@ def main(argv=None) -> int:
     ap.add_argument("--backend", default="auto")
     ap.add_argument("--json", default=None, help="write the result document here")
     ap.add_argument("--smoke", action="store_true", help="CI smoke lane")
+    ap.add_argument(
+        "--chaos", action="store_true", help="CI chaos-smoke lane (failure scenarios)"
+    )
     args = ap.parse_args(argv)
     if args.smoke:
         return smoke(args)
+    if args.chaos:
+        return chaos_smoke(args)
     doc = run_sweep(
         policies=tuple(args.policies.split(",")),
         scenarios=tuple(args.scenarios.split(",")),

@@ -102,6 +102,43 @@ class ClusterSpec:
         return -(-self.num_nodes // self.nodes_per_rack)
 
 
+class ClusterHealth:
+    """Mutable per-node health state (the fault-injection layer's view of
+    the cluster).
+
+    ``up[k]`` — node k accepts placements; a down node is ZERO capacity
+    for the scheduler (placement skips it, migration relabelling is
+    penalised off it).  ``speed_factor[k]`` — the node's GPUs run at this
+    fraction of nominal speed (gpu-degrade events; truth-side only, the
+    scheduler's throughput beliefs are unchanged).  A freshly constructed
+    health object is all-up / full-speed — every consumer treats that
+    state bit-identically to "no health tracking at all" (the seed path).
+    """
+
+    def __init__(self, num_nodes: int):
+        self.up = np.ones(num_nodes, dtype=bool)
+        self.speed_factor = np.ones(num_nodes, dtype=np.float64)
+
+    @property
+    def all_up(self) -> bool:
+        return bool(self.up.all())
+
+    @property
+    def degraded(self) -> bool:
+        """True iff any node runs below nominal speed."""
+        return bool((self.speed_factor != 1.0).any())
+
+    def down_nodes(self) -> np.ndarray:
+        """Indices of nodes currently down (sorted ascending)."""
+        return np.nonzero(~self.up)[0]
+
+    def copy(self) -> "ClusterHealth":
+        out = ClusterHealth(self.up.shape[0])
+        out.up = self.up.copy()
+        out.speed_factor = self.speed_factor.copy()
+        return out
+
+
 class PlacementPlan:
     """Dense job-on-GPU map with set-style helpers used by the matchers."""
 

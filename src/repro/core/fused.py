@@ -309,9 +309,16 @@ class FusedMigrationPlanner:
         self.max_iters = int(max_iters)
         self._cache = None  # device arrays: pi, pj, col_of, prices, node_prices
         self._cache_key = None  # (kc, kl, P, scale, tie_break)
+        #: why the most recent :meth:`plan` call fell back to the host
+        #: planner (``"fused-budget"`` / ``"fused-nonconverged"``), or
+        #: ``None`` when it was served fused.  The scheduler folds this
+        #: into the round's ``DegradeReason``.
+        self.last_fallback_reason: Optional[str] = None
         self.stats: Dict[str, int] = {
             "fused_rounds": 0,
             "fused_host_fallbacks": 0,
+            "fused_budget_fallbacks": 0,
+            "fused_nonconverged_fallbacks": 0,
             "fused_dirty_pairs": 0,
             "fused_pair_instances": 0,
             "fused_bid_iters": 0,
@@ -322,14 +329,35 @@ class FusedMigrationPlanner:
         self._cache = None
         self._cache_key = None
 
+    def invalidate_nodes(self, nodes) -> None:
+        """TARGETED invalidation: poison only the cached occupancy rows of
+        the given physical/logical nodes (node-down / node-up events), so
+        next round's in-program diff marks exactly the pairs touching them
+        dirty while every healthy pair stays clean (zero bid rounds).  The
+        poison value ``-2`` can never equal a real slot id (ids are >= -1),
+        so the dirty bit is guaranteed to trip even if the node's occupancy
+        is coincidentally unchanged."""
+        if self._cache is None:
+            return
+        idx = np.asarray(sorted(int(n) for n in nodes), dtype=np.int32)
+        if idx.size == 0:
+            return
+        pi, pj, col_of, prices, node_prices = self._cache
+        poison = jnp.full((idx.size,) + tuple(pi.shape[1:]), -2, pi.dtype)
+        pi = pi.at[idx].set(poison)
+        pj = pj.at[idx].set(poison)
+        self._cache = (pi, pj, col_of, prices, node_prices)
+
     def plan(
         self,
         prev: PlacementPlan,
         new_logical: PlacementPlan,
         num_gpus_of: Dict[int, int],
         tie_break: bool = False,
+        down_nodes: Optional[np.ndarray] = None,
     ) -> MigrationResult:
         t0 = time.perf_counter()
+        self.last_fallback_reason = None
         cluster = prev.cluster
         kc, kl = cluster.num_nodes, cluster.gpus_per_node
         pmax = prev.slots.shape[-1]
@@ -337,7 +365,8 @@ class FusedMigrationPlanner:
         tb_pair = _tb_scale(kl, kl) if tie_break else 0.0
         tb_node = _tb_scale(kc, kc) if tie_break else 0.0
 
-        pen = _relabel_penalties(cluster)
+        occupied_logical = (new_logical.slots != EMPTY).any(axis=(1, 2))
+        pen = _relabel_penalties(cluster, down_nodes, occupied_logical)
         pen_max = 0.0 if pen is None else float(pen.max())
 
         # f32 exactness budget: the largest scaled node-cost magnitude
@@ -349,8 +378,10 @@ class FusedMigrationPlanner:
         max_abs = (2.0 * pmax * kl + pen_max) * scale
         if max_abs / quantum >= _F32_MANTISSA:
             self.stats["fused_host_fallbacks"] += 1
+            self.stats["fused_budget_fallbacks"] += 1
+            self.last_fallback_reason = "fused-budget"
             self.invalidate()
-            return self._host(prev, new_logical, num_gpus_of, tie_break)
+            return self._host(prev, new_logical, num_gpus_of, tie_break, down_nodes)
 
         common = prev.job_ids() & new_logical.job_ids()
         pi = prev.restricted_to(common).slots.astype(np.int32)
@@ -408,8 +439,10 @@ class FusedMigrationPlanner:
 
         if not bool(converged):
             self.stats["fused_host_fallbacks"] += 1
+            self.stats["fused_nonconverged_fallbacks"] += 1
+            self.last_fallback_reason = "fused-nonconverged"
             self.invalidate()
-            return self._host(prev, new_logical, num_gpus_of, tie_break)
+            return self._host(prev, new_logical, num_gpus_of, tie_break, down_nodes)
 
         # cache stays device-resident for next round's diff / warm start
         self._cache = (out[8], out[9], out[5], out[6], out[7])
@@ -430,7 +463,9 @@ class FusedMigrationPlanner:
             "node-fused",
         )
 
-    def _host(self, prev, new_logical, num_gpus_of, tie_break) -> MigrationResult:
+    def _host(
+        self, prev, new_logical, num_gpus_of, tie_break, down_nodes=None
+    ) -> MigrationResult:
         res = plan_migration(
             prev,
             new_logical,
@@ -438,6 +473,7 @@ class FusedMigrationPlanner:
             algorithm="node",
             backend="auto",
             tie_break=tie_break,
+            down_nodes=down_nodes,
         )
         return MigrationResult(
             res.physical_plan,

@@ -52,6 +52,23 @@ class JobState:
     migrations: int = 0
     #: seconds of pending migration penalty still to pay off.
     migration_debt: float = 0.0
+    # -- fault-injection bookkeeping (all inert on the failure-free path) -- #
+    #: retries consumed (node crashes + job failures both count).
+    retries: int = 0
+    #: involuntary evictions suffered (node-down preemptions).
+    preemptions: int = 0
+    #: earliest time the job may be (re)placed — exponential backoff
+    #: pushes this into the future after a failure.
+    eligible_time: float = 0.0
+    #: progress as of the last checkpoint; a crash rolls ``iters_done``
+    #: back to this (the checkpoint-interval lost-work model).
+    ckpt_iters: float = 0.0
+    #: ``executed_time`` at the last checkpoint (drives the interval).
+    ckpt_executed: float = 0.0
+    #: cumulative iterations discarded by crash rollbacks.
+    lost_iters: float = 0.0
+    #: retry budget exhausted — terminally failed, never requeued.
+    failed: bool = False
 
     @property
     def job_id(self) -> int:

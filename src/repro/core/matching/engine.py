@@ -131,6 +131,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import json
 import time
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Tuple
@@ -360,6 +361,7 @@ class MatchContext:
             "lru_restored_cols": 0,  # cold columns re-seeded from the LRU
             "lru_dropped_cols": 0,   # parked prices dropped on shrink-return
             "host_syncs": 0,         # device->host readouts through this ctx
+            "instances_invalidated": 0,  # targeted invalidations (node faults)
         }
 
     def get(self, key: tuple) -> Optional[_CtxEntry]:
@@ -491,6 +493,175 @@ class MatchContext:
         self.stats["lru_restored_cols"] += restored
         self.stats["lru_dropped_cols"] += dropped
         return out
+
+    def invalidate_instances(self, instance_ids, families=None) -> int:
+        """TARGETED invalidation of specific instance identities (the
+        node-fault path): poison their cached benefit fingerprints and
+        zero their warm prices, in every family (or only the
+        ``context_key`` names listed in ``families``), and drop their
+        parked departed-identity prices.
+
+        The poison pattern is all-ones in both uint32 lanes — the f64 NaN
+        bit pattern, which no real (finite) benefit cell can ever carry —
+        so the next solve's exact fingerprint compare is GUARANTEED to
+        miss: the instance re-solves cold (full epsilon schedule, zero
+        prices, always valid) while every other instance's memo/warm
+        state survives untouched.  Returns the number of cached instances
+        invalidated.
+        """
+        ids = np.asarray(list(instance_ids), dtype=np.int64).reshape(-1)
+        if ids.size == 0:
+            return 0
+        count = 0
+        for key, entry in self._entries.items():
+            if families is not None and key[0] not in families:
+                continue
+            hit = np.nonzero(np.isin(entry.instance_ids, ids))[0]
+            if hit.size == 0:
+                continue
+            idx = jnp.asarray(hit.astype(np.int32))
+            entry.fp_bits = jnp.asarray(entry.fp_bits).at[idx].set(
+                jnp.uint32(0xFFFFFFFF)
+            )
+            if entry.prices is not None:
+                entry.prices = jnp.asarray(entry.prices).at[idx].set(0.0)
+            count += int(hit.size)
+        id_set = {int(i) for i in ids}
+        for fam, lru in self._departed.items():
+            if families is not None and fam[0] not in families:
+                continue
+            for k in [k for k in lru if k[0] in id_set]:
+                del lru[k]
+        self.stats["instances_invalidated"] += count
+        return count
+
+    # -- snapshot / restore (crash-resume) -------------------------------- #
+    STATE_VERSION = "tesserae-matchctx-v1"
+
+    def state_payload(self) -> Tuple[Dict, Dict[str, np.ndarray]]:
+        """The context's full state as ``(json-able meta, arrays)`` — the
+        building block :meth:`save` writes to disk and the simulator
+        embeds (key-prefixed) inside its own round-state snapshot."""
+        arrays: Dict[str, np.ndarray] = {}
+        meta: Dict = {
+            "version": self.STATE_VERSION,
+            "lru_capacity": self.departed_lru_capacity,
+            "stats": dict(self.stats),
+            "entries": [],
+            "lru": [],
+        }
+        for i, (key, e) in enumerate(self._entries.items()):
+            meta["entries"].append(
+                {
+                    "key": list(key),
+                    "transposed": bool(e.transposed),
+                    "rect": bool(e.rect),
+                    "real_shape": list(e.real_shape),
+                    "has_prices": e.prices is not None,
+                    "has_owner": e.owner is not None,
+                }
+            )
+            p = f"e{i}."
+            arrays[p + "instance_ids"] = e.instance_ids
+            arrays[p + "row_ids"] = e.row_ids
+            arrays[p + "col_ids"] = e.col_ids
+            arrays[p + "fp_bits"] = np.asarray(e.fp_bits)
+            if e.prices is not None:
+                arrays[p + "prices"] = np.asarray(e.prices, np.float32)
+            if e.owner is not None:
+                arrays[p + "owner"] = e.owner
+            arrays[p + "col_solve"] = e.col_solve
+            arrays[p + "final_col_of"] = e.final_col_of
+            arrays[p + "converged"] = e.converged
+            arrays[p + "used_fallback"] = e.used_fallback
+        for j, (fam, lru) in enumerate(self._departed.items()):
+            meta["lru"].append({"family": list(fam)})
+            keys = np.array(list(lru.keys()), np.int64).reshape(-1, 2)
+            vals = np.array(list(lru.values()), np.float32)
+            arrays[f"lru{j}.keys"] = keys
+            arrays[f"lru{j}.vals"] = vals
+        return meta, arrays
+
+    def save(self, path: str) -> None:
+        """Serialise the full warm-start state to a versioned ``.npz``.
+
+        Everything that affects future solves round-trips: per-family
+        entries (identities, exact fingerprints, prices, assignments),
+        the departed-identity LRUs (in recency order) and the stats
+        counters.  :meth:`load` restores a context whose subsequent
+        solves are bit-identical to one that never left memory — the
+        crash-resume differential test gates on exactly that.
+        """
+        meta, arrays = self.state_payload()
+        arrays["meta_json"] = np.array(json.dumps(meta))
+        # write through a file object so numpy never appends ".npz"
+        with open(path, "wb") as f:
+            np.savez(f, **arrays)
+
+    @classmethod
+    def from_payload(cls, meta: Dict, get: Callable[[str], np.ndarray]) -> "MatchContext":
+        """Rebuild a context from a :meth:`state_payload` meta dict and an
+        array accessor (``get(name) -> ndarray``).  Device arrays
+        (fingerprints, prices, the fused-prologue id buckets) are
+        re-materialised on the current default device."""
+        if meta.get("version") != cls.STATE_VERSION:
+            raise ValueError(
+                f"MatchContext state version {meta.get('version')!r} != "
+                f"{cls.STATE_VERSION!r}"
+            )
+        ctx = cls(departed_lru_capacity=int(meta["lru_capacity"]))
+        ctx.stats.update(meta["stats"])
+        for i, em in enumerate(meta["entries"]):
+            p = f"e{i}."
+            k = em["key"]
+            key = (k[0], k[1], bool(k[2]), k[3], bool(k[4]))
+            inst = get(p + "instance_ids")
+            rids = get(p + "row_ids")
+            cids = get(p + "col_ids")
+            ids_dev = None
+            if _ids_i32_safe(inst, rids, cids):
+                nb = _next_pow2(inst.shape[0])
+                nn = _next_pow2(rids.shape[1])
+                nm = _next_pow2(cids.shape[1])
+                ids_dev = (
+                    jnp.asarray(_bucket_vec_i32(inst, nb)),
+                    jnp.asarray(_bucket_mat_i32(rids, nb, nn)),
+                    jnp.asarray(_bucket_mat_i32(cids, nb, nm)),
+                )
+            ctx._entries[key] = _CtxEntry(
+                instance_ids=inst,
+                row_ids=rids,
+                col_ids=cids,
+                transposed=bool(em["transposed"]),
+                rect=bool(em["rect"]),
+                real_shape=tuple(em["real_shape"]),
+                fp_bits=jnp.asarray(get(p + "fp_bits")),
+                prices=(
+                    jnp.asarray(get(p + "prices")) if em["has_prices"] else None
+                ),
+                owner=get(p + "owner") if em["has_owner"] else None,
+                col_solve=get(p + "col_solve"),
+                final_col_of=get(p + "final_col_of"),
+                converged=get(p + "converged"),
+                used_fallback=get(p + "used_fallback"),
+                ids_dev=ids_dev,
+            )
+        for j, lm in enumerate(meta["lru"]):
+            fam = tuple(
+                bool(v) if isinstance(v, bool) else v for v in lm["family"]
+            )
+            lru: "OrderedDict[Tuple[int, int], float]" = OrderedDict()
+            for (iid, cid), v in zip(get(f"lru{j}.keys"), get(f"lru{j}.vals")):
+                lru[(int(iid), int(cid))] = float(v)
+            ctx._departed[fam] = lru
+        return ctx
+
+    @classmethod
+    def load(cls, path: str) -> "MatchContext":
+        """Rebuild a context from :meth:`save` output."""
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(str(z["meta_json"][()]))
+            return cls.from_payload(meta, lambda name: z[name])
 
     def reset(self) -> None:
         """Drop all cached state (prices, fingerprints, memoised results,
@@ -984,8 +1155,13 @@ def solve_lap_batched(
     """Solve a batch of (rectangular, masked) LAPs with one backend call.
 
     Args:
-      costs: (B, N, M) cost batch (numpy or jax array).  Non-finite entries
-        are forbidden edges.  Pass a single (N, M) instance to get B=1.
+      costs: (B, N, M) cost batch (numpy or jax array).  ``+inf`` under
+        minimisation (``-inf`` under maximisation) marks a forbidden edge.
+        NaN, and infinities of the OPPOSITE sign (an "infinitely
+        attractive" edge), are rejected with a ``ValueError`` naming the
+        offending instance — they would otherwise flow into the auction as
+        silently-forbidden edges and can surface as non-convergence.
+        Pass a single (N, M) instance to get B=1.
       maximize: maximise total cost instead of minimising.
       row_mask / col_mask: (B, N) / (B, M) bool, True = real.  Padded rows
         and columns never receive an assignment.
@@ -1025,6 +1201,24 @@ def solve_lap_batched(
     if costs.ndim != 3:
         raise ValueError(f"costs must be (B, N, M), got shape {costs.shape}")
     b, n, m = costs.shape
+    # input validation: NaN never means anything, and an infinity of the
+    # attractive sign (-inf minimize / +inf maximize) is not the documented
+    # forbidden-edge encoding — both would be silently treated as forbidden
+    # by the benefit masking and can surface rounds later as an unexplained
+    # non-convergence.  Fail loudly, naming the instance.
+    invalid = np.isnan(costs) | (np.isinf(costs) & ((costs > 0) == bool(maximize)))
+    if invalid.any():
+        bb, rr, cc = np.nonzero(invalid)
+        ids = _as_instance_ids(instance_ids, b)
+        val = costs[bb[0], rr[0], cc[0]]
+        raise ValueError(
+            f"solve_lap_batched: invalid cost entry {val!r} at "
+            f"(row {rr[0]}, col {cc[0]}) of instance id {ids[bb[0]]} "
+            f"(batch index {bb[0]}, context_key={context_key!r}, "
+            f"maximize={maximize}); {int(invalid.sum())} invalid entr"
+            f"{'y' if invalid.sum() == 1 else 'ies'} total.  Forbidden "
+            f"edges must be {'-inf' if maximize else '+inf'}."
+        )
     size = max(n, m)
     if backend == "auto":
         backend = _pick_auto(size)

@@ -88,10 +88,14 @@ def pairwise_migration_cost(
 CROSS_RACK_COST = 0.5
 
 
-def _relabel_penalties(cluster) -> Optional[np.ndarray]:
+def _relabel_penalties(
+    cluster,
+    down_nodes: Optional[np.ndarray] = None,
+    occupied_logical: Optional[np.ndarray] = None,
+) -> Optional[np.ndarray]:
     """(kc, kc) additive node-relabel penalties for heterogeneous / racked
-    clusters: ``pen[k, l]`` is added to the cost of hosting logical node
-    ``l`` on physical node ``k``.
+    / partially-down clusters: ``pen[k, l]`` is added to the cost of
+    hosting logical node ``l`` on physical node ``k``.
 
     * GPU-type mismatch gets a penalty strictly larger than any achievable
       real matching cost (``2 * kl * kc`` bounds the total), making the
@@ -100,23 +104,44 @@ def _relabel_penalties(cluster) -> Optional[np.ndarray]:
       throughput belief behind the plan).  Always feasible — the identity
       relabelling is type-preserving by construction.
     * Crossing a rack boundary costs :data:`CROSS_RACK_COST`.
+    * A DOWN physical node is zero capacity: hosting any *occupied*
+      logical row on it costs twice the mismatch bound, strictly
+      dominating every real-cost + mismatch + rack combination, so the
+      optimum never lands jobs there (the identity relabelling is always
+      feasible and cheaper — health-aware placement left down nodes'
+      logical rows empty).  Empty logical rows relabel onto down nodes
+      freely, which keeps the assignment square and feasible.
 
-    Returns ``None`` for homogeneous single-rack clusters — the seed path,
-    where the node cost matrix is untouched (bit-for-bit).
+    Returns ``None`` for healthy homogeneous single-rack clusters — the
+    seed path, where the node cost matrix is untouched (bit-for-bit).
     """
     hetero = cluster.is_heterogeneous
     racked = cluster.has_topology
-    if not hetero and not racked:
+    downs = (
+        np.asarray([], dtype=np.int64)
+        if down_nodes is None
+        else np.asarray(sorted(int(n) for n in down_nodes), dtype=np.int64)
+    )
+    if not hetero and not racked and len(downs) == 0:
         return None
     kc = cluster.num_nodes
     pen = np.zeros((kc, kc), dtype=np.float64)
+    base = 2.0 * cluster.gpus_per_node * kc + 1.0
     if hetero:
         types = np.array(cluster.node_types())
-        mismatch = 2.0 * cluster.gpus_per_node * kc + 1.0
-        pen += mismatch * (types[:, None] != types[None, :])
+        pen += base * (types[:, None] != types[None, :])
     if racked:
         racks = np.array([cluster.rack_of(i) for i in range(kc)])
         pen += CROSS_RACK_COST * (racks[:, None] != racks[None, :])
+    if len(downs):
+        down_mask = np.zeros(kc, dtype=bool)
+        down_mask[downs] = True
+        occ = (
+            np.ones(kc, dtype=bool)
+            if occupied_logical is None
+            else np.asarray(occupied_logical, dtype=bool)
+        )
+        pen += (2.0 * base) * (down_mask[:, None] & occ[None, :])
     return pen
 
 
@@ -182,6 +207,7 @@ def plan_migration(
     backend: str = "auto",
     context: Optional[MatchContext] = None,
     tie_break: bool = False,
+    down_nodes: Optional[np.ndarray] = None,
 ) -> MigrationResult:
     """Compute the relabelling that minimises migrations, then apply it to
     the *full* new plan (jobs unique to one round are excluded from the cost
@@ -205,10 +231,13 @@ def plan_migration(
     locality); ``matching_cost`` then includes those penalties.
     ``tie_break`` threads the engine's canonical tie-break perturbation
     through every LAP so equally-optimal relabellings are
-    solver-independent.
+    solver-independent.  ``down_nodes`` marks failed physical nodes: the
+    relabelling is penalised off them (see :func:`_relabel_penalties`),
+    so no occupied logical row is ever renamed onto a dead node.
     """
     t0 = time.perf_counter()
     cluster = prev.cluster
+    occupied_logical = (new_logical.slots != EMPTY).any(axis=(1, 2))
     if algorithm == "none":
         phys = new_logical.copy()
         n_mig = count_migrations(prev, phys)
@@ -225,7 +254,7 @@ def plan_migration(
         flat_i = pi.slots.reshape(-1, MAX_PACK)
         flat_j = pj.slots.reshape(-1, MAX_PACK)
         cost = pairwise_migration_cost(flat_i, flat_j, weights)
-        pen = _relabel_penalties(cluster)
+        pen = _relabel_penalties(cluster, down_nodes, occupied_logical)
         if pen is not None:
             # expand node-level penalties to every (physical, logical) GPU
             # pair: each relabelled GPU's state crosses the boundary
@@ -291,7 +320,7 @@ def plan_migration(
         tie_break=tie_break,
     )
     node_cost = (res.total_cost / scale).reshape(kc, kc)
-    pen = _relabel_penalties(cluster)
+    pen = _relabel_penalties(cluster, down_nodes, occupied_logical)
     if pen is not None:
         node_cost = node_cost + pen
     # res.col_of[b, u] = v  ->  gpu_assign[.., v] = u

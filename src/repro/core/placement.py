@@ -46,17 +46,23 @@ def place_without_packing(
     cluster: ClusterSpec,
     sorted_jobs: Sequence[JobState],
     type_affinity: bool = True,
+    down_nodes: Optional[Iterable[int]] = None,
 ) -> Tuple[PlacementPlan, List[JobState], List[JobState]]:
     """Greedy consolidated placement of priority-sorted jobs.
 
     Returns ``(plan, placed_jobs, pending_jobs)``.  Mirrors Listing 1: we
     keep walking the priority list while any GPU remains free, so a small
     job can fill a hole a larger, higher-priority job could not use.
+    ``down_nodes`` are zero capacity: no hole on them is ever considered,
+    so a down node's logical rows stay empty in the returned plan.
     """
     plan = PlacementPlan(cluster)
     placed: List[JobState] = []
     pending: List[JobState] = []
     free_per_node = np.full(cluster.num_nodes, cluster.gpus_per_node, np.int64)
+    if down_nodes is not None:
+        for n in down_nodes:
+            free_per_node[int(n)] = 0
     gpn = cluster.gpus_per_node
     speeds = _node_speeds(cluster) if type_affinity else None
 

@@ -19,7 +19,9 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
-from repro.core.cluster import ClusterSpec, PlacementPlan
+import numpy as np
+
+from repro.core.cluster import ClusterHealth, ClusterSpec, PlacementPlan
 from repro.core.jobs import JobState
 from repro.core.matching import MatchContext
 from repro.core.migration import MigrationResult, plan_migration
@@ -27,6 +29,28 @@ from repro.core.packing import PackingResult, pack_jobs
 from repro.core.placement import apply_packing, place_without_packing
 from repro.core.policies.base import SchedulingPolicy
 from repro.core.profiler import ThroughputProfile
+
+
+class DegradeReason:
+    """Taxonomy of graceful-degradation steps a round can take (surfaced
+    per round through :attr:`RoundDecision.degrade_reason` and aggregated
+    into ``SimResult.degrade_rounds``).  The ladder, best to worst:
+
+    ``none`` -> fused served the round -> [``fused-budget`` |
+    ``fused-nonconverged``]: host planner served a fused round ->
+    ``deadline-host``: the decide() watchdog demoted fused to the host
+    planner before starting the migrate stage -> ``deadline-greedy``: the
+    watchdog skipped relabelling entirely and emitted the greedy-feasible
+    logical plan (``algorithm="none"``) — always valid, zero extra LAPs.
+    """
+
+    NONE = "none"
+    FUSED_BUDGET = "fused-budget"
+    FUSED_NONCONVERGED = "fused-nonconverged"
+    DEADLINE_HOST = "deadline-host"
+    DEADLINE_GREEDY = "deadline-greedy"
+
+    ALL = (NONE, FUSED_BUDGET, FUSED_NONCONVERGED, DEADLINE_HOST, DEADLINE_GREEDY)
 
 
 @dataclasses.dataclass
@@ -42,6 +66,8 @@ class RoundDecision:
     #: warm-hit telemetry the churn-replay CI gate and the simulator
     #: aggregate.
     match_stats: Dict[str, int] = dataclasses.field(default_factory=dict)
+    #: which degradation-ladder step (if any) produced this round's plan.
+    degrade_reason: str = DegradeReason.NONE
 
     @property
     def total_overhead_s(self) -> float:
@@ -86,6 +112,15 @@ class TesseraeScheduler:
         # devices.  Only meaningful with migration_algorithm == "node".
         fused_fanout: bool = False,
         fanout_shards: int = 1,
+        # graceful-degradation ladder: wall-clock budget for one decide()
+        # call.  When the elapsed time at the migrate stage exceeds half
+        # the deadline, a fused round is demoted to the host planner; past
+        # the full deadline the relabelling is skipped entirely and the
+        # greedy-feasible logical plan ships as-is.  None (default)
+        # disables the watchdog — the seed behaviour.
+        decide_deadline_s: Optional[float] = None,
+        # injectable clock for deterministic ladder tests.
+        clock: Callable[[], float] = time.perf_counter,
     ):
         self.cluster = cluster
         self.policy = policy
@@ -99,6 +134,8 @@ class TesseraeScheduler:
         self.type_affinity = type_affinity
         self.fused_fanout = fused_fanout
         self.fanout_shards = fanout_shards
+        self.decide_deadline_s = decide_deadline_s
+        self._clock = clock
         self._fused_planner = None  # lazily built FusedMigrationPlanner
         #: identity-keyed warm-start state threaded across rounds: the
         #: packing matching (keyed by job ids), the Algorithm-2 node-pair
@@ -116,17 +153,25 @@ class TesseraeScheduler:
         now: float,
         prev_plan: Optional[PlacementPlan] = None,
         num_gpus_of: Optional[Dict[int, int]] = None,
+        health: Optional[ClusterHealth] = None,
     ) -> RoundDecision:
         timings: Dict[str, float] = {}
         stats_before = dict(self.match_context.stats)
+        degrade = DegradeReason.NONE
+        # down nodes are ZERO capacity everywhere below; None (all up, or
+        # no health tracking) keeps every stage on the seed code path
+        down: Optional[np.ndarray] = None
+        if health is not None and not health.all_up:
+            down = health.down_nodes()
 
+        t_start = self._clock()
         t0 = time.perf_counter()
         ordered = self.policy.order(active_jobs, now, self.cluster)
         timings["schedule_s"] = time.perf_counter() - t0
 
         t0 = time.perf_counter()
         plan, placed, pending = place_without_packing(
-            self.cluster, ordered, type_affinity=self.type_affinity
+            self.cluster, ordered, type_affinity=self.type_affinity, down_nodes=down
         )
         timings["place_s"] = time.perf_counter() - t0
 
@@ -168,7 +213,22 @@ class TesseraeScheduler:
             gmap: Dict[int, int] = dict(num_gpus_of or {})
             for j in active_jobs:
                 gmap.setdefault(j.job_id, j.num_gpus)
-            if self.fused_fanout and self.migration_algorithm == "node":
+            # --- degradation-ladder watchdog (wall clock, injectable) ---- #
+            deadline = self.decide_deadline_s
+            elapsed = self._clock() - t_start if deadline is not None else 0.0
+            algorithm = self.migration_algorithm
+            use_fused = self.fused_fanout and algorithm == "node"
+            if deadline is not None and elapsed >= deadline:
+                # past the full budget: skip relabelling, ship the
+                # greedy-feasible logical plan (already avoids down nodes)
+                algorithm = "none"
+                use_fused = False
+                degrade = DegradeReason.DEADLINE_GREEDY
+            elif deadline is not None and elapsed >= 0.5 * deadline and use_fused:
+                # half the budget gone: demote fused to the host planner
+                use_fused = False
+                degrade = DegradeReason.DEADLINE_HOST
+            if use_fused:
                 if self._fused_planner is None:
                     from repro.core.fused import FusedMigrationPlanner
 
@@ -177,17 +237,20 @@ class TesseraeScheduler:
                     )
                 fused_before = dict(self._fused_planner.stats)
                 migration = self._fused_planner.plan(
-                    prev_plan, plan, gmap, tie_break=self.tie_break
+                    prev_plan, plan, gmap, tie_break=self.tie_break, down_nodes=down
                 )
+                if self._fused_planner.last_fallback_reason is not None:
+                    degrade = self._fused_planner.last_fallback_reason
             else:
                 migration = plan_migration(
                     prev_plan,
                     plan,
                     gmap,
-                    algorithm=self.migration_algorithm,
+                    algorithm=algorithm,
                     backend=self.lap_backend,
                     context=self.match_context,
                     tie_break=self.tie_break,
+                    down_nodes=down,
                 )
             plan = migration.physical_plan
         timings["migrate_s"] = time.perf_counter() - t0
@@ -206,8 +269,41 @@ class TesseraeScheduler:
                 if d:
                     match_stats[k] = match_stats.get(k, 0) + d
         return RoundDecision(
-            plan, placed, pending, packing, migration, timings, match_stats
+            plan,
+            placed,
+            pending,
+            packing,
+            migration,
+            timings,
+            match_stats,
+            degrade_reason=degrade,
         )
+
+    def invalidate_node(self, node: int) -> int:
+        """TARGETED warm-state invalidation for one physical node (called
+        by the simulator on node-down AND node-up events): every cached
+        matching identity involving the node is poisoned — the Algorithm-2
+        fan-out pairs touching it, the single-instance node match and flat
+        families, and the fused planner's device-resident occupancy rows —
+        while all other nodes' memo/warm state survives (the paper's
+        temporal locality is exactly why a full reset would be wasteful).
+        Returns the number of cached LAP instances invalidated.
+        """
+        kc = self.cluster.num_nodes
+        ids = np.arange(kc, dtype=np.int64)
+        # fan-out instance ids are i * 2^20 + j (migration.plan_migration)
+        pair_ids = np.concatenate([node * (1 << 20) + ids, ids * (1 << 20) + node])
+        count = self.match_context.invalidate_instances(
+            np.unique(pair_ids), families=("migration_pairs",)
+        )
+        # the node match and the flat relabelling are single-instance
+        # families (default instance id 0) — any node fault perturbs them
+        count += self.match_context.invalidate_instances(
+            [0], families=("migration_node", "migration_flat")
+        )
+        if self._fused_planner is not None:
+            self._fused_planner.invalidate_nodes([node])
+        return count
 
     def prewarm(
         self,

@@ -19,19 +19,51 @@ simulation; we inherit that methodology.  Semantics:
 Throughput truth vs. belief: the scheduler consults ``sched_profile``
 (possibly noisy / estimated, Figs. 16 & 18) while the simulator advances
 jobs with ``true_profile``.
+
+**Fault injection** (:mod:`repro.core.faults`): an optional event stream
+drives node-down / node-up / gpu-degrade / job-fail events, applied at
+round boundaries.  A node-down evicts every job touching the node WITHOUT
+a checkpoint save — progress rolls back to the last checkpoint (the
+checkpoint-interval lost-work model), a retry is consumed and the job
+re-enters the queue after an exponential backoff; a job that exhausts its
+retry budget fails terminally.  Voluntary preemptions and migrations DO
+checkpoint (the scheduler drains gracefully), so only genuine crashes
+lose work.  GPU degradations are truth-side only: the job's real rate
+drops to the slowest touched node's ``speed_factor`` while the
+scheduler's beliefs are unchanged (an undetected straggler).  With no
+failure events every fault code path is inert and the simulation is
+bit-identical to the failure-free seed.
+
+**Crash-resume**: ``run(stop_after_rounds=k)`` pauses the loop with all
+round state retained; :meth:`Simulator.save_state` /
+:meth:`Simulator.load_state` serialise it (one versioned ``.npz``,
+embedding the scheduler's :class:`MatchContext` warm state), and a
+resumed run finishes bit-identical to an uninterrupted one.  Policy
+objects with internal state (Gavel's LP refresh) are NOT captured — use
+stateless policies (Tesserae, Tiresias) when snapshotting.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
+from collections import Counter
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.cluster import ClusterSpec, PlacementPlan
+from repro.core.cluster import ClusterHealth, ClusterSpec, PlacementPlan
+from repro.core.faults import (
+    GPU_DEGRADE,
+    JOB_FAIL,
+    NODE_DOWN,
+    NODE_UP,
+    FailureEvent,
+)
 from repro.core.jobs import JobSpec, JobState, migration_overhead_s
+from repro.core.matching import MatchContext
 from repro.core.policies.base import SchedulingPolicy
 from repro.core.policies.gavel import GavelPolicy
 from repro.core.policies.themis import ThemisFtfPolicy
@@ -62,6 +94,18 @@ class SimConfig:
     #: pays the 2x serial decide work (overlap is reported in
     #: :attr:`SimResult.prewarm_overlap_s`).
     speculative_prewarm: bool = False
+    # -- fault-model knobs (all inert without failure events) ------------- #
+    #: retries a job may consume (node crashes + software failures both
+    #: count) before it fails terminally.
+    max_retries: int = 5
+    #: backoff before a failed job is eligible again:
+    #: ``backoff_base_s * backoff_factor ** (retries - 1)``.
+    backoff_base_s: float = 360.0
+    backoff_factor: float = 2.0
+    #: periodic checkpoint cadence (seconds of EXECUTED time); a crash
+    #: rolls progress back to the last checkpoint.  Voluntary migrations
+    #: and graceful preemptions always checkpoint first.
+    checkpoint_interval_s: float = 1800.0
 
 
 @dataclasses.dataclass
@@ -84,6 +128,19 @@ class SimResult:
     #: when ``speculative_prewarm`` is off.
     prewarm_wall_s: float = 0.0
     prewarm_overlap_s: float = 0.0
+    # -- fault / degradation telemetry ------------------------------------ #
+    #: per-round ``DegradeReason`` tags (same length as ``match_rounds``).
+    degrade_rounds: List[str] = dataclasses.field(default_factory=list)
+    #: involuntary evictions (node-down preemptions) across all jobs.
+    preemptions: int = 0
+    #: retries consumed across all jobs (crashes + software failures).
+    retries_total: int = 0
+    #: iterations discarded by crash rollbacks (the lost-work integral).
+    lost_iters_total: float = 0.0
+    #: jobs that exhausted their retry budget (terminal failures).
+    failed_jobs: List[int] = dataclasses.field(default_factory=list)
+    #: failure-model events actually applied during the run.
+    fault_events_applied: int = 0
 
     @property
     def jcts(self) -> np.ndarray:
@@ -94,6 +151,18 @@ class SimResult:
     @property
     def avg_jct_s(self) -> float:
         return float(self.jcts.mean())
+
+    @property
+    def fused_host_fallbacks(self) -> int:
+        """Rounds the fused migrate stage served from the host planner
+        (mantissa-budget overflow or non-converged auction)."""
+        return sum(rs.get("fused_host_fallbacks", 0) for rs in self.match_rounds)
+
+    @property
+    def degrade_counts(self) -> Dict[str, int]:
+        """Histogram of per-round degradation-ladder steps (``"none"``
+        rounds included)."""
+        return dict(Counter(self.degrade_rounds))
 
     def ftf_ratios(self, profile: ThroughputProfile) -> np.ndarray:
         """rho = T_shared / T_fair; T_fair = isolated duration stretched by
@@ -142,6 +211,60 @@ class SimResult:
         return sum(rs.get("bid_iters", 0) for rs in self.match_rounds)
 
 
+@dataclasses.dataclass
+class _SimState:
+    """The whole between-rounds loop state — one object so stop/resume
+    and the crash snapshot have a single thing to carry."""
+
+    states: Dict[int, JobState]
+    num_gpus_of: Dict[int, int]
+    health: ClusterHealth
+    now: float = 0.0
+    rounds: int = 0
+    prev_plan: Optional[PlacementPlan] = None
+    prev_gpus: Dict[int, frozenset] = dataclasses.field(default_factory=dict)
+    total_migrations: int = 0
+    match_rounds: List[Dict[str, int]] = dataclasses.field(default_factory=list)
+    overhead: Dict[str, float] = dataclasses.field(default_factory=dict)
+    lp_refresh_s: float = 0.0
+    contention_num: Dict[int, float] = dataclasses.field(default_factory=dict)
+    contention_den: Dict[int, float] = dataclasses.field(default_factory=dict)
+    degrade_rounds: List[str] = dataclasses.field(default_factory=list)
+    event_idx: int = 0
+    events_applied: int = 0
+    preemptions: int = 0
+    retries_total: int = 0
+    lost_iters: float = 0.0
+    failed_jobs: List[int] = dataclasses.field(default_factory=list)
+    prewarm_wall: float = 0.0
+    prewarm_overlap: float = 0.0
+
+
+#: version tag of the simulator round-state snapshot format.
+SIM_STATE_VERSION = "tesserae-simstate-v1"
+
+#: JobState fields the snapshot round-trips (spec fields come from the
+#: trace the resuming simulator is constructed with).
+_JOB_STATE_FIELDS = (
+    "iters_done",
+    "attained_service",
+    "executed_time",
+    "first_run_time",
+    "finish_time",
+    "packed_with",
+    "strategy",
+    "migrations",
+    "migration_debt",
+    "retries",
+    "preemptions",
+    "eligible_time",
+    "ckpt_iters",
+    "ckpt_executed",
+    "lost_iters",
+    "failed",
+)
+
+
 class Simulator:
     def __init__(
         self,
@@ -150,34 +273,52 @@ class Simulator:
         scheduler: TesseraeScheduler,
         true_profile: ThroughputProfile,
         config: SimConfig | None = None,
+        failures: Optional[Sequence[FailureEvent]] = None,
+        round_hook=None,
     ):
         self.cluster = cluster
         self.trace = sorted(trace, key=lambda s: (s.arrival_time, s.job_id))
         self.scheduler = scheduler
         self.true_profile = true_profile
         self.config = config or SimConfig()
+        events = sorted(failures or [], key=FailureEvent.sort_key)
+        for ev in events:
+            if ev.node is not None and not (0 <= ev.node < cluster.num_nodes):
+                raise ValueError(
+                    f"failure event targets node {ev.node}, cluster has "
+                    f"{cluster.num_nodes} nodes"
+                )
+        self._events: List[FailureEvent] = events
+        #: optional per-round callback
+        #: ``hook(round_idx, now, decision, states, health)`` invoked after
+        #: the round advanced — the chaos suite asserts its safety
+        #: invariants here.
+        self.round_hook = round_hook
+        #: in-progress loop state (``run(stop_after_rounds=...)`` retains
+        #: it for :meth:`save_state` / a continued :meth:`run` call).
+        self._state: Optional[_SimState] = None
 
     # ------------------------------------------------------------------ #
-    def run(self) -> SimResult:
+    def run(self, stop_after_rounds: Optional[int] = None) -> Optional[SimResult]:
+        """Run (or continue) the simulation.
+
+        Returns the :class:`SimResult` when the workload completes.  With
+        ``stop_after_rounds=k`` the loop pauses after the k-th round of
+        THIS call and returns ``None`` — all state stays on the simulator
+        (snapshot it with :meth:`save_state`, or call :meth:`run` again to
+        continue).
+        """
         cfg = self.config
-        states: Dict[int, JobState] = {
-            s.job_id: JobState(spec=s) for s in self.trace
-        }
-        num_gpus_of = {s.job_id: s.num_gpus for s in self.trace}
-        now = 0.0
-        prev_plan: Optional[PlacementPlan] = None
-        prev_gpus: Dict[int, frozenset] = {}
-        total_migrations = 0
-        match_rounds: List[Dict[str, int]] = []
-        overhead: Dict[str, float] = {}
-        lp_refresh_s = 0.0
-        contention_num: Dict[int, float] = {}
-        contention_den: Dict[int, float] = {}
-        rounds = 0
+        if self._state is None:
+            self._state = _SimState(
+                states={s.job_id: JobState(spec=s) for s in self.trace},
+                num_gpus_of={s.job_id: s.num_gpus for s in self.trace},
+                health=ClusterHealth(self.cluster.num_nodes),
+            )
+        st = self._state
+        rounds_this_call = 0
         executor: Optional[ThreadPoolExecutor] = None
         pending_prewarm = None
-        prewarm_wall = 0.0
-        prewarm_overlap = 0.0
         if cfg.speculative_prewarm:
             executor = ThreadPoolExecutor(
                 max_workers=1, thread_name_prefix="sim-prewarm"
@@ -189,7 +330,7 @@ class Simulator:
             return time.perf_counter() - t0
 
         try:
-            while now < cfg.max_time_s:
+            while st.now < cfg.max_time_s:
                 # the prewarm thread owns the scheduler (MatchContext and
                 # policy state) until joined — block before anything below
                 # touches it.  Join wait below the prewarm's own wall time
@@ -198,59 +339,108 @@ class Simulator:
                     t_join = time.perf_counter()
                     w = pending_prewarm.result()
                     waited = time.perf_counter() - t_join
-                    prewarm_wall += w
-                    prewarm_overlap += max(0.0, w - waited)
+                    st.prewarm_wall += w
+                    st.prewarm_overlap += max(0.0, w - waited)
                     pending_prewarm = None
+
+                self._apply_events(st)
+
                 active = [
                     s
-                    for s in states.values()
-                    if s.spec.arrival_time <= now and not s.finished
+                    for s in st.states.values()
+                    if s.spec.arrival_time <= st.now
+                    and s.eligible_time <= st.now
+                    and not s.finished
                 ]
-                future = [
+                waiting = [
                     s
-                    for s in states.values()
-                    if s.spec.arrival_time > now and not s.finished
+                    for s in st.states.values()
+                    if not s.finished
+                    and (s.spec.arrival_time > st.now or s.eligible_time > st.now)
                 ]
-                if not active and not future:
+                if not active and not waiting:
                     break
                 if not active:
-                    # idle until the next arrival's round boundary
-                    next_arrival = min(s.spec.arrival_time for s in future)
-                    k = int(np.floor(next_arrival / cfg.round_duration_s))
-                    now = max(now + cfg.round_duration_s, k * cfg.round_duration_s)
+                    # idle until the next arrival's (or backoff expiry's)
+                    # round boundary; fault events in the skipped window
+                    # are applied at the next loop top
+                    next_t = min(
+                        max(s.spec.arrival_time, s.eligible_time) for s in waiting
+                    )
+                    k = int(np.floor(next_t / cfg.round_duration_s))
+                    now_new = max(
+                        st.now + cfg.round_duration_s, k * cfg.round_duration_s
+                    )
+                    # never skip past a pending fault event's boundary
+                    if st.event_idx < len(self._events):
+                        ev_t = self._events[st.event_idx].time_s
+                        ke = int(np.ceil(ev_t / cfg.round_duration_s))
+                        now_new = min(
+                            now_new,
+                            max(
+                                st.now + cfg.round_duration_s,
+                                ke * cfg.round_duration_s,
+                            ),
+                        )
+                    st.now = now_new
                     continue
 
                 # LP-based policies re-solve their optimisation once per round.
                 if isinstance(self.scheduler.policy, GavelPolicy):
-                    lp_refresh_s += self.scheduler.policy.refresh(active, self.cluster)
+                    st.lp_refresh_s += self.scheduler.policy.refresh(
+                        active, self.cluster
+                    )
                 if isinstance(self.scheduler.policy, ThemisFtfPolicy):
                     demand = sum(j.num_gpus for j in active)
                     self.scheduler.policy.avg_contention = max(
                         1.0, demand / self.cluster.num_gpus
                     )
 
-                decision = self.scheduler.decide(active, now, prev_plan, num_gpus_of)
-                match_rounds.append(dict(decision.match_stats))
+                # Only pass health when it deviates from all-up: decide()
+                # treats an all-up health identically to None (tested), and
+                # omitting the kwarg keeps pre-fault decide() overrides
+                # (e.g. differential-shadow schedulers) working unchanged.
+                if st.health is not None and not st.health.all_up:
+                    decision = self.scheduler.decide(
+                        active,
+                        st.now,
+                        st.prev_plan,
+                        st.num_gpus_of,
+                        health=st.health,
+                    )
+                else:
+                    decision = self.scheduler.decide(
+                        active, st.now, st.prev_plan, st.num_gpus_of
+                    )
+                st.match_rounds.append(dict(decision.match_stats))
+                st.degrade_rounds.append(decision.degrade_reason)
                 for k, v in decision.timings.items():
-                    overhead[k] = overhead.get(k, 0.0) + v
+                    st.overhead[k] = st.overhead.get(k, 0.0) + v
                 if decision.migration is not None:
-                    total_migrations += decision.migration.num_migrations
+                    st.total_migrations += decision.migration.num_migrations
                 if isinstance(self.scheduler.policy, GavelPolicy):
                     self.scheduler.policy.note_round(
                         [j.job_id for j in decision.placed]
                     )
 
                 self._advance_round(
-                    decision, states, now, prev_gpus, num_gpus_of
+                    decision, st.states, st.now, st.prev_gpus, st.num_gpus_of,
+                    st.health,
                 )
 
                 plan_map = decision.plan.job_gpu_map()
-                prev_gpus = dict(plan_map)
-                prev_plan = decision.plan.restricted_to(
-                    [j for j in plan_map if not states[j].finished]
+                st.prev_gpus = dict(plan_map)
+                st.prev_plan = decision.plan.restricted_to(
+                    [j for j in plan_map if not st.states[j].finished]
                 )
-                now += cfg.round_duration_s
-                rounds += 1
+                st.now += cfg.round_duration_s
+                st.rounds += 1
+                rounds_this_call += 1
+
+                if self.round_hook is not None:
+                    self.round_hook(
+                        st.rounds, st.now, decision, st.states, st.health
+                    )
 
                 if executor is not None:
                     # The round has advanced, so the NEXT round's active
@@ -262,49 +452,143 @@ class Simulator:
                     # unaffected.  The FTF bookkeeping below overlaps it.
                     spec_active = [
                         s
-                        for s in states.values()
-                        if s.spec.arrival_time <= now and not s.finished
+                        for s in st.states.values()
+                        if s.spec.arrival_time <= st.now
+                        and s.eligible_time <= st.now
+                        and not s.finished
                     ]
                     if spec_active:
                         pending_prewarm = executor.submit(
-                            _timed_prewarm, spec_active, now, prev_plan, num_gpus_of
+                            _timed_prewarm,
+                            spec_active,
+                            st.now,
+                            st.prev_plan,
+                            st.num_gpus_of,
                         )
 
                 # contention bookkeeping for FTF
                 demand = sum(j.num_gpus for j in active)
                 ratio = demand / self.cluster.num_gpus
                 for j in active:
-                    contention_num[j.job_id] = (
-                        contention_num.get(j.job_id, 0.0) + ratio
+                    st.contention_num[j.job_id] = (
+                        st.contention_num.get(j.job_id, 0.0) + ratio
                     )
-                    contention_den[j.job_id] = contention_den.get(j.job_id, 0.0) + 1.0
+                    st.contention_den[j.job_id] = (
+                        st.contention_den.get(j.job_id, 0.0) + 1.0
+                    )
+
+                if (
+                    stop_after_rounds is not None
+                    and rounds_this_call >= stop_after_rounds
+                ):
+                    return None  # paused: state retained on self._state
         finally:
             if pending_prewarm is not None:
-                prewarm_wall += pending_prewarm.result()
+                st.prewarm_wall += pending_prewarm.result()
             if executor is not None:
                 executor.shutdown(wait=True)
 
-        unfinished = [s for s in states.values() if not s.finished]
+        unfinished = [s for s in st.states.values() if not s.finished]
         for s in unfinished:  # should not happen with max_time high enough
             s.finish_time = cfg.max_time_s
-        makespan = max((s.finish_time for s in states.values()), default=0.0)
+        makespan = max((s.finish_time for s in st.states.values()), default=0.0)
         contention = {
-            j: contention_num[j] / contention_den[j]
-            for j in contention_num
-            if contention_den.get(j)
+            j: st.contention_num[j] / st.contention_den[j]
+            for j in st.contention_num
+            if st.contention_den.get(j)
         }
-        return SimResult(
-            states,
+        result = SimResult(
+            st.states,
             makespan,
-            rounds,
-            total_migrations,
-            overhead,
-            lp_refresh_s,
+            st.rounds,
+            st.total_migrations,
+            st.overhead,
+            st.lp_refresh_s,
             contention,
-            match_rounds,
-            prewarm_wall_s=prewarm_wall,
-            prewarm_overlap_s=prewarm_overlap,
+            st.match_rounds,
+            prewarm_wall_s=st.prewarm_wall,
+            prewarm_overlap_s=st.prewarm_overlap,
+            degrade_rounds=st.degrade_rounds,
+            preemptions=st.preemptions,
+            retries_total=st.retries_total,
+            lost_iters_total=st.lost_iters,
+            failed_jobs=list(st.failed_jobs),
+            fault_events_applied=st.events_applied,
         )
+        self._state = None
+        return result
+
+    # ------------------------------------------------------------------ #
+    # Fault-event application (round boundaries)
+    # ------------------------------------------------------------------ #
+    def _apply_events(self, st: _SimState) -> None:
+        while (
+            st.event_idx < len(self._events)
+            and self._events[st.event_idx].time_s <= st.now
+        ):
+            ev = self._events[st.event_idx]
+            st.event_idx += 1
+            st.events_applied += 1
+            if ev.kind == NODE_DOWN:
+                if st.health.up[ev.node]:
+                    st.health.up[ev.node] = False
+                    st.health.speed_factor[ev.node] = 1.0
+                    self._evict_node(st, ev.node)
+                    self.scheduler.invalidate_node(ev.node)
+            elif ev.kind == NODE_UP:
+                if not st.health.up[ev.node]:
+                    st.health.up[ev.node] = True
+                    st.health.speed_factor[ev.node] = 1.0
+                    # the node returns empty: its cached occupancy rows are
+                    # stale the moment placement starts using it again
+                    self.scheduler.invalidate_node(ev.node)
+            elif ev.kind == GPU_DEGRADE:
+                if st.health.up[ev.node]:
+                    st.health.speed_factor[ev.node] = float(ev.factor)
+            elif ev.kind == JOB_FAIL:
+                s = st.states.get(ev.job_id)
+                # only a RUNNING job can crash; a queued/done job is
+                # unaffected (the hazard missed)
+                if s is not None and not s.finished and s.gpus:
+                    self._crash_job(st, s, preempt=False)
+
+    def _evict_node(self, st: _SimState, node: int) -> None:
+        """Node-down: every job with at least one GPU on the node crashes
+        (no checkpoint save — gang-synchronous training dies whole)."""
+        for s in st.states.values():
+            if s.finished or not s.gpus:
+                continue
+            if any(self.cluster.node_of(g) == node for g in s.gpus):
+                self._crash_job(st, s, preempt=True)
+
+    def _crash_job(self, st: _SimState, s: JobState, preempt: bool) -> None:
+        cfg = self.config
+        lost = max(0.0, s.iters_done - s.ckpt_iters)
+        s.iters_done = s.ckpt_iters
+        s.lost_iters += lost
+        st.lost_iters += lost
+        s.gpus = frozenset()
+        s.packed_with = None
+        s.migration_debt = 0.0
+        if preempt:
+            s.preemptions += 1
+            st.preemptions += 1
+        s.retries += 1
+        st.retries_total += 1
+        # drop the job from the relabelling's view of the previous round so
+        # its eventual re-placement is a RESUME (checkpoint load), not a
+        # migration of live state that no longer exists
+        st.prev_gpus.pop(s.job_id, None)
+        if st.prev_plan is not None:
+            st.prev_plan.remove_job(s.job_id)
+        if s.retries > cfg.max_retries:
+            s.failed = True
+            s.finish_time = st.now
+            st.failed_jobs.append(s.job_id)
+        else:
+            s.eligible_time = st.now + cfg.backoff_base_s * (
+                cfg.backoff_factor ** (s.retries - 1)
+            )
 
     # ------------------------------------------------------------------ #
     def _typed_profile(self, gpus) -> ThroughputProfile:
@@ -329,6 +613,7 @@ class Simulator:
         now: float,
         prev_gpus: Dict[int, frozenset],
         num_gpus_of: Dict[int, int],
+        health: Optional[ClusterHealth] = None,
     ) -> None:
         cfg = self.config
         plan_map = decision.plan.job_gpu_map()
@@ -336,6 +621,7 @@ class Simulator:
         for pending_id, placed_id in decision.packing.matches.items():
             packed_partner[pending_id] = placed_id
             packed_partner[placed_id] = pending_id
+        degraded = health is not None and health.degraded
 
         for jid, gpus in plan_map.items():
             s = states[jid]
@@ -362,6 +648,10 @@ class Simulator:
                 elif prev != gpus:
                     s.migrations += 1
                     s.migration_debt += migration_overhead_s(s.spec.model)
+                    # a voluntary migration checkpoints before moving —
+                    # only crashes lose work
+                    s.ckpt_iters = s.iters_done
+                    s.ckpt_executed = s.executed_time
             s.gpus = gpus
 
             # heterogeneous clusters: the job's TRUE rate (and packing
@@ -379,6 +669,15 @@ class Simulator:
                 )
                 factor = na if na > 0 else 1.0
             rate = prof.isolated(s.spec.model, s.num_gpus, s.strategy) * factor
+            if degraded:
+                # truth-side straggler model: a synchronous job runs at the
+                # slowest touched node's speed; the scheduler's beliefs
+                # (and hence the plan) are unchanged
+                slow = min(
+                    health.speed_factor[self.cluster.node_of(g)] for g in gpus
+                )
+                if slow != 1.0:
+                    rate *= slow
 
             debt = min(s.migration_debt, cfg.round_duration_s)
             s.migration_debt -= debt
@@ -396,8 +695,145 @@ class Simulator:
                 s.iters_done += rate * run_time
                 s.executed_time += run_time
                 s.attained_service += s.num_gpus * run_time
+                # periodic checkpoint (inert bookkeeping until a crash
+                # reads it): cadence measured in executed time
+                if (
+                    s.executed_time - s.ckpt_executed
+                    >= cfg.checkpoint_interval_s
+                ):
+                    s.ckpt_iters = s.iters_done
+                    s.ckpt_executed = s.executed_time
 
-        # jobs not in the plan keep waiting (attain no service)
+        # jobs not in the plan keep waiting (attain no service); a job the
+        # scheduler just released drained gracefully, i.e. it checkpointed
         for jid, s in states.items():
             if jid not in plan_map and not s.finished:
+                if s.gpus:
+                    s.ckpt_iters = s.iters_done
+                    s.ckpt_executed = s.executed_time
                 s.gpus = frozenset()
+
+    # ------------------------------------------------------------------ #
+    # Crash snapshot / resume
+    # ------------------------------------------------------------------ #
+    def save_state(self, path: str) -> None:
+        """Serialise the paused round state (see ``run(stop_after_rounds)``)
+        plus the scheduler's :class:`MatchContext` warm state into one
+        versioned ``.npz``.  A simulator constructed with the same
+        (cluster, trace, scheduler config, failures) that calls
+        :meth:`load_state` then :meth:`run` finishes bit-identical to the
+        uninterrupted run.  Policy-internal state (Gavel's LP) is not
+        captured."""
+        st = self._state
+        if st is None:
+            raise RuntimeError(
+                "no paused run to snapshot — call run(stop_after_rounds=k) first"
+            )
+        jobs_meta: Dict[str, Dict] = {}
+        for jid, s in st.states.items():
+            d = {f: getattr(s, f) for f in _JOB_STATE_FIELDS}
+            d["gpus"] = sorted(int(g) for g in s.gpus)
+            jobs_meta[str(jid)] = d
+        meta = {
+            "version": SIM_STATE_VERSION,
+            "now": st.now,
+            "rounds": st.rounds,
+            "total_migrations": st.total_migrations,
+            "lp_refresh_s": st.lp_refresh_s,
+            "event_idx": st.event_idx,
+            "events_applied": st.events_applied,
+            "preemptions": st.preemptions,
+            "retries_total": st.retries_total,
+            "lost_iters": st.lost_iters,
+            "failed_jobs": st.failed_jobs,
+            "degrade_rounds": st.degrade_rounds,
+            "overhead": st.overhead,
+            "match_rounds": st.match_rounds,
+            "contention_num": {str(k): v for k, v in st.contention_num.items()},
+            "contention_den": {str(k): v for k, v in st.contention_den.items()},
+            "prev_gpus": {
+                str(j): sorted(int(g) for g in gs)
+                for j, gs in st.prev_gpus.items()
+            },
+            "jobs": jobs_meta,
+            "has_prev_plan": st.prev_plan is not None,
+            "prewarm_wall": st.prewarm_wall,
+            "prewarm_overlap": st.prewarm_overlap,
+        }
+        ctx_meta, ctx_arrays = self.scheduler.match_context.state_payload()
+        meta["ctx"] = ctx_meta
+        arrays = {f"ctx.{k}": v for k, v in ctx_arrays.items()}
+        arrays["health_up"] = st.health.up
+        arrays["health_speed"] = st.health.speed_factor
+        if st.prev_plan is not None:
+            arrays["prev_plan"] = st.prev_plan.slots
+        arrays["meta_json"] = np.array(json.dumps(meta))
+        with open(path, "wb") as f:
+            np.savez(f, **arrays)
+
+    def load_state(self, path: str) -> None:
+        """Restore a :meth:`save_state` snapshot into this simulator (and
+        its scheduler's :class:`MatchContext`); the next :meth:`run` call
+        continues from the saved round."""
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(str(z["meta_json"][()]))
+            if meta.get("version") != SIM_STATE_VERSION:
+                raise ValueError(
+                    f"{path}: simulator state version {meta.get('version')!r} "
+                    f"!= {SIM_STATE_VERSION!r}"
+                )
+            states: Dict[int, JobState] = {
+                s.job_id: JobState(spec=s) for s in self.trace
+            }
+            for jid_s, d in meta["jobs"].items():
+                s = states[int(jid_s)]
+                for f in _JOB_STATE_FIELDS:
+                    setattr(s, f, d[f])
+                s.gpus = frozenset(int(g) for g in d["gpus"])
+            health = ClusterHealth(self.cluster.num_nodes)
+            health.up = np.asarray(z["health_up"], bool).copy()
+            health.speed_factor = np.asarray(z["health_speed"], np.float64).copy()
+            prev_plan = None
+            if meta["has_prev_plan"]:
+                prev_plan = PlacementPlan(
+                    self.cluster, np.asarray(z["prev_plan"], np.int64).copy()
+                )
+            self._state = _SimState(
+                states=states,
+                num_gpus_of={s.job_id: s.num_gpus for s in self.trace},
+                health=health,
+                now=float(meta["now"]),
+                rounds=int(meta["rounds"]),
+                prev_plan=prev_plan,
+                prev_gpus={
+                    int(j): frozenset(int(g) for g in gs)
+                    for j, gs in meta["prev_gpus"].items()
+                },
+                total_migrations=int(meta["total_migrations"]),
+                match_rounds=list(meta["match_rounds"]),
+                overhead=dict(meta["overhead"]),
+                lp_refresh_s=float(meta["lp_refresh_s"]),
+                contention_num={
+                    int(k): v for k, v in meta["contention_num"].items()
+                },
+                contention_den={
+                    int(k): v for k, v in meta["contention_den"].items()
+                },
+                degrade_rounds=list(meta["degrade_rounds"]),
+                event_idx=int(meta["event_idx"]),
+                events_applied=int(meta["events_applied"]),
+                preemptions=int(meta["preemptions"]),
+                retries_total=int(meta["retries_total"]),
+                lost_iters=float(meta["lost_iters"]),
+                failed_jobs=[int(j) for j in meta["failed_jobs"]],
+                prewarm_wall=float(meta["prewarm_wall"]),
+                prewarm_overlap=float(meta["prewarm_overlap"]),
+            )
+            self.scheduler.match_context = MatchContext.from_payload(
+                meta["ctx"], lambda name: z[f"ctx.{name}"]
+            )
+            # the fused planner's device cache is NOT serialised: a cold
+            # cache only costs one all-dirty fused round, never changes the
+            # plan (the fused program is exact within its budget)
+            if self.scheduler._fused_planner is not None:
+                self.scheduler._fused_planner.invalidate()

@@ -9,6 +9,10 @@ Everything the scheduler is *driven with* lives here, behind one schema:
 * :mod:`repro.workloads.generators` — seeded, composable synthetic
   generators (Poisson / diurnal / bursty arrivals, lognormal / Pareto
   heavy-tail durations, gang-size skew, priority mixes);
+* :mod:`repro.workloads.failures` — seeded, composable failure-event
+  generators (node outages, GPU degradations, per-job software failures)
+  behind a :class:`FailureRecipe`, feeding the simulator's
+  fault-injection layer;
 * :mod:`repro.workloads.loaders` — Philly-style CSV loader (+ committed
   sample) and loaders for the in-repo fixture generators;
 * :mod:`repro.workloads.scenarios` — the named-scenario registry:
@@ -20,6 +24,13 @@ Determinism contract: every scenario trace is a pure function of
 ``(scenario, seed, num_jobs)`` — CI gates on it.
 """
 
+from repro.workloads.failures import (
+    FailureRecipe,
+    GpuDegradations,
+    JobFailures,
+    NodeOutages,
+    generate_failures,
+)
 from repro.workloads.generators import (
     Arrivals,
     Durations,
@@ -48,6 +59,7 @@ from repro.workloads.schema import (
     JobTrace,
     from_jobspecs,
     load_json,
+    load_json_with_failures,
     save_json,
     to_jobspecs,
 )
@@ -55,18 +67,24 @@ from repro.workloads.schema import (
 __all__ = [
     "Arrivals",
     "Durations",
+    "FailureRecipe",
     "GangSizes",
+    "GpuDegradations",
+    "JobFailures",
     "JobTrace",
+    "NodeOutages",
     "PRIORITY_CLASSES",
     "SCHEMA_VERSION",
     "Scenario",
     "TraceRecipe",
     "from_jobspecs",
     "gavel_fixture",
+    "generate_failures",
     "generate_trace",
     "homogeneous_cluster",
     "list_scenarios",
     "load_json",
+    "load_json_with_failures",
     "load_philly_csv",
     "mixed_a100_v100_cluster",
     "philly_sample",

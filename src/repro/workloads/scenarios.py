@@ -22,6 +22,11 @@ Registry (see README for the full table):
 ``gavel-fixture``     the paper's Gavel-like fixture generator
 ``hetero-mixed``      philly-like workload on a half-A100 / half-V100
                       two-rack cluster (type- and topology-aware paths on)
+``node-flaky``        poisson-steady workload + aggressive node
+                      crash/recover churn (1h MTBF) — fault-tolerance
+                      stress regime
+``philly-failures``   philly-like burst under the full Helios-shaped
+                      failure mix (outages + degradations + job failures)
 ====================  =======================================================
 
 Custom scenarios register with :func:`register_scenario`.
@@ -33,8 +38,16 @@ import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.cluster import ClusterSpec
+from repro.core.faults import FailureEvent
 from repro.core.profiler import ThroughputProfile
 from repro.workloads import loaders
+from repro.workloads.failures import (
+    FailureRecipe,
+    GpuDegradations,
+    JobFailures,
+    NodeOutages,
+    generate_failures,
+)
 from repro.workloads.generators import (
     Arrivals,
     Durations,
@@ -78,6 +91,9 @@ class Scenario:
     cluster_fn: Callable[[int], ClusterSpec] = homogeneous_cluster
     default_num_jobs: int = 120
     heterogeneous: bool = False
+    #: optional failure model: the :class:`repro.workloads.failures.FailureRecipe`
+    #: this scenario injects (None = fault-free — the seed behaviour).
+    failure_recipe: Optional[FailureRecipe] = None
 
     def make_trace(
         self,
@@ -89,6 +105,22 @@ class Scenario:
 
     def make_cluster(self, num_gpus: int) -> ClusterSpec:
         return self.cluster_fn(num_gpus)
+
+    def make_failures(
+        self,
+        seed: int,
+        cluster: ClusterSpec,
+        horizon_s: float,
+        trace: Optional[List[JobTrace]] = None,
+    ) -> List[FailureEvent]:
+        """Seeded failure-event stream for one arm (empty for fault-free
+        scenarios).  Deterministic in ``(scenario, seed, cluster shape)``
+        — the same contract as :meth:`make_trace`."""
+        if self.failure_recipe is None:
+            return []
+        return generate_failures(
+            self.failure_recipe, cluster, horizon_s, seed, trace=trace
+        )
 
 
 _REGISTRY: Dict[str, Scenario] = {}
@@ -221,6 +253,52 @@ register_scenario(
         kind="fixture",
         trace_fn=lambda seed, num_jobs, profile=None: loaders.gavel_fixture(
             num_jobs, seed, profile
+        ),
+    )
+)
+
+register_scenario(
+    Scenario(
+        name="node-flaky",
+        description=(
+            "steady Poisson workload on a cluster with aggressively flaky "
+            "nodes (1h MTBF, ~15 min repairs) — the node-crash/recover "
+            "stress regime for eviction, retry/backoff and targeted "
+            "cache-invalidation paths"
+        ),
+        kind="synthetic",
+        failure_recipe=FailureRecipe(
+            nodes=NodeOutages(
+                mtbf_h=1.0, repair_median_s=900.0, repair_sigma=0.6
+            )
+        ),
+        trace_fn=_synthetic(
+            TraceRecipe(
+                arrivals=Arrivals(kind="poisson", rate_per_hour=60.0),
+                durations=Durations(kind="lognormal", median_s=2400.0, sigma=1.1),
+                gangs=GangSizes(probs=(0.60, 0.30, 0.09, 0.01)),
+            )
+        ),
+    )
+)
+
+register_scenario(
+    Scenario(
+        name="philly-failures",
+        description=(
+            "philly-like bursty workload under the Helios-shaped failure "
+            "mix (node outages + GPU degradations + per-job software "
+            "failures) — the end-to-end graceful-degradation regime"
+        ),
+        kind="synthetic",
+        failure_recipe=FailureRecipe.helios_like(),
+        trace_fn=_synthetic(
+            TraceRecipe(
+                arrivals=Arrivals(kind="bursty", rate_per_hour=70.0),
+                durations=Durations(kind="pareto", median_s=900.0, alpha=1.1),
+                gangs=GangSizes(probs=(0.55, 0.25, 0.12, 0.08)),
+                production_fraction=0.10,
+            )
         ),
     )
 )

@@ -19,13 +19,18 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.faults import FailureEvent
 from repro.core.jobs import JobSpec
 from repro.core.profiler import MODEL_CATALOG, ThroughputProfile
 from repro.core.traces import iters_for_duration
 
-SCHEMA_VERSION = "tesserae-trace-v1"
+#: v2 adds an optional top-level ``failures`` list (fault-model events,
+#: :class:`~repro.core.faults.FailureEvent` rows) to the envelope.  The
+#: job-row schema is unchanged, so v1 documents load as-is.
+SCHEMA_VERSION = "tesserae-trace-v2"
+_COMPAT_VERSIONS = ("tesserae-trace-v1", SCHEMA_VERSION)
 
 #: priority classes: "production" jobs carry strict SLOs and bypass packing
 #: (§4.3 "Fairness" — no Algorithm-4 edges), "best-effort" jobs pack freely.
@@ -124,12 +129,23 @@ def from_jobspecs(specs: Sequence[JobSpec]) -> List[JobTrace]:
     ]
 
 
-def save_json(path: str, trace: Sequence[JobTrace], meta: Optional[Dict] = None) -> None:
+def save_json(
+    path: str,
+    trace: Sequence[JobTrace],
+    meta: Optional[Dict] = None,
+    failures: Optional[Sequence[FailureEvent]] = None,
+) -> None:
     doc = {
         "schema": SCHEMA_VERSION,
         "meta": dict(meta or {}),
         "jobs": [t.to_dict() for t in trace],
     }
+    if failures is not None:
+        # canonical order (FailureEvent.sort_key is a total order), so the
+        # archived document is unique regardless of generation order
+        doc["failures"] = [
+            e.to_dict() for e in sorted(failures, key=FailureEvent.sort_key)
+        ]
     with open(path, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
 
@@ -137,8 +153,24 @@ def save_json(path: str, trace: Sequence[JobTrace], meta: Optional[Dict] = None)
 def load_json(path: str) -> List[JobTrace]:
     with open(path) as f:
         doc = json.load(f)
-    if doc.get("schema") != SCHEMA_VERSION:
+    if doc.get("schema") not in _COMPAT_VERSIONS:
         raise ValueError(
-            f"{path}: schema {doc.get('schema')!r} != {SCHEMA_VERSION!r}"
+            f"{path}: schema {doc.get('schema')!r} not in {_COMPAT_VERSIONS!r}"
         )
     return [JobTrace.from_dict(d) for d in doc["jobs"]]
+
+
+def load_json_with_failures(
+    path: str,
+) -> Tuple[List[JobTrace], List[FailureEvent]]:
+    """Like :func:`load_json` but also returns the archived fault-model
+    events (empty for v1 documents, which predate the field)."""
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") not in _COMPAT_VERSIONS:
+        raise ValueError(
+            f"{path}: schema {doc.get('schema')!r} not in {_COMPAT_VERSIONS!r}"
+        )
+    jobs = [JobTrace.from_dict(d) for d in doc["jobs"]]
+    failures = [FailureEvent.from_dict(d) for d in doc.get("failures", [])]
+    return jobs, failures

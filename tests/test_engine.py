@@ -194,14 +194,17 @@ class TestRegressionCorpus:
                 else rng.uniform(0, 10, (n, m))
             )
             rm = cm = None
+            maximize = bool(i % 4 == 1)
             if i % 5 == 4 and n > 1 and m > 1:
                 rm = rng.random(n) < 0.8
                 cm = rng.random(m) < 0.8
                 rm[0] = cm[0] = True
             if i % 7 == 6:
                 forbid = rng.random((n, m)) < 0.15
-                cost = np.where(forbid, np.inf, cost)
-            corpus.append((cost, rm, cm, bool(i % 4 == 1)))
+                # sign-appropriate forbidden encoding (the engine rejects
+                # "attractive" infinities of the opposite sign)
+                cost = np.where(forbid, -np.inf if maximize else np.inf, cost)
+            corpus.append((cost, rm, cm, maximize))
 
         for backend in ["scipy", "numpy", "auction", "auction_kernel"]:
             failures = 0

@@ -1,0 +1,731 @@
+"""Chaos differential suite: fault injection, the graceful-degradation
+ladder, targeted warm-state invalidation and crash-resume.
+
+The bulk test drives 200+ seeded failure sequences through the simulator
+and asserts per-round safety invariants via the ``round_hook``:
+
+* no placement ever touches a down node,
+* gangs stay intact and per-GPU capacity (MAX_PACK) is respected,
+* retry budgets are bounded,
+* no job is lost — every job either completes or is accounted as a
+  terminal failure.
+
+The zero-failure configuration is asserted bit-identical to the seed
+path, the ladder is forced step by step with an injected clock, the fused
+planner's forced host fallback is checked bit-identical against the host
+planner, and a killed-and-restored simulation must finish bit-identical
+to an uninterrupted one.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import MAX_PACK, ClusterHealth, ClusterSpec
+from repro.core.faults import (
+    EVENT_KINDS,
+    GPU_DEGRADE,
+    JOB_FAIL,
+    NODE_DOWN,
+    NODE_UP,
+    FailureEvent,
+)
+from repro.core.jobs import JobSpec
+from repro.core.matching import MatchContext
+from repro.core.matching.engine import solve_lap_batched
+from repro.core.policies import TiresiasPolicy
+from repro.core.profiler import ThroughputProfile
+from repro.core.scheduler import DegradeReason, TesseraeScheduler
+from repro.core.simulator import SimConfig, Simulator
+from repro.core.traces import TABLE1_MODELS, shockwave_trace
+from repro.workloads import from_jobspecs
+from repro.workloads.failures import (
+    FailureRecipe,
+    GpuDegradations,
+    JobFailures,
+    NodeOutages,
+    generate_failures,
+)
+
+ROUND = 360.0
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return ThroughputProfile()
+
+
+def _scheduler(cluster, profile, **kw):
+    kw.setdefault("lap_backend", "numpy")
+    kw.setdefault("migration_algorithm", "node")
+    return TesseraeScheduler(cluster, TiresiasPolicy(profile), profile, **kw)
+
+
+def _tiny_trace(profile, num_jobs, seed, max_rounds=6):
+    """Jobs sized in ROUNDS (not hours) so chaos sims stay fast."""
+    rng = np.random.default_rng([seed, 0xC4A05])
+    specs = []
+    for i in range(num_jobs):
+        model = TABLE1_MODELS[int(rng.integers(len(TABLE1_MODELS)))]
+        gpus = int(rng.choice([1, 1, 2, 4]))
+        rate = profile.isolated(model, gpus, "dp")
+        rounds = 2 + int(rng.integers(max_rounds))
+        specs.append(
+            JobSpec(
+                job_id=i,
+                model=model,
+                num_gpus=gpus,
+                total_iters=rate * ROUND * rounds,
+                arrival_time=float(rng.integers(0, 6)) * ROUND,
+            )
+        )
+    return specs
+
+
+def _fingerprint(res):
+    """The decision-relevant outcome of a run (no wall times)."""
+    return {
+        "jobs": {
+            jid: (s.finish_time, s.iters_done, s.migrations, s.retries, s.failed)
+            for jid, s in res.jobs.items()
+        },
+        "makespan": res.makespan_s,
+        "migrations": res.total_migrations,
+        "rounds": res.num_rounds,
+        "degrade": tuple(res.degrade_rounds),
+        "preemptions": res.preemptions,
+    }
+
+
+# --------------------------------------------------------------------------- #
+# FailureEvent schema
+# --------------------------------------------------------------------------- #
+class TestFailureEvents:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            FailureEvent(0.0, "meteor-strike", node=0)
+        with pytest.raises(ValueError):
+            FailureEvent(-1.0, NODE_DOWN, node=0)
+        with pytest.raises(ValueError):
+            FailureEvent(0.0, NODE_DOWN)  # node required
+        with pytest.raises(ValueError):
+            FailureEvent(0.0, JOB_FAIL)  # job_id required
+        with pytest.raises(ValueError):
+            FailureEvent(0.0, GPU_DEGRADE, node=0, factor=0.0)
+        with pytest.raises(ValueError):
+            FailureEvent(0.0, GPU_DEGRADE, node=0, factor=1.5)
+
+    def test_sort_key_total_order(self):
+        evs = [
+            FailureEvent(10.0, NODE_UP, node=1),
+            FailureEvent(10.0, NODE_DOWN, node=0),
+            FailureEvent(5.0, JOB_FAIL, job_id=3),
+        ]
+        ordered = sorted(evs, key=FailureEvent.sort_key)
+        assert ordered[0].kind == JOB_FAIL
+        # at equal times, downs sort before ups
+        assert ordered[1].kind == NODE_DOWN and ordered[2].kind == NODE_UP
+        assert EVENT_KINDS.index(NODE_DOWN) < EVENT_KINDS.index(NODE_UP)
+
+    def test_dict_round_trip(self):
+        ev = FailureEvent(12.5, GPU_DEGRADE, node=3, factor=0.5)
+        assert FailureEvent.from_dict(ev.to_dict()) == ev
+        assert "job_id" not in ev.to_dict()  # Nones dropped
+        with pytest.raises(ValueError):
+            FailureEvent.from_dict({"time_s": 0.0, "kind": NODE_DOWN, "node": 0,
+                                    "blast_radius": 2})
+
+
+# --------------------------------------------------------------------------- #
+# Generators
+# --------------------------------------------------------------------------- #
+class TestFailureGenerators:
+    def test_deterministic(self, profile):
+        cluster = ClusterSpec(4, 4)
+        rows = from_jobspecs(shockwave_trace(num_jobs=20, seed=0, profile=profile))
+        recipe = FailureRecipe.helios_like()
+        a = generate_failures(recipe, cluster, 36_000.0, seed=7, trace=rows)
+        b = generate_failures(recipe, cluster, 36_000.0, seed=7, trace=rows)
+        assert a == b
+        c = generate_failures(recipe, cluster, 36_000.0, seed=8, trace=rows)
+        assert a != c
+
+    def test_axes_compose_without_crosstalk(self, profile):
+        """Enabling the job axis must not perturb the node axis' draws."""
+        cluster = ClusterSpec(4, 4)
+        rows = from_jobspecs(shockwave_trace(num_jobs=20, seed=0, profile=profile))
+        nodes_only = generate_failures(
+            FailureRecipe(nodes=NodeOutages(mtbf_h=1.0)),
+            cluster, 36_000.0, seed=3,
+        )
+        full = generate_failures(
+            FailureRecipe(nodes=NodeOutages(mtbf_h=1.0), jobs=JobFailures()),
+            cluster, 36_000.0, seed=3, trace=rows,
+        )
+        node_events = [e for e in full if e.kind in (NODE_DOWN, NODE_UP)]
+        assert node_events == nodes_only
+
+    def test_horizon_and_pairing(self):
+        cluster = ClusterSpec(8, 4)
+        evs = generate_failures(
+            FailureRecipe(nodes=NodeOutages(mtbf_h=0.5), gpus=GpuDegradations(
+                rate_per_node_per_day=48.0)),
+            cluster, 7200.0, seed=0,
+        )
+        assert evs == sorted(evs, key=FailureEvent.sort_key)
+        assert all(e.time_s < 7200.0 for e in evs)
+        # every node sees at most one more DOWN than UP (open outage at
+        # the horizon), never the reverse
+        for n in range(8):
+            downs = sum(1 for e in evs if e.kind == NODE_DOWN and e.node == n)
+            ups = sum(1 for e in evs if e.kind == NODE_UP and e.node == n)
+            assert downs - ups in (0, 1)
+
+
+# --------------------------------------------------------------------------- #
+# The 200-seed chaos bulk
+# --------------------------------------------------------------------------- #
+class TestChaosInvariants:
+    NUM_SEEDS = 200
+
+    def test_chaos_invariants_bulk(self, profile):
+        totals = {"events": 0, "preempt": 0, "retries": 0, "failed": 0}
+        for seed in range(self.NUM_SEEDS):
+            rng = np.random.default_rng([seed, 0xC4A06])
+            num_nodes = 2 + seed % 3
+            cluster = ClusterSpec(num_nodes, 4)
+            trace = _tiny_trace(profile, 5 + seed % 4, seed)
+            horizon = 40 * ROUND
+            events = generate_failures(
+                FailureRecipe(
+                    nodes=NodeOutages(
+                        mtbf_h=0.3 + 0.2 * (seed % 4),
+                        repair_median_s=600.0,
+                        repair_sigma=0.5,
+                    ),
+                    gpus=GpuDegradations(rate_per_node_per_day=24.0)
+                    if seed % 3 == 0
+                    else None,
+                ),
+                cluster, horizon, seed,
+            )
+            # per-job software failures, directly authored
+            for s in trace:
+                if rng.random() < 0.3:
+                    events.append(FailureEvent(
+                        s.arrival_time + float(rng.uniform(0, 8 * ROUND)),
+                        JOB_FAIL, job_id=s.job_id,
+                    ))
+            events.sort(key=FailureEvent.sort_key)
+
+            cfg = SimConfig(
+                max_time_s=200 * ROUND,
+                max_retries=3,
+                backoff_base_s=ROUND,
+                checkpoint_interval_s=2 * ROUND,
+            )
+            sched = _scheduler(cluster, profile)
+
+            def hook(round_idx, now, decision, states, health,
+                     cluster=cluster, cfg=cfg, seed=seed):
+                gmap = decision.plan.job_gpu_map()
+                per_gpu = {}
+                for jid, gpus in gmap.items():
+                    s = states[jid]
+                    assert len(gpus) == s.num_gpus, (
+                        f"seed {seed}: gang of job {jid} broken"
+                    )
+                    for g in gpus:
+                        node = cluster.node_of(g)
+                        assert health.up[node], (
+                            f"seed {seed} round {round_idx}: job {jid} "
+                            f"placed on down node {node}"
+                        )
+                        per_gpu[g] = per_gpu.get(g, 0) + 1
+                assert all(v <= MAX_PACK for v in per_gpu.values()), (
+                    f"seed {seed}: GPU capacity exceeded"
+                )
+                for s in states.values():
+                    assert s.retries <= cfg.max_retries + 1, (
+                        f"seed {seed}: retry budget exceeded on job {s.job_id}"
+                    )
+
+            res = Simulator(
+                cluster, trace, sched, profile, cfg,
+                failures=events, round_hook=hook,
+            ).run()
+
+            # no job lost: everything completed or is a terminal failure
+            for jid, s in res.jobs.items():
+                assert s.finished, f"seed {seed}: job {jid} never finished"
+                if s.failed:
+                    assert s.retries == cfg.max_retries + 1
+                    assert jid in res.failed_jobs
+                else:
+                    assert s.iters_done >= s.spec.total_iters - 1e-6, (
+                        f"seed {seed}: job {jid} short of its work"
+                    )
+            assert res.lost_iters_total >= 0.0
+            assert len(res.degrade_rounds) == res.num_rounds
+            totals["events"] += res.fault_events_applied
+            totals["preempt"] += res.preemptions
+            totals["retries"] += res.retries_total
+            totals["failed"] += len(res.failed_jobs)
+        # the sweep must actually exercise the machinery, not dodge it
+        assert totals["events"] > self.NUM_SEEDS
+        assert totals["preempt"] > 0
+        assert totals["failed"] > 0
+        assert totals["retries"] >= totals["preempt"]
+
+
+# --------------------------------------------------------------------------- #
+# Zero-failure bit-identity with the seed path
+# --------------------------------------------------------------------------- #
+class TestZeroFailureIdentity:
+    def _run(self, profile, **kw):
+        cluster = ClusterSpec(3, 4)
+        trace = shockwave_trace(num_jobs=18, seed=2, profile=profile)
+        sched = _scheduler(cluster, profile)
+        return Simulator(cluster, trace, sched, profile, SimConfig(), **kw).run()
+
+    def test_no_failures_equals_empty_failures(self, profile):
+        a = self._run(profile)
+        b = self._run(profile, failures=[])
+        assert _fingerprint(a) == _fingerprint(b)
+        assert all(r == DegradeReason.NONE for r in a.degrade_rounds)
+        assert a.fault_events_applied == 0 and a.preemptions == 0
+
+    def test_never_fired_event_is_inert(self, profile):
+        a = self._run(profile)
+        # an outage scheduled far past the makespan is never applied
+        b = self._run(
+            profile,
+            failures=[FailureEvent(a.makespan_s * 1e3, NODE_DOWN, node=0)],
+        )
+        assert _fingerprint(a) == _fingerprint(b)
+
+    def test_fault_knobs_are_inert_without_events(self, profile):
+        a = self._run(profile)
+        cluster = ClusterSpec(3, 4)
+        trace = shockwave_trace(num_jobs=18, seed=2, profile=profile)
+        sched = _scheduler(cluster, profile)
+        b = Simulator(
+            cluster, trace, sched, profile,
+            SimConfig(max_retries=1, backoff_base_s=7.0, checkpoint_interval_s=1.0),
+        ).run()
+        assert _fingerprint(a) == _fingerprint(b)
+
+    def test_event_on_missing_node_rejected(self, profile):
+        cluster = ClusterSpec(2, 4)
+        with pytest.raises(ValueError, match="node 9"):
+            Simulator(
+                cluster,
+                shockwave_trace(num_jobs=4, seed=0, profile=profile),
+                _scheduler(cluster, profile),
+                profile,
+                SimConfig(),
+                failures=[FailureEvent(0.0, NODE_DOWN, node=9)],
+            )
+
+
+# --------------------------------------------------------------------------- #
+# Health-aware decide()
+# --------------------------------------------------------------------------- #
+class TestHealthAwareDecide:
+    def test_down_node_gets_nothing(self, profile):
+        cluster = ClusterSpec(3, 4)
+        trace = _tiny_trace(profile, 10, seed=1)
+        from repro.core.jobs import JobState
+
+        sched = _scheduler(cluster, profile)
+        states = [JobState(spec=s) for s in trace]
+        health = ClusterHealth(3)
+        health.up[1] = False
+        prev = None
+        for rnd in range(4):
+            dec = sched.decide(states, rnd * ROUND, prev, health=health)
+            for jid, gpus in dec.plan.job_gpu_map().items():
+                assert all(cluster.node_of(g) != 1 for g in gpus)
+            prev = dec.plan
+        # recovery: once the node is back, capacity is usable again
+        health.up[1] = True
+        seen_node1 = False
+        for rnd in range(4, 8):
+            dec = sched.decide(states, rnd * ROUND, prev, health=health)
+            prev = dec.plan
+            if any(cluster.node_of(g) == 1
+                   for gpus in dec.plan.job_gpu_map().values() for g in gpus):
+                seen_node1 = True
+        assert seen_node1
+
+    def test_all_up_health_matches_no_health(self, profile):
+        cluster = ClusterSpec(2, 4)
+        trace = _tiny_trace(profile, 8, seed=4)
+        from repro.core.jobs import JobState
+
+        a = _scheduler(cluster, profile)
+        b = _scheduler(cluster, profile)
+        sa = [JobState(spec=s) for s in trace]
+        sb = [JobState(spec=s) for s in trace]
+        prev_a = prev_b = None
+        for rnd in range(3):
+            da = a.decide(sa, rnd * ROUND, prev_a)
+            db = b.decide(sb, rnd * ROUND, prev_b, health=ClusterHealth(2))
+            assert np.array_equal(da.plan.slots, db.plan.slots)
+            prev_a, prev_b = da.plan, db.plan
+
+
+# --------------------------------------------------------------------------- #
+# Degradation ladder (injected clock)
+# --------------------------------------------------------------------------- #
+def _scripted_clock(values):
+    it = iter(values)
+    last = [0.0]
+
+    def clock():
+        try:
+            last[0] = next(it)
+        except StopIteration:
+            pass
+        return last[0]
+
+    return clock
+
+
+class TestDegradationLadder:
+    def _round_inputs(self, profile, cluster):
+        from repro.core.jobs import JobState
+
+        trace = _tiny_trace(profile, 10, seed=9)
+        return [JobState(spec=s) for s in trace]
+
+    def test_deadline_greedy(self, profile):
+        cluster = ClusterSpec(3, 4)
+        states = self._round_inputs(profile, cluster)
+        base = _scheduler(cluster, profile)
+        d0 = base.decide(states, 0.0)
+        # clock: t_start=0, migrate-stage check reads 10 >> deadline
+        sched = _scheduler(
+            cluster, profile, decide_deadline_s=1.0,
+            clock=_scripted_clock([0.0, 10.0]),
+        )
+        dec = sched.decide(states, ROUND, d0.plan)
+        assert dec.degrade_reason == DegradeReason.DEADLINE_GREEDY
+        assert dec.migration is not None and dec.migration.algorithm == "none"
+        # the greedy plan is still a valid placement
+        for jid, gpus in dec.plan.job_gpu_map().items():
+            assert len(gpus) == next(
+                s.num_gpus for s in states if s.job_id == jid
+            )
+
+    def test_deadline_host_demotion(self, profile):
+        cluster = ClusterSpec(3, 4)
+        states = self._round_inputs(profile, cluster)
+        base = _scheduler(cluster, profile)
+        d0 = base.decide(states, 0.0)
+        host = _scheduler(cluster, profile)
+        dh = host.decide(states, ROUND, d0.plan)
+
+        fused = _scheduler(
+            cluster, profile, fused_fanout=True,
+            decide_deadline_s=1.0, clock=_scripted_clock([0.0, 0.7]),
+        )
+        df = fused.decide(states, ROUND, d0.plan)
+        assert df.degrade_reason == DegradeReason.DEADLINE_HOST
+        # demoted round is served by the exact host planner: bit-identical
+        assert np.array_equal(df.plan.slots, dh.plan.slots)
+
+    def test_no_deadline_never_degrades(self, profile):
+        cluster = ClusterSpec(3, 4)
+        states = self._round_inputs(profile, cluster)
+        sched = _scheduler(cluster, profile, clock=_scripted_clock([0.0, 1e9]))
+        d0 = sched.decide(states, 0.0)
+        dec = sched.decide(states, ROUND, d0.plan)
+        assert dec.degrade_reason == DegradeReason.NONE
+
+    def test_generous_deadline_stays_on_ladder_top(self, profile):
+        cluster = ClusterSpec(3, 4)
+        states = self._round_inputs(profile, cluster)
+        sched = _scheduler(cluster, profile, decide_deadline_s=3600.0)
+        d0 = sched.decide(states, 0.0)
+        dec = sched.decide(states, ROUND, d0.plan)
+        assert dec.degrade_reason == DegradeReason.NONE
+
+
+# --------------------------------------------------------------------------- #
+# Fused planner: forced fallback + warm recovery (satellite a)
+# --------------------------------------------------------------------------- #
+class TestFusedFallbackAndRecovery:
+    def test_forced_budget_fallback_is_bit_identical(self, profile, monkeypatch):
+        import repro.core.fused as fused_mod
+
+        cluster = ClusterSpec(3, 4)
+        from repro.core.jobs import JobState
+
+        trace = _tiny_trace(profile, 10, seed=5)
+        states = [JobState(spec=s) for s in trace]
+
+        host = _scheduler(cluster, profile)
+        d0h = host.decide(states, 0.0)
+        dh = host.decide(states, ROUND, d0h.plan)
+
+        # an impossible mantissa budget forces the host fallback each round
+        monkeypatch.setattr(fused_mod, "_F32_MANTISSA", 0.0)
+        fused = _scheduler(cluster, profile, fused_fanout=True)
+        d0f = fused.decide(states, 0.0)
+        df = fused.decide(states, ROUND, d0f.plan)
+        assert df.degrade_reason == DegradeReason.FUSED_BUDGET
+        assert np.array_equal(df.plan.slots, dh.plan.slots)
+        assert fused._fused_planner.stats["fused_budget_fallbacks"] >= 1
+        assert df.match_stats.get("fused_host_fallbacks", 0) >= 1
+
+    def test_simresult_counts_fallbacks(self, profile, monkeypatch):
+        import repro.core.fused as fused_mod
+
+        monkeypatch.setattr(fused_mod, "_F32_MANTISSA", 0.0)
+        cluster = ClusterSpec(2, 4)
+        trace = _tiny_trace(profile, 6, seed=6)
+        sched = _scheduler(cluster, profile, fused_fanout=True)
+        res = Simulator(cluster, trace, sched, profile, SimConfig()).run()
+        assert res.fused_host_fallbacks > 0
+        assert res.degrade_counts.get(DegradeReason.FUSED_BUDGET, 0) > 0
+
+    def test_invalidate_then_two_round_recovery(self, profile):
+        """After a node invalidation the fused cache must be fully warm
+        again (0 dirty pairs, one readout per round) within 2 rounds."""
+        from repro.core.fused import FusedMigrationPlanner
+        from repro.core.jobs import JobState
+
+        cluster = ClusterSpec(3, 4)
+        trace = _tiny_trace(profile, 10, seed=7)
+        states = [JobState(spec=s) for s in trace]
+        sched = _scheduler(cluster, profile)
+        d0 = sched.decide(states, 0.0)
+        d1 = sched.decide(states, ROUND, d0.plan)
+
+        planner = FusedMigrationPlanner()
+        gmap = {s.job_id: s.num_gpus for s in states}
+
+        def dirty_of(fn):
+            before = dict(planner.stats)
+            fn()
+            return (
+                planner.stats["fused_dirty_pairs"] - before["fused_dirty_pairs"],
+                planner.stats["fused_readouts"] - before["fused_readouts"],
+            )
+
+        dirty_of(lambda: planner.plan(d0.plan, d1.plan, gmap))  # cold
+        dirty, readouts = dirty_of(lambda: planner.plan(d0.plan, d1.plan, gmap))
+        assert dirty == 0 and readouts == 1  # steady state
+
+        planner.invalidate_nodes([1])
+        d_1, r_1 = dirty_of(lambda: planner.plan(d0.plan, d1.plan, gmap))
+        assert d_1 > 0 and r_1 == 1  # poisoned rows re-solve...
+        d_2, r_2 = dirty_of(lambda: planner.plan(d0.plan, d1.plan, gmap))
+        assert d_2 == 0 and r_2 == 1  # ...and the cache is warm again
+
+        # the re-solved plan matches a fresh planner's exactly
+        fresh = FusedMigrationPlanner()
+        a = planner.plan(d0.plan, d1.plan, gmap)
+        b = fresh.plan(d0.plan, d1.plan, gmap)
+        assert np.array_equal(a.physical_plan.slots, b.physical_plan.slots)
+
+
+# --------------------------------------------------------------------------- #
+# Targeted invalidation of the MatchContext
+# --------------------------------------------------------------------------- #
+class TestTargetedInvalidation:
+    def test_invalidate_instances_is_targeted(self):
+        ctx = MatchContext()
+        rng = np.random.default_rng(0)
+        costs = rng.random((3, 4, 4))
+        ids = np.array([10, 11, 12])
+        kw = dict(context=ctx, context_key="t", instance_ids=ids, backend="numpy")
+        r1 = solve_lap_batched(costs, **kw)
+        solve_lap_batched(costs, **kw)
+        assert ctx.stats["memo_instances"] == 3  # all memo-hit
+
+        n = ctx.invalidate_instances([11], families=("t",))
+        assert n == 1
+        assert ctx.stats["instances_invalidated"] == 1
+        before = ctx.stats["memo_instances"]
+        r3 = solve_lap_batched(costs, **kw)
+        # 10 and 12 still memo-hit; 11 re-solves to the same assignment
+        assert ctx.stats["memo_instances"] == before + 2
+        assert np.array_equal(r3.col_of, r1.col_of)
+
+    def test_unknown_family_is_noop(self):
+        ctx = MatchContext()
+        solve_lap_batched(
+            np.eye(3)[None], context=ctx, context_key="t",
+            instance_ids=[5], backend="numpy",
+        )
+        assert ctx.invalidate_instances([5], families=("other",)) == 0
+
+    def test_scheduler_invalidate_node(self, profile):
+        cluster = ClusterSpec(3, 4)
+        from repro.core.jobs import JobState
+
+        trace = _tiny_trace(profile, 10, seed=8)
+        states = [JobState(spec=s) for s in trace]
+        sched = _scheduler(cluster, profile)
+        d0 = sched.decide(states, 0.0)
+        sched.decide(states, ROUND, d0.plan)  # populate migration families
+        count = sched.invalidate_node(1)
+        assert count > 0
+        assert sched.match_context.stats["instances_invalidated"] == count
+
+
+# --------------------------------------------------------------------------- #
+# MatchContext save / load (satellite c)
+# --------------------------------------------------------------------------- #
+class TestMatchContextPersistence:
+    def _populated(self):
+        ctx = MatchContext()
+        rng = np.random.default_rng(1)
+        solve_lap_batched(
+            rng.random((4, 5, 5)), context=ctx, context_key="fam-a",
+            instance_ids=[1, 2, 3, 4], backend="auction",
+        )
+        solve_lap_batched(
+            rng.random((2, 3, 3)), context=ctx, context_key="fam-b",
+            instance_ids=[7, 8], backend="numpy", maximize=True,
+        )
+        return ctx
+
+    def test_round_trip_no_suffix_append(self, tmp_path):
+        ctx = self._populated()
+        path = str(tmp_path / "ctx-state")  # no .npz suffix
+        ctx.save(path)
+        import os
+
+        assert os.path.exists(path) and not os.path.exists(path + ".npz")
+        loaded = MatchContext.load(path)
+        assert loaded.stats == ctx.stats
+
+    def test_loaded_context_memo_hits(self, tmp_path):
+        ctx = self._populated()
+        path = str(tmp_path / "s.npz")
+        ctx.save(path)
+        loaded = MatchContext.load(path)
+        rng = np.random.default_rng(1)
+        costs = rng.random((4, 5, 5))
+        before = loaded.stats["memo_instances"]
+        res = solve_lap_batched(
+            costs, context=loaded, context_key="fam-a",
+            instance_ids=[1, 2, 3, 4], backend="auction",
+        )
+        assert loaded.stats["memo_instances"] == before + 4
+        fresh = solve_lap_batched(costs, backend="numpy")
+        assert res.total_cost == pytest.approx(fresh.total_cost)
+
+    def test_version_check(self, tmp_path):
+        import json
+
+        ctx = self._populated()
+        path = str(tmp_path / "s.npz")
+        ctx.save(path)
+        with np.load(path, allow_pickle=False) as z:
+            arrays = {k: z[k] for k in z.files}
+        meta = json.loads(str(arrays["meta_json"][()]))
+        meta["version"] = "tesserae-matchctx-v999"
+        arrays["meta_json"] = np.array(json.dumps(meta))
+        with open(path, "wb") as f:
+            np.savez(f, **arrays)
+        with pytest.raises(ValueError, match="v999"):
+            MatchContext.load(path)
+
+
+# --------------------------------------------------------------------------- #
+# Crash-resume differential (satellite c)
+# --------------------------------------------------------------------------- #
+class TestCrashResume:
+    def _make(self, profile, failures):
+        cluster = ClusterSpec(3, 4)
+        trace = _tiny_trace(profile, 12, seed=11, max_rounds=8)
+        sched = _scheduler(cluster, profile)
+        cfg = SimConfig(max_retries=3, backoff_base_s=ROUND)
+        return Simulator(cluster, trace, sched, profile, cfg, failures=failures)
+
+    def _failures(self):
+        return [
+            FailureEvent(2 * ROUND, NODE_DOWN, node=1),
+            FailureEvent(5 * ROUND, NODE_UP, node=1),
+            FailureEvent(3 * ROUND, GPU_DEGRADE, node=0, factor=0.5),
+            FailureEvent(7 * ROUND, GPU_DEGRADE, node=0, factor=1.0),
+            FailureEvent(4 * ROUND, JOB_FAIL, job_id=2),
+        ]
+
+    @pytest.mark.parametrize("kill_after", [1, 4, 9])
+    def test_resume_is_bit_identical(self, profile, tmp_path, kill_after):
+        baseline = self._make(profile, self._failures()).run()
+
+        victim = self._make(profile, self._failures())
+        out = victim.run(stop_after_rounds=kill_after)
+        assert out is None  # paused, not finished
+        snap = str(tmp_path / f"snap{kill_after}.npz")
+        victim.save_state(snap)
+
+        resumed = self._make(profile, self._failures())  # fresh everything
+        resumed.load_state(snap)
+        res = resumed.run()
+        assert _fingerprint(res) == _fingerprint(baseline)
+
+    def test_resume_without_failures(self, profile, tmp_path):
+        baseline = self._make(profile, None).run()
+        victim = self._make(profile, None)
+        assert victim.run(stop_after_rounds=3) is None
+        snap = str(tmp_path / "snap.npz")
+        victim.save_state(snap)
+        resumed = self._make(profile, None)
+        resumed.load_state(snap)
+        assert _fingerprint(resumed.run()) == _fingerprint(baseline)
+
+    def test_continue_in_place_matches(self, profile):
+        """Pausing and continuing the SAME simulator is also identical."""
+        baseline = self._make(profile, self._failures()).run()
+        paused = self._make(profile, self._failures())
+        assert paused.run(stop_after_rounds=2) is None
+        res = paused.run()
+        assert _fingerprint(res) == _fingerprint(baseline)
+
+    def test_save_without_pause_raises(self, profile, tmp_path):
+        sim = self._make(profile, None)
+        with pytest.raises(RuntimeError, match="stop_after_rounds"):
+            sim.save_state(str(tmp_path / "x.npz"))
+
+
+# --------------------------------------------------------------------------- #
+# NaN / inf cost validation (satellite b)
+# --------------------------------------------------------------------------- #
+class TestCostValidation:
+    def test_nan_rejected_with_instance_id(self):
+        costs = np.random.default_rng(0).random((2, 3, 3))
+        costs[1, 2, 0] = np.nan
+        with pytest.raises(ValueError) as ei:
+            solve_lap_batched(costs, instance_ids=[70, 99], backend="numpy")
+        msg = str(ei.value)
+        assert "instance id 99" in msg and "row 2" in msg and "col 0" in msg
+
+    def test_attractive_inf_rejected(self):
+        costs = np.ones((1, 2, 2))
+        costs[0, 0, 0] = -np.inf  # infinitely attractive under minimisation
+        with pytest.raises(ValueError, match="-inf"):
+            solve_lap_batched(costs, backend="numpy")
+        benefit = np.ones((1, 2, 2))
+        benefit[0, 1, 1] = np.inf  # infinitely attractive under maximisation
+        with pytest.raises(ValueError, match="inf"):
+            solve_lap_batched(benefit, maximize=True, backend="numpy")
+
+    def test_forbidden_edges_still_legal(self):
+        costs = np.ones((1, 2, 2))
+        costs[0, 0, 1] = np.inf  # forbidden under minimisation: fine
+        res = solve_lap_batched(costs, backend="numpy")
+        assert res.col_of[0, 0] == 0
+        benefit = np.ones((1, 2, 2))
+        benefit[0, 0, 1] = -np.inf  # forbidden under maximisation: fine
+        solve_lap_batched(benefit, maximize=True, backend="numpy")
+
+    def test_count_reported(self):
+        costs = np.full((1, 2, 2), np.nan)
+        with pytest.raises(ValueError, match="4 invalid entries"):
+            solve_lap_batched(costs, backend="numpy")

@@ -383,3 +383,135 @@ class TestEvaluateHarness:
         assert a1["match_telemetry"] == a2["match_telemetry"]
         assert a1["match_telemetry"]["warm_instances"] > 0
         assert validate_schema({"arms": [a1]}) == []
+
+
+# --------------------------------------------------------------------------- #
+# Failure-event schema (trace-v2 envelope) + failure-generator bounds
+# --------------------------------------------------------------------------- #
+class TestFailureSchema:
+    def _events(self):
+        from repro.core.faults import (
+            GPU_DEGRADE,
+            JOB_FAIL,
+            NODE_DOWN,
+            NODE_UP,
+            FailureEvent,
+        )
+
+        return [
+            FailureEvent(100.0, NODE_DOWN, node=2),
+            FailureEvent(700.0, NODE_UP, node=2),
+            FailureEvent(300.0, GPU_DEGRADE, node=0, factor=0.5),
+            FailureEvent(900.0, JOB_FAIL, job_id=4),
+        ]
+
+    def test_v2_round_trip_with_failures(self, tmp_path):
+        trace = W.scenario("poisson-steady").make_trace(seed=1, num_jobs=12)
+        p = tmp_path / "t.json"
+        W.save_json(str(p), trace, failures=self._events())
+        back_trace, back_failures = W.load_json_with_failures(str(p))
+        assert back_trace == trace
+        assert back_failures == sorted(
+            self._events(), key=lambda e: e.sort_key()
+        )
+        doc = json.loads(p.read_text())
+        assert doc["schema"] == W.SCHEMA_VERSION == "tesserae-trace-v2"
+        # plain load_json still works on a failure-carrying document
+        assert W.load_json(str(p)) == trace
+
+    def test_no_failures_key_when_absent(self, tmp_path):
+        trace = W.scenario("poisson-steady").make_trace(seed=1, num_jobs=5)
+        p = tmp_path / "t.json"
+        W.save_json(str(p), trace)
+        assert "failures" not in json.loads(p.read_text())
+        _, failures = W.load_json_with_failures(str(p))
+        assert failures == []
+
+    def test_v1_documents_still_load(self, tmp_path):
+        trace = W.scenario("poisson-steady").make_trace(seed=2, num_jobs=8)
+        p = tmp_path / "t.json"
+        W.save_json(str(p), trace)
+        doc = json.loads(p.read_text())
+        doc["schema"] = "tesserae-trace-v1"
+        p.write_text(json.dumps(doc))
+        assert W.load_json(str(p)) == trace
+        back, failures = W.load_json_with_failures(str(p))
+        assert back == trace and failures == []
+
+
+class TestFailureGeneratorBounds:
+    def test_first_crash_times_are_exponential(self):
+        from repro.workloads.failures import NodeOutages
+
+        mtbf_s = 2.0 * 3600.0
+        spec = NodeOutages(mtbf_h=2.0)
+        events = spec.sample(
+            np.random.default_rng(0), num_nodes=500, horizon_s=1e9
+        )
+        first = {}
+        for e in events:
+            if e.kind == "node-down" and e.node not in first:
+                first[e.node] = e.time_s
+        samples = np.array(sorted(first.values()))
+        assert len(samples) == 500
+        assert _ks_exponential(samples, mtbf_s) < 2.0 / math.sqrt(len(samples))
+        assert samples.mean() == pytest.approx(mtbf_s, rel=0.15)
+
+    def test_repair_durations_match_lognormal_median(self):
+        from repro.workloads.failures import NodeOutages
+
+        spec = NodeOutages(mtbf_h=0.5, repair_median_s=1800.0, repair_sigma=0.8)
+        events = spec.sample(
+            np.random.default_rng(1), num_nodes=300, horizon_s=1e8
+        )
+        downs, repairs = {}, []
+        for e in sorted(events, key=lambda e: e.sort_key()):
+            if e.kind == "node-down":
+                downs[e.node] = e.time_s
+            elif e.kind == "node-up":
+                repairs.append(e.time_s - downs.pop(e.node))
+        repairs = np.array(repairs)
+        assert len(repairs) > 500
+        assert np.all(repairs >= spec.min_repair_s)
+        assert np.median(repairs) == pytest.approx(1800.0, rel=0.15)
+
+    def test_degradation_factors_bounded_and_closed(self):
+        from repro.workloads.failures import GpuDegradations
+
+        spec = GpuDegradations(rate_per_node_per_day=48.0, factor_range=(0.3, 0.9))
+        events = spec.sample(
+            np.random.default_rng(2), num_nodes=100, horizon_s=86400.0
+        )
+        onsets = [e for e in events if e.factor != 1.0]
+        assert onsets and all(0.3 <= e.factor <= 0.9 for e in onsets)
+        # every episode that closes, closes with a full-speed restore
+        restores = [e for e in events if e.factor == 1.0]
+        assert len(onsets) - len(restores) <= 100
+
+    def test_job_failure_rate_matches_fail_prob(self):
+        from repro.workloads.failures import JobFailures
+
+        trace = W.scenario("poisson-steady").make_trace(seed=3, num_jobs=2000)
+        spec = JobFailures(fail_prob=0.15, max_failures=2)
+        events = spec.sample(np.random.default_rng(3), trace)
+        failed_jobs = {e.job_id for e in events}
+        frac = len(failed_jobs) / len(trace)
+        # binomial 3-sigma band around 0.15 at n=2000
+        assert abs(frac - 0.15) < 3.0 * math.sqrt(0.15 * 0.85 / len(trace))
+        arrivals = {t.job_id: t.arrival_s for t in trace}
+        assert all(e.time_s >= arrivals[e.job_id] for e in events)
+        per_job = {}
+        for e in events:
+            per_job[e.job_id] = per_job.get(e.job_id, 0) + 1
+        assert max(per_job.values()) <= spec.max_failures
+
+    def test_scenario_failure_streams_deterministic(self):
+        sc = W.scenario("philly-failures")
+        cluster = sc.make_cluster(16)
+        rows = sc.make_trace(seed=5, num_jobs=30)
+        a = sc.make_failures(5, cluster, 36_000.0, trace=rows)
+        b = sc.make_failures(5, cluster, 36_000.0, trace=rows)
+        assert a == b and len(a) > 0
+        assert W.scenario("poisson-steady").make_failures(
+            5, cluster, 36_000.0
+        ) == []
