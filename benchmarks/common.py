@@ -9,6 +9,7 @@ import numpy as np
 
 from repro.core.cluster import ClusterSpec
 from repro.core.policies import (
+    FailureAwarePolicy,
     FifoPolicy,
     GavelPolicy,
     SrtfPolicy,
@@ -65,6 +66,20 @@ def build_scheduler(
         return TesseraeScheduler(
             cluster, TiresiasPolicy(profile), profile,
             enable_packing=True, migration_algorithm="node",
+        )
+    if name == "tesserae-t-fa":
+        # failure-aware Tesserae-T: straggler-drain relabel penalties,
+        # MTBF-hot domain spread for large gangs, and (in the evaluation
+        # harness) the adaptive checkpoint cadence.  On clean traces the
+        # health terms never activate and the arm is identical to
+        # tesserae-t.
+        return TesseraeScheduler(
+            cluster,
+            FailureAwarePolicy(TiresiasPolicy(profile)),
+            profile,
+            enable_packing=True,
+            migration_algorithm="node",
+            health_aware=True,
         )
     if name == "tesserae-t-nomig":
         # ablation: Tesserae packing with Gavel's basic migration policy

@@ -38,7 +38,13 @@ from repro import workloads
 from repro.core.profiler import ThroughputProfile
 from repro.core.simulator import SimConfig, Simulator
 
-DEFAULT_POLICIES = ("tesserae-t", "tiresias", "tiresias-single", "gavel")
+DEFAULT_POLICIES = (
+    "tesserae-t",
+    "tesserae-t-fa",
+    "tiresias",
+    "tiresias-single",
+    "gavel",
+)
 DEFAULT_SCENARIOS = (
     "poisson-steady",
     "diurnal-lognorm",
@@ -75,6 +81,8 @@ FAULT_KEYS = (
     "preemptions",
     "retries_total",
     "lost_iters_total",
+    "lost_work_s_total",
+    "drain_migrations",
     "failed_jobs",
     "fused_host_fallbacks",
 )
@@ -102,9 +110,12 @@ def run_arm(
     sched = build_scheduler(policy, cluster, profile)
     sched.lap_backend = backend
     sched.type_affinity = type_affinity
+    # failure-aware arms also adapt the checkpoint cadence against the
+    # observed MTBF (inert on fault-free scenarios — no outage, no change)
+    cfg = SimConfig(adaptive_checkpoint=policy.endswith("-fa"))
     t0 = time.perf_counter()
     res = Simulator(
-        cluster, trace, sched, profile, SimConfig(), failures=failures
+        cluster, trace, sched, profile, cfg, failures=failures
     ).run()
     wall = time.perf_counter() - t0
 
@@ -122,6 +133,8 @@ def run_arm(
         "preemptions": int(res.preemptions),
         "retries_total": int(res.retries_total),
         "lost_iters_total": float(res.lost_iters_total),
+        "lost_work_s_total": float(res.lost_work_s_total),
+        "drain_migrations": int(res.drain_migrations),
         "failed_jobs": sorted(res.failed_jobs),
         "fused_host_fallbacks": int(res.fused_host_fallbacks),
         "degrade_counts": {
@@ -299,7 +312,7 @@ def chaos_smoke(args) -> int:
     """CI chaos gate: one failure scenario end-to-end, gated on safety
     invariants and seeded determinism — NEVER on timing."""
     kw = dict(
-        policies=("tesserae-t", "tiresias"),
+        policies=("tesserae-t", "tesserae-t-fa", "tiresias"),
         scenarios=("node-flaky", "philly-failures"),
         num_gpus=16,
         num_jobs=args.jobs or 24,
@@ -325,6 +338,22 @@ def chaos_smoke(args) -> int:
     flaky = [a for a in doc1["arms"] if a["scenario"] == "node-flaky"]
     if flaky and all(a["faults"]["preemptions"] == 0 for a in flaky):
         failures.append("node-flaky: no arm recorded a node-down preemption")
+    # failure-aware arm activity gate: under the degradation-bearing mix
+    # (philly-failures carries GPU degradations; node-flaky is
+    # outages-only) the tesserae-t-fa arm must actually exercise the
+    # straggler-drain relabel path — an invariant, never a timing gate.
+    fa_philly = [
+        a
+        for a in doc1["arms"]
+        if a["policy"] == "tesserae-t-fa" and a["scenario"] == "philly-failures"
+    ]
+    if fa_philly and all(
+        a["faults"]["drain_migrations"] == 0 for a in fa_philly
+    ):
+        failures.append(
+            "philly-failures: tesserae-t-fa recorded zero drain migrations "
+            "(straggler-drain relabel path never activated)"
+        )
     if args.json:
         with open(args.json, "w") as f:
             json.dump(doc1, f, indent=1, sort_keys=True)

@@ -109,15 +109,21 @@ class ClusterHealth:
     ``up[k]`` — node k accepts placements; a down node is ZERO capacity
     for the scheduler (placement skips it, migration relabelling is
     penalised off it).  ``speed_factor[k]`` — the node's GPUs run at this
-    fraction of nominal speed (gpu-degrade events; truth-side only, the
-    scheduler's throughput beliefs are unchanged).  A freshly constructed
-    health object is all-up / full-speed — every consumer treats that
-    state bit-identically to "no health tracking at all" (the seed path).
+    fraction of nominal speed (gpu-degrade events; a health-aware
+    scheduler drains jobs off such nodes via the relabelling benefit).
+    ``outages`` counts node-down events observed so far; it feeds the
+    pooled empirical MTBF estimate behind MTBF-aware consolidation
+    (failure-aware policies spread large gangs across racks only when the
+    outage process is measurably hot).  A freshly constructed health
+    object is all-up / full-speed / zero-outage — every consumer treats
+    that state bit-identically to "no health tracking at all" (the seed
+    path).
     """
 
     def __init__(self, num_nodes: int):
         self.up = np.ones(num_nodes, dtype=bool)
         self.speed_factor = np.ones(num_nodes, dtype=np.float64)
+        self.outages = 0
 
     @property
     def all_up(self) -> bool:
@@ -132,10 +138,34 @@ class ClusterHealth:
         """Indices of nodes currently down (sorted ascending)."""
         return np.nonzero(~self.up)[0]
 
+    def note_outage(self) -> None:
+        """Record one node-down event (feeds :meth:`empirical_mtbf_s`)."""
+        self.outages += 1
+
+    def empirical_mtbf_s(self, now: float) -> Optional[float]:
+        """Pooled per-node MTBF estimate from the applied outage stream.
+
+        ``num_nodes * elapsed / outages`` — the maximum-likelihood rate for
+        a homogeneous Poisson outage process observed over all nodes.
+        ``None`` until the first outage (no evidence the process exists).
+        """
+        if self.outages <= 0:
+            return None
+        elapsed = max(float(now), 1.0)
+        return elapsed * self.up.shape[0] / self.outages
+
+    def hazard_hot(self, now: float, threshold_s: float) -> bool:
+        """True iff the observed outage process is hot enough (empirical
+        per-node MTBF below ``threshold_s``) to justify spreading large
+        gangs across failure domains."""
+        mtbf = self.empirical_mtbf_s(now)
+        return mtbf is not None and mtbf < threshold_s
+
     def copy(self) -> "ClusterHealth":
         out = ClusterHealth(self.up.shape[0])
         out.up = self.up.copy()
         out.speed_factor = self.speed_factor.copy()
+        out.outages = self.outages
         return out
 
 

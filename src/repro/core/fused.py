@@ -355,6 +355,7 @@ class FusedMigrationPlanner:
         num_gpus_of: Dict[int, int],
         tie_break: bool = False,
         down_nodes: Optional[np.ndarray] = None,
+        speed_factor: Optional[np.ndarray] = None,
     ) -> MigrationResult:
         t0 = time.perf_counter()
         self.last_fallback_reason = None
@@ -365,8 +366,16 @@ class FusedMigrationPlanner:
         tb_pair = _tb_scale(kl, kl) if tie_break else 0.0
         tb_node = _tb_scale(kc, kc) if tie_break else 0.0
 
+        # Health terms enter the fused program EXACTLY as the host planner
+        # computes them: the same _relabel_penalties matrix (down-node
+        # domination, straggler-drain half-units, type/rack terms) is
+        # scaled and added to the in-program node cost, and its magnitude
+        # counts against the same f32 mantissa budget below — so fused
+        # plans with health terms on stay bit-identical to the host path.
         occupied_logical = (new_logical.slots != EMPTY).any(axis=(1, 2))
-        pen = _relabel_penalties(cluster, down_nodes, occupied_logical)
+        pen = _relabel_penalties(
+            cluster, down_nodes, occupied_logical, speed_factor
+        )
         pen_max = 0.0 if pen is None else float(pen.max())
 
         # f32 exactness budget: the largest scaled node-cost magnitude
@@ -381,7 +390,9 @@ class FusedMigrationPlanner:
             self.stats["fused_budget_fallbacks"] += 1
             self.last_fallback_reason = "fused-budget"
             self.invalidate()
-            return self._host(prev, new_logical, num_gpus_of, tie_break, down_nodes)
+            return self._host(
+                prev, new_logical, num_gpus_of, tie_break, down_nodes, speed_factor
+            )
 
         common = prev.job_ids() & new_logical.job_ids()
         pi = prev.restricted_to(common).slots.astype(np.int32)
@@ -442,7 +453,9 @@ class FusedMigrationPlanner:
             self.stats["fused_nonconverged_fallbacks"] += 1
             self.last_fallback_reason = "fused-nonconverged"
             self.invalidate()
-            return self._host(prev, new_logical, num_gpus_of, tie_break, down_nodes)
+            return self._host(
+                prev, new_logical, num_gpus_of, tie_break, down_nodes, speed_factor
+            )
 
         # cache stays device-resident for next round's diff / warm start
         self._cache = (out[8], out[9], out[5], out[6], out[7])
@@ -464,7 +477,13 @@ class FusedMigrationPlanner:
         )
 
     def _host(
-        self, prev, new_logical, num_gpus_of, tie_break, down_nodes=None
+        self,
+        prev,
+        new_logical,
+        num_gpus_of,
+        tie_break,
+        down_nodes=None,
+        speed_factor=None,
     ) -> MigrationResult:
         res = plan_migration(
             prev,
@@ -474,6 +493,7 @@ class FusedMigrationPlanner:
             backend="auto",
             tie_break=tie_break,
             down_nodes=down_nodes,
+            speed_factor=speed_factor,
         )
         return MigrationResult(
             res.physical_plan,

@@ -65,6 +65,11 @@ class JobState:
     ckpt_iters: float = 0.0
     #: ``executed_time`` at the last checkpoint (drives the interval).
     ckpt_executed: float = 0.0
+    #: ``attained_service`` at the last checkpoint.  A crash rewinds the
+    #: LAS metric here too — the surviving checkpoint is all the service
+    #: the job actually keeps, so Tiresias must not demote a crash victim
+    #: for work that was lost.
+    ckpt_service: float = 0.0
     #: cumulative iterations discarded by crash rollbacks.
     lost_iters: float = 0.0
     #: retry budget exhausted — terminally failed, never requeued.

@@ -87,11 +87,20 @@ def pairwise_migration_cost(
 #: auction's integer quantisation exact (the cost scale is always even).
 CROSS_RACK_COST = 0.5
 
+#: Straggler-drain weight: a fully-degraded node (speed 0) charges this many
+#: matching-cost units PER NODE GPU for hosting an occupied logical row, so
+#: draining a whole node's worth of jobs (~``gpus_per_node`` half-migrations
+#: in and out) is worth it whenever the capacity loss exceeds the move.
+#: Partial degradation scales linearly and is rounded to multiples of 1/2,
+#: keeping the auction's integer quantisation exact (cost scale is even).
+STRAGGLER_DRAIN_COST = 1.0
+
 
 def _relabel_penalties(
     cluster,
     down_nodes: Optional[np.ndarray] = None,
     occupied_logical: Optional[np.ndarray] = None,
+    speed_factor: Optional[np.ndarray] = None,
 ) -> Optional[np.ndarray]:
     """(kc, kc) additive node-relabel penalties for heterogeneous / racked
     / partially-down clusters: ``pen[k, l]`` is added to the cost of
@@ -111,6 +120,14 @@ def _relabel_penalties(
       feasible and cheaper — health-aware placement left down nodes'
       logical rows empty).  Empty logical rows relabel onto down nodes
       freely, which keeps the assignment square and feasible.
+    * A DEGRADED physical node (``speed_factor[k] < 1``) charges a
+      *finite* drain penalty proportional to its capacity loss
+      (:data:`STRAGGLER_DRAIN_COST` units per node GPU at 100%
+      degradation) for hosting any occupied logical row.  Unlike the
+      down-node term this competes with real matching costs: the optimum
+      drains jobs off stragglers exactly when spare healthy capacity
+      exists and the move is cheaper than the penalty — a saturated
+      cluster keeps running slow rather than thrash.
 
     Returns ``None`` for healthy homogeneous single-rack clusters — the
     seed path, where the node cost matrix is untouched (bit-for-bit).
@@ -122,7 +139,12 @@ def _relabel_penalties(
         if down_nodes is None
         else np.asarray(sorted(int(n) for n in down_nodes), dtype=np.int64)
     )
-    if not hetero and not racked and len(downs) == 0:
+    slow = None
+    if speed_factor is not None:
+        sf = np.asarray(speed_factor, dtype=np.float64)
+        if (sf != 1.0).any():
+            slow = sf
+    if not hetero and not racked and len(downs) == 0 and slow is None:
         return None
     kc = cluster.num_nodes
     pen = np.zeros((kc, kc), dtype=np.float64)
@@ -133,6 +155,19 @@ def _relabel_penalties(
     if racked:
         racks = np.array([cluster.rack_of(i) for i in range(kc)])
         pen += CROSS_RACK_COST * (racks[:, None] != racks[None, :])
+    if slow is not None:
+        occ = (
+            np.ones(kc, dtype=bool)
+            if occupied_logical is None
+            else np.asarray(occupied_logical, dtype=bool)
+        )
+        # round UP to half-units so every drain penalty stays on the
+        # auction's integer grid after scaling (scale is always even)
+        loss = np.clip(1.0 - slow, 0.0, 1.0)
+        half_units = np.ceil(
+            loss * 2.0 * STRAGGLER_DRAIN_COST * cluster.gpus_per_node
+        )
+        pen += (0.5 * half_units)[:, None] * occ[None, :]
     if len(downs):
         down_mask = np.zeros(kc, dtype=bool)
         down_mask[downs] = True
@@ -208,6 +243,7 @@ def plan_migration(
     context: Optional[MatchContext] = None,
     tie_break: bool = False,
     down_nodes: Optional[np.ndarray] = None,
+    speed_factor: Optional[np.ndarray] = None,
 ) -> MigrationResult:
     """Compute the relabelling that minimises migrations, then apply it to
     the *full* new plan (jobs unique to one round are excluded from the cost
@@ -234,6 +270,10 @@ def plan_migration(
     solver-independent.  ``down_nodes`` marks failed physical nodes: the
     relabelling is penalised off them (see :func:`_relabel_penalties`),
     so no occupied logical row is ever renamed onto a dead node.
+    ``speed_factor`` (per-physical-node, from ``ClusterHealth``) adds the
+    finite straggler-drain term: degraded nodes are drained through the
+    same matching objective whenever healthy spare capacity makes the
+    move worthwhile.
     """
     t0 = time.perf_counter()
     cluster = prev.cluster
@@ -254,7 +294,9 @@ def plan_migration(
         flat_i = pi.slots.reshape(-1, MAX_PACK)
         flat_j = pj.slots.reshape(-1, MAX_PACK)
         cost = pairwise_migration_cost(flat_i, flat_j, weights)
-        pen = _relabel_penalties(cluster, down_nodes, occupied_logical)
+        pen = _relabel_penalties(
+            cluster, down_nodes, occupied_logical, speed_factor
+        )
         if pen is not None:
             # expand node-level penalties to every (physical, logical) GPU
             # pair: each relabelled GPU's state crosses the boundary
@@ -320,7 +362,9 @@ def plan_migration(
         tie_break=tie_break,
     )
     node_cost = (res.total_cost / scale).reshape(kc, kc)
-    pen = _relabel_penalties(cluster, down_nodes, occupied_logical)
+    pen = _relabel_penalties(
+        cluster, down_nodes, occupied_logical, speed_factor
+    )
     if pen is not None:
         node_cost = node_cost + pen
     # res.col_of[b, u] = v  ->  gpu_assign[.., v] = u

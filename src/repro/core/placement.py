@@ -47,6 +47,7 @@ def place_without_packing(
     sorted_jobs: Sequence[JobState],
     type_affinity: bool = True,
     down_nodes: Optional[Iterable[int]] = None,
+    spread_domains: bool = False,
 ) -> Tuple[PlacementPlan, List[JobState], List[JobState]]:
     """Greedy consolidated placement of priority-sorted jobs.
 
@@ -55,6 +56,11 @@ def place_without_packing(
     job can fill a hole a larger, higher-priority job could not use.
     ``down_nodes`` are zero capacity: no hole on them is ever considered,
     so a down node's logical rows stay empty in the returned plan.
+    ``spread_domains`` (failure-aware policies, racked clusters only)
+    reorders each multi-node gang's candidate empty nodes breadth-first
+    across racks, so a gang spans the maximum number of failure domains a
+    single outage can only clip — instead of the default packing order
+    that concentrates it in one rack.  Off (default) = seed behaviour.
     """
     plan = PlacementPlan(cluster)
     placed: List[JobState] = []
@@ -118,6 +124,21 @@ def place_without_packing(
                     if pure is not None
                     else empty_nodes[np.lexsort((empty_nodes, -esp))]
                 )
+            if spread_domains and cluster.has_topology and need_nodes > 1:
+                # breadth-first across racks: take each rack's first empty
+                # node before any rack's second, preserving the incoming
+                # order (type-pure / best-speed) within each rack, so the
+                # prefix empty_nodes[:need_nodes] spans max failure domains
+                racks = np.array(
+                    [cluster.rack_of(int(n)) for n in empty_nodes]
+                )
+                within = np.zeros(len(empty_nodes), dtype=np.int64)
+                seen: Dict[int, int] = {}
+                for i, r in enumerate(racks.tolist()):
+                    within[i] = seen.get(r, 0)
+                    seen[r] = within[i] + 1
+                order = np.lexsort((np.arange(len(empty_nodes)), racks, within))
+                empty_nodes = empty_nodes[order]
             gpus = []
             for node in empty_nodes[:need_nodes]:
                 gpus.extend(_take_free_gpus(plan, int(node), gpn))

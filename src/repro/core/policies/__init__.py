@@ -12,6 +12,7 @@ from repro.core.policies.simple import FifoPolicy, SrtfPolicy
 from repro.core.policies.tiresias import TiresiasPolicy
 from repro.core.policies.themis import ThemisFtfPolicy
 from repro.core.policies.gavel import GavelPolicy, PopPolicy
+from repro.core.policies.failure_aware import FailureAwarePolicy
 
 POLICIES = {
     "fifo": FifoPolicy,
@@ -30,5 +31,6 @@ __all__ = [
     "ThemisFtfPolicy",
     "GavelPolicy",
     "PopPolicy",
+    "FailureAwarePolicy",
     "POLICIES",
 ]

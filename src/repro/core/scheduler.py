@@ -121,6 +121,16 @@ class TesseraeScheduler:
         decide_deadline_s: Optional[float] = None,
         # injectable clock for deterministic ladder tests.
         clock: Callable[[], float] = time.perf_counter,
+        # failure-aware placement: fold ClusterHealth into the benefit
+        # terms — degraded nodes gain the straggler-drain relabel penalty
+        # (migration._relabel_penalties, host AND fused paths), and when
+        # the observed outage process is hot (empirical per-node MTBF
+        # below `spread_mtbf_h` hours) large gangs are spread across
+        # failure domains (racks) in placement and prioritised by the
+        # policy's spread hook.  Off by default — with the knob off, or
+        # with all nodes healthy, decide() is bit-identical to the seed.
+        health_aware: bool = False,
+        spread_mtbf_h: float = 12.0,
     ):
         self.cluster = cluster
         self.policy = policy
@@ -136,6 +146,8 @@ class TesseraeScheduler:
         self.fanout_shards = fanout_shards
         self.decide_deadline_s = decide_deadline_s
         self._clock = clock
+        self.health_aware = health_aware
+        self.spread_mtbf_h = spread_mtbf_h
         self._fused_planner = None  # lazily built FusedMigrationPlanner
         #: identity-keyed warm-start state threaded across rounds: the
         #: packing matching (keyed by job ids), the Algorithm-2 node-pair
@@ -163,6 +175,21 @@ class TesseraeScheduler:
         down: Optional[np.ndarray] = None
         if health is not None and not health.all_up:
             down = health.down_nodes()
+        # failure-aware terms (all None/False unless the knob is on AND the
+        # health object carries real signal — the seed path is untouched):
+        # `speed` feeds the straggler-drain relabel penalty, `spread`
+        # switches gang placement to breadth-first across racks, and the
+        # policy's spread hook (if it has one) boosts large gangs so the
+        # spread actually gets first pick of the empty nodes.
+        speed: Optional[np.ndarray] = None
+        spread = False
+        if self.health_aware and health is not None:
+            if health.degraded:
+                speed = health.speed_factor
+            hot = health.hazard_hot(now, self.spread_mtbf_h * 3600.0)
+            spread = hot and self.cluster.has_topology
+            if hasattr(self.policy, "set_spread_hot"):
+                self.policy.set_spread_hot(hot)
 
         t_start = self._clock()
         t0 = time.perf_counter()
@@ -171,7 +198,11 @@ class TesseraeScheduler:
 
         t0 = time.perf_counter()
         plan, placed, pending = place_without_packing(
-            self.cluster, ordered, type_affinity=self.type_affinity, down_nodes=down
+            self.cluster,
+            ordered,
+            type_affinity=self.type_affinity,
+            down_nodes=down,
+            spread_domains=spread,
         )
         timings["place_s"] = time.perf_counter() - t0
 
@@ -237,7 +268,12 @@ class TesseraeScheduler:
                     )
                 fused_before = dict(self._fused_planner.stats)
                 migration = self._fused_planner.plan(
-                    prev_plan, plan, gmap, tie_break=self.tie_break, down_nodes=down
+                    prev_plan,
+                    plan,
+                    gmap,
+                    tie_break=self.tie_break,
+                    down_nodes=down,
+                    speed_factor=speed,
                 )
                 if self._fused_planner.last_fallback_reason is not None:
                     degrade = self._fused_planner.last_fallback_reason
@@ -251,6 +287,7 @@ class TesseraeScheduler:
                     context=self.match_context,
                     tie_break=self.tie_break,
                     down_nodes=down,
+                    speed_factor=speed,
                 )
             plan = migration.physical_plan
         timings["migrate_s"] = time.perf_counter() - t0

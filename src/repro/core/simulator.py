@@ -28,11 +28,13 @@ checkpoint-interval lost-work model), a retry is consumed and the job
 re-enters the queue after an exponential backoff; a job that exhausts its
 retry budget fails terminally.  Voluntary preemptions and migrations DO
 checkpoint (the scheduler drains gracefully), so only genuine crashes
-lose work.  GPU degradations are truth-side only: the job's real rate
-drops to the slowest touched node's ``speed_factor`` while the
-scheduler's beliefs are unchanged (an undetected straggler).  With no
-failure events every fault code path is inert and the simulation is
-bit-identical to the failure-free seed.
+lose work.  GPU degradations slow the job's real rate to the slowest
+touched node's ``speed_factor``; a health-BLIND scheduler's beliefs are
+unchanged (an undetected straggler), while a health-aware one
+(``health_aware=True``) sees the speed factors and drains jobs off
+degraded nodes through the relabelling benefit.  With no failure events
+every fault code path is inert and the simulation is bit-identical to
+the failure-free seed.
 
 **Crash-resume**: ``run(stop_after_rounds=k)`` pauses the loop with all
 round state retained; :meth:`Simulator.save_state` /
@@ -106,6 +108,17 @@ class SimConfig:
     #: rolls progress back to the last checkpoint.  Voluntary migrations
     #: and graceful preemptions always checkpoint first.
     checkpoint_interval_s: float = 1800.0
+    #: adapt the periodic cadence per job against the lost-work integral:
+    #: once the outage process has been observed (``ClusterHealth``'s
+    #: empirical MTBF exists), each job checkpoints at Young's interval
+    #: ``sqrt(2 * delta * MTBF_job)`` where ``delta`` is half the job's
+    #: migration overhead and ``MTBF_job`` the pooled per-node MTBF divided
+    #: by the nodes the job spans (any node failing kills the gang).  The
+    #: result is clamped to ``[round_duration_s, checkpoint_interval_s]``
+    #: — the sim charges no checkpoint-write cost, so the lower clamp is
+    #: what bounds the cadence's aggressiveness.  Off by default (the seed
+    #: fixed-interval behaviour).
+    adaptive_checkpoint: bool = False
 
 
 @dataclasses.dataclass
@@ -141,6 +154,12 @@ class SimResult:
     failed_jobs: List[int] = dataclasses.field(default_factory=list)
     #: failure-model events actually applied during the run.
     fault_events_applied: int = 0
+    #: seconds of executed time discarded by crash rollbacks (the
+    #: lost-work integral the adaptive checkpoint cadence minimises).
+    lost_work_s_total: float = 0.0
+    #: voluntary migrations that moved a job OFF a degraded node onto
+    #: strictly faster ones — the straggler-drain relabel penalty at work.
+    drain_migrations: int = 0
 
     @property
     def jcts(self) -> np.ndarray:
@@ -235,13 +254,18 @@ class _SimState:
     preemptions: int = 0
     retries_total: int = 0
     lost_iters: float = 0.0
+    lost_work_s: float = 0.0
+    drain_migrations: int = 0
     failed_jobs: List[int] = dataclasses.field(default_factory=list)
     prewarm_wall: float = 0.0
     prewarm_overlap: float = 0.0
 
 
-#: version tag of the simulator round-state snapshot format.
-SIM_STATE_VERSION = "tesserae-simstate-v1"
+#: version tag of the simulator round-state snapshot format.  v2 adds the
+#: per-job ``ckpt_service`` field (crash-accounting fix: LAS service is
+#: rewound with the checkpoint) plus the outage counter and drain/lost-work
+#: telemetry.
+SIM_STATE_VERSION = "tesserae-simstate-v2"
 
 #: JobState fields the snapshot round-trips (spec fields come from the
 #: trace the resuming simulator is constructed with).
@@ -260,6 +284,7 @@ _JOB_STATE_FIELDS = (
     "eligible_time",
     "ckpt_iters",
     "ckpt_executed",
+    "ckpt_service",
     "lost_iters",
     "failed",
 )
@@ -396,11 +421,20 @@ class Simulator:
                         1.0, demand / self.cluster.num_gpus
                     )
 
-                # Only pass health when it deviates from all-up: decide()
-                # treats an all-up health identically to None (tested), and
+                # Only pass health when it carries signal the scheduler
+                # can act on: a node down (any scheduler routes around
+                # it), or — for health-AWARE schedulers only — degraded
+                # speeds (straggler drain) / an observed outage history
+                # (MTBF hazard for domain spread, which must stay visible
+                # after nodes recover).  decide() treats an all-up,
+                # full-speed health identically to None (tested), and
                 # omitting the kwarg keeps pre-fault decide() overrides
                 # (e.g. differential-shadow schedulers) working unchanged.
-                if st.health is not None and not st.health.all_up:
+                health_signal = not st.health.all_up or (
+                    getattr(self.scheduler, "health_aware", False)
+                    and (st.health.degraded or st.health.outages > 0)
+                )
+                if st.health is not None and health_signal:
                     decision = self.scheduler.decide(
                         active,
                         st.now,
@@ -425,7 +459,7 @@ class Simulator:
 
                 self._advance_round(
                     decision, st.states, st.now, st.prev_gpus, st.num_gpus_of,
-                    st.health,
+                    st.health, sim_state=st,
                 )
 
                 plan_map = decision.plan.job_gpu_map()
@@ -514,6 +548,8 @@ class Simulator:
             lost_iters_total=st.lost_iters,
             failed_jobs=list(st.failed_jobs),
             fault_events_applied=st.events_applied,
+            lost_work_s_total=st.lost_work_s,
+            drain_migrations=st.drain_migrations,
         )
         self._state = None
         return result
@@ -533,6 +569,7 @@ class Simulator:
                 if st.health.up[ev.node]:
                     st.health.up[ev.node] = False
                     st.health.speed_factor[ev.node] = 1.0
+                    st.health.note_outage()
                     self._evict_node(st, ev.node)
                     self.scheduler.invalidate_node(ev.node)
             elif ev.kind == NODE_UP:
@@ -543,8 +580,18 @@ class Simulator:
                     # stale the moment placement starts using it again
                     self.scheduler.invalidate_node(ev.node)
             elif ev.kind == GPU_DEGRADE:
-                if st.health.up[ev.node]:
+                if st.health.up[ev.node] and st.health.speed_factor[
+                    ev.node
+                ] != float(ev.factor):
                     st.health.speed_factor[ev.node] = float(ev.factor)
+                    # health-aware benefits fold the speed factor into the
+                    # relabel penalties, so the node's cached matching
+                    # identities (and fused occupancy rows) are stale the
+                    # same way a down/up transition makes them — route
+                    # degrades AND recoveries (factor back to 1.0) through
+                    # the same targeted invalidation; untouched nodes'
+                    # warm state survives
+                    self.scheduler.invalidate_node(ev.node)
             elif ev.kind == JOB_FAIL:
                 s = st.states.get(ev.job_id)
                 # only a RUNNING job can crash; a queued/done job is
@@ -567,6 +614,15 @@ class Simulator:
         s.iters_done = s.ckpt_iters
         s.lost_iters += lost
         st.lost_iters += lost
+        # the lost work is gone from EVERY progress metric, not just
+        # iters_done: un-rewound, Tiresias' LAS queues would charge the
+        # crash victim for service it no longer has (demoting it behind
+        # never-crashed peers with identical surviving progress) and the
+        # periodic-checkpoint cadence would fire immediately on
+        # re-placement (executed_time - ckpt_executed still >= interval)
+        st.lost_work_s += max(0.0, s.executed_time - s.ckpt_executed)
+        s.attained_service = s.ckpt_service
+        s.executed_time = s.ckpt_executed
         s.gpus = frozenset()
         s.packed_with = None
         s.migration_debt = 0.0
@@ -606,6 +662,32 @@ class Simulator:
         slowest = min(types, key=lambda t: (GPU_TYPES[t].speed, t))
         return self.true_profile.for_gpu_type(slowest)
 
+    def _ckpt_interval_s(
+        self, s: JobState, health: Optional[ClusterHealth], now: float
+    ) -> float:
+        """Per-job periodic-checkpoint cadence for this round.
+
+        Fixed ``checkpoint_interval_s`` unless ``adaptive_checkpoint`` is
+        on AND the outage process has been observed; then Young's interval
+        ``sqrt(2 * delta * MTBF_job)`` with ``delta`` = half the job's
+        migration overhead (the checkpoint write is the save half of the
+        save+load+warmup cost, Fig. 3) and the job's effective MTBF the
+        pooled per-node estimate divided by the nodes it spans (a gang
+        dies when ANY of its nodes does).  Clamped to
+        ``[round_duration_s, checkpoint_interval_s]``.
+        """
+        cfg = self.config
+        base = cfg.checkpoint_interval_s
+        if not cfg.adaptive_checkpoint or health is None:
+            return base
+        mtbf = health.empirical_mtbf_s(now)
+        if mtbf is None:
+            return base
+        nodes_spanned = len({self.cluster.node_of(g) for g in s.gpus}) or 1
+        delta = 0.5 * migration_overhead_s(s.spec.model)
+        young = (2.0 * delta * mtbf / nodes_spanned) ** 0.5
+        return min(base, max(cfg.round_duration_s, young))
+
     def _advance_round(
         self,
         decision: RoundDecision,
@@ -614,6 +696,7 @@ class Simulator:
         prev_gpus: Dict[int, frozenset],
         num_gpus_of: Dict[int, int],
         health: Optional[ClusterHealth] = None,
+        sim_state: Optional[_SimState] = None,
     ) -> None:
         cfg = self.config
         plan_map = decision.plan.job_gpu_map()
@@ -652,6 +735,20 @@ class Simulator:
                     # only crashes lose work
                     s.ckpt_iters = s.iters_done
                     s.ckpt_executed = s.executed_time
+                    s.ckpt_service = s.attained_service
+                    if sim_state is not None and health is not None:
+                        # drain telemetry: did this move leave a degraded
+                        # node for strictly faster ones?
+                        prev_speed = min(
+                            health.speed_factor[self.cluster.node_of(g)]
+                            for g in prev
+                        )
+                        new_speed = min(
+                            health.speed_factor[self.cluster.node_of(g)]
+                            for g in gpus
+                        )
+                        if prev_speed < 1.0 and new_speed > prev_speed:
+                            sim_state.drain_migrations += 1
             s.gpus = gpus
 
             # heterogeneous clusters: the job's TRUE rate (and packing
@@ -699,10 +796,11 @@ class Simulator:
                 # reads it): cadence measured in executed time
                 if (
                     s.executed_time - s.ckpt_executed
-                    >= cfg.checkpoint_interval_s
+                    >= self._ckpt_interval_s(s, health, now)
                 ):
                     s.ckpt_iters = s.iters_done
                     s.ckpt_executed = s.executed_time
+                    s.ckpt_service = s.attained_service
 
         # jobs not in the plan keep waiting (attain no service); a job the
         # scheduler just released drained gracefully, i.e. it checkpointed
@@ -711,6 +809,7 @@ class Simulator:
                 if s.gpus:
                     s.ckpt_iters = s.iters_done
                     s.ckpt_executed = s.executed_time
+                    s.ckpt_service = s.attained_service
                 s.gpus = frozenset()
 
     # ------------------------------------------------------------------ #
@@ -745,6 +844,9 @@ class Simulator:
             "preemptions": st.preemptions,
             "retries_total": st.retries_total,
             "lost_iters": st.lost_iters,
+            "lost_work_s": st.lost_work_s,
+            "drain_migrations": st.drain_migrations,
+            "health_outages": st.health.outages,
             "failed_jobs": st.failed_jobs,
             "degrade_rounds": st.degrade_rounds,
             "overhead": st.overhead,
@@ -793,6 +895,7 @@ class Simulator:
             health = ClusterHealth(self.cluster.num_nodes)
             health.up = np.asarray(z["health_up"], bool).copy()
             health.speed_factor = np.asarray(z["health_speed"], np.float64).copy()
+            health.outages = int(meta["health_outages"])
             prev_plan = None
             if meta["has_prev_plan"]:
                 prev_plan = PlacementPlan(
@@ -825,6 +928,8 @@ class Simulator:
                 preemptions=int(meta["preemptions"]),
                 retries_total=int(meta["retries_total"]),
                 lost_iters=float(meta["lost_iters"]),
+                lost_work_s=float(meta["lost_work_s"]),
+                drain_migrations=int(meta["drain_migrations"]),
                 failed_jobs=[int(j) for j in meta["failed_jobs"]],
                 prewarm_wall=float(meta["prewarm_wall"]),
                 prewarm_overlap=float(meta["prewarm_overlap"]),

@@ -64,6 +64,16 @@ def homogeneous_cluster(num_gpus: int, gpus_per_node: int = 4) -> ClusterSpec:
     return ClusterSpec(num_gpus // gpus_per_node, gpus_per_node)
 
 
+def racked_cluster(
+    num_gpus: int, gpus_per_node: int = 4, nodes_per_rack: int = 2
+) -> ClusterSpec:
+    """Homogeneous cluster with a rack topology (rack = failure domain):
+    the shape the failure scenarios run on, so domain-spread placement
+    and rack-aware relabelling have real domains to work with."""
+    base = homogeneous_cluster(num_gpus, gpus_per_node)
+    return dataclasses.replace(base, nodes_per_rack=nodes_per_rack)
+
+
 def mixed_a100_v100_cluster(num_gpus: int, gpus_per_node: int = 4) -> ClusterSpec:
     """Half A100 / half V100 nodes, one rack per type — the Gavel-style
     heterogeneity regime where packing feasibility (16 vs 40 GB HBM) and
@@ -267,6 +277,7 @@ register_scenario(
             "cache-invalidation paths"
         ),
         kind="synthetic",
+        cluster_fn=racked_cluster,
         failure_recipe=FailureRecipe(
             nodes=NodeOutages(
                 mtbf_h=1.0, repair_median_s=900.0, repair_sigma=0.6
@@ -291,6 +302,7 @@ register_scenario(
             "failures) — the end-to-end graceful-degradation regime"
         ),
         kind="synthetic",
+        cluster_fn=racked_cluster,
         failure_recipe=FailureRecipe.helios_like(),
         trace_fn=_synthetic(
             TraceRecipe(

@@ -14,7 +14,12 @@
 3. Gate the optional ``hypothesis`` dependency: in hermetic containers
    where it cannot be installed, install the API-compatible fallback from
    :mod:`repro.testing.hypothesis_fallback` so the 4 property-test modules
-   still collect and run as seeded random property checks.
+   still collect and run as seeded random property checks.  CI installs
+   the real package from requirements.txt, so under ``CI=...`` a missing
+   hypothesis is a broken environment and the shim must NOT paper over it
+   — the import error is re-raised there (set
+   ``REPRO_ALLOW_HYPOTHESIS_FALLBACK=1`` to override, e.g. for a
+   deliberately-offline CI lane).
 """
 
 import os
@@ -33,6 +38,10 @@ if os.path.isdir(_SRC) and _SRC not in (os.path.abspath(p) for p in sys.path):
 try:  # real hypothesis wins whenever it is installed (CI installs it)
     import hypothesis  # noqa: F401
 except ImportError:
+    if os.environ.get("CI") and not os.environ.get(
+        "REPRO_ALLOW_HYPOTHESIS_FALLBACK"
+    ):
+        raise  # CI must run the real property tests, not the shim
     from repro.testing import hypothesis_fallback
 
     hypothesis_fallback.install()

@@ -32,7 +32,7 @@ from repro.core.faults import (
 from repro.core.jobs import JobSpec
 from repro.core.matching import MatchContext
 from repro.core.matching.engine import solve_lap_batched
-from repro.core.policies import TiresiasPolicy
+from repro.core.policies import FailureAwarePolicy, TiresiasPolicy
 from repro.core.profiler import ThroughputProfile
 from repro.core.scheduler import DegradeReason, TesseraeScheduler
 from repro.core.simulator import SimConfig, Simulator
@@ -94,6 +94,22 @@ def _fingerprint(res):
         "degrade": tuple(res.degrade_rounds),
         "preemptions": res.preemptions,
     }
+
+
+class _RecordingSim(Simulator):
+    """Simulator that logs every crash as ``(job_id, retries_after,
+    crash_time, eligible_time, terminal)`` so tests can pin the realised
+    backoff schedule against ``backoff_base_s * factor ** (retries-1)``."""
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self.crash_log = []
+
+    def _crash_job(self, st, s, preempt):
+        super()._crash_job(st, s, preempt)
+        self.crash_log.append(
+            (s.job_id, s.retries, st.now, s.eligible_time, s.failed)
+        )
 
 
 # --------------------------------------------------------------------------- #
@@ -188,7 +204,8 @@ class TestChaosInvariants:
     NUM_SEEDS = 200
 
     def test_chaos_invariants_bulk(self, profile):
-        totals = {"events": 0, "preempt": 0, "retries": 0, "failed": 0}
+        totals = {"events": 0, "preempt": 0, "retries": 0, "failed": 0,
+                  "crashes": 0}
         for seed in range(self.NUM_SEEDS):
             rng = np.random.default_rng([seed, 0xC4A06])
             num_nodes = 2 + seed % 3
@@ -234,6 +251,13 @@ class TestChaosInvariants:
                     assert len(gpus) == s.num_gpus, (
                         f"seed {seed}: gang of job {jid} broken"
                     )
+                    # backoff eligibility: the decision was taken at
+                    # now - round (the hook fires after the clock advanced);
+                    # a job still inside its backoff window is never placed
+                    assert s.eligible_time <= now - cfg.round_duration_s + 1e-9, (
+                        f"seed {seed} round {round_idx}: job {jid} placed "
+                        f"before its backoff expired"
+                    )
                     for g in gpus:
                         node = cluster.node_of(g)
                         assert health.up[node], (
@@ -249,10 +273,24 @@ class TestChaosInvariants:
                         f"seed {seed}: retry budget exceeded on job {s.job_id}"
                     )
 
-            res = Simulator(
+            sim = _RecordingSim(
                 cluster, trace, sched, profile, cfg,
                 failures=events, round_hook=hook,
-            ).run()
+            )
+            res = sim.run()
+
+            # realised backoff schedule: every non-terminal crash sets
+            # eligibility exactly backoff_base * factor**(retries-1) out
+            for jid, retries, t_crash, elig, failed in sim.crash_log:
+                if failed:
+                    continue
+                expected = t_crash + cfg.backoff_base_s * (
+                    cfg.backoff_factor ** (retries - 1)
+                )
+                assert elig == pytest.approx(expected), (
+                    f"seed {seed}: job {jid} backoff #{retries} off-schedule"
+                )
+            totals["crashes"] += len(sim.crash_log)
 
             # no job lost: everything completed or is a terminal failure
             for jid, s in res.jobs.items():
@@ -275,6 +313,7 @@ class TestChaosInvariants:
         assert totals["preempt"] > 0
         assert totals["failed"] > 0
         assert totals["retries"] >= totals["preempt"]
+        assert totals["crashes"] == totals["retries"]
 
 
 # --------------------------------------------------------------------------- #
@@ -729,3 +768,486 @@ class TestCostValidation:
         costs = np.full((1, 2, 2), np.nan)
         with pytest.raises(ValueError, match="4 invalid entries"):
             solve_lap_batched(costs, backend="numpy")
+
+
+# --------------------------------------------------------------------------- #
+# Crash accounting: every progress metric rewinds to the checkpoint
+# --------------------------------------------------------------------------- #
+class TestCrashAccounting:
+    """A crash must rewind attained_service and executed_time to their
+    checkpoint-time values — not just iters_done — so LAS priority and
+    the periodic-checkpoint cadence see only the surviving progress."""
+
+    def _crashed_state(self, profile):
+        from repro.core.jobs import JobState
+        from repro.core.simulator import _SimState
+
+        cluster = ClusterSpec(2, 4)
+        spec = JobSpec(job_id=0, model="resnet50", num_gpus=2,
+                       total_iters=1e9, arrival_time=0.0)
+        s = JobState(spec=spec)
+        s.iters_done = 100.0
+        s.attained_service = 4000.0
+        s.executed_time = 2000.0
+        s.ckpt_iters = 60.0
+        s.ckpt_executed = 1200.0
+        s.ckpt_service = 2400.0
+        s.gpus = frozenset([0, 1])
+        sim = Simulator(cluster, [spec], _scheduler(cluster, profile),
+                        profile, SimConfig(backoff_base_s=ROUND))
+        st = _SimState(states={0: s}, num_gpus_of={0: 2},
+                       health=ClusterHealth(2), now=10 * ROUND)
+        return sim, st, s
+
+    def test_rewinds_every_progress_metric(self, profile):
+        sim, st, s = self._crashed_state(profile)
+        sim._crash_job(st, s, preempt=True)
+        assert s.iters_done == 60.0
+        assert s.attained_service == 2400.0
+        assert s.executed_time == 1200.0
+        assert s.lost_iters == pytest.approx(40.0)
+        assert st.lost_iters == pytest.approx(40.0)
+        # lost-work telemetry: executed seconds beyond the checkpoint
+        assert st.lost_work_s == pytest.approx(800.0)
+        assert s.retries == 1 and s.preemptions == 1
+        assert not s.gpus and s.packed_with is None
+
+    def test_crashed_priority_equals_uncrashed_peer(self, profile):
+        """Differential regression: after the crash, Tiresias ranks the
+        victim exactly like a never-crashed job with identical surviving
+        progress (same arrival)."""
+        from repro.core.jobs import JobState
+        from repro.core.simulator import _SimState
+
+        cluster = ClusterSpec(2, 4)
+        pol = TiresiasPolicy(profile)
+        spec_v = JobSpec(job_id=0, model="resnet50", num_gpus=1,
+                         total_iters=1e9, arrival_time=0.0)
+        spec_p = JobSpec(job_id=1, model="resnet50", num_gpus=1,
+                         total_iters=1e9, arrival_time=0.0)
+        victim, peer = JobState(spec=spec_v), JobState(spec=spec_p)
+        # victim ran into LAS queue 2; its last checkpoint is in queue 1
+        victim.iters_done = 500.0
+        victim.attained_service = 7200.0
+        victim.executed_time = 7200.0
+        victim.ckpt_iters = 200.0
+        victim.ckpt_service = 3000.0
+        victim.ckpt_executed = 3000.0
+        victim.gpus = frozenset([0])
+        peer.iters_done = 200.0
+        peer.attained_service = 3000.0
+        peer.executed_time = 3000.0
+        # un-rewound, the victim would be demoted a queue below its peer
+        assert pol.sort_key(victim, 0.0, cluster) > pol.sort_key(
+            peer, 0.0, cluster
+        )
+
+        sim = Simulator(cluster, [spec_v, spec_p],
+                        _scheduler(cluster, profile), profile,
+                        SimConfig(backoff_base_s=ROUND))
+        st = _SimState(states={0: victim, 1: peer},
+                       num_gpus_of={0: 1, 1: 1},
+                       health=ClusterHealth(2), now=4 * ROUND)
+        sim._crash_job(st, victim, preempt=False)
+        assert victim.attained_service == peer.attained_service
+        assert pol.sort_key(victim, 5 * ROUND, cluster) == pol.sort_key(
+            peer, 5 * ROUND, cluster
+        )
+
+
+# --------------------------------------------------------------------------- #
+# Backoff eligibility: the idle-skip clamp and the realised schedule
+# --------------------------------------------------------------------------- #
+class TestBackoffEligibility:
+    def _one_job_sim(self, profile, backoff_base_s, fail_at, rounds=30,
+                     hook=None):
+        cluster = ClusterSpec(1, 4)
+        rate = profile.isolated("resnet50", 1, "dp")
+        spec = JobSpec(job_id=0, model="resnet50", num_gpus=1,
+                       total_iters=rate * ROUND * rounds, arrival_time=0.0)
+        cfg = SimConfig(max_retries=3, backoff_base_s=backoff_base_s,
+                        max_time_s=400 * ROUND)
+        sched = _scheduler(cluster, profile)
+        events = [FailureEvent(t, JOB_FAIL, job_id=0) for t in fail_at]
+        return _RecordingSim(cluster, [spec], sched, profile, cfg,
+                             failures=events, round_hook=hook)
+
+    @pytest.mark.parametrize("mult", [10.0, 9.5])
+    def test_idle_skip_wakes_exactly_at_backoff_expiry(self, profile, mult):
+        """With nothing else to run, the simulator must skip straight to
+        the first round boundary at/after the backoff expiry — never a
+        round early (the job is not yet eligible) and never later."""
+        decide_times = []
+
+        def hook(round_idx, now, decision, states, health):
+            decide_times.append(now - ROUND)  # hook fires after now += round
+
+        sim = self._one_job_sim(profile, mult * ROUND, [ROUND], hook=hook)
+        sim.run()
+        assert len(sim.crash_log) == 1
+        _, _, t_crash, elig, failed = sim.crash_log[0]
+        assert not failed and t_crash == ROUND
+        assert elig == pytest.approx(ROUND + mult * ROUND)
+        wake = ROUND * np.ceil(elig / ROUND)
+        post_crash = [t for t in decide_times if t > 0.0]
+        assert post_crash[0] == pytest.approx(wake)
+        assert all(t >= wake - 1e-9 for t in post_crash)
+
+    def test_realised_backoff_sequence_is_geometric(self, profile):
+        """Four crashes: three geometric backoffs (1x, 2x, 4x base),
+        then the retry budget is exhausted and the job fails terminally."""
+        fail_at = [1.5 * ROUND, 8 * ROUND, 16 * ROUND, 30 * ROUND]
+        sim = self._one_job_sim(profile, ROUND, fail_at, rounds=60)
+        res = sim.run()
+        assert len(sim.crash_log) == 4
+        deltas = [elig - t for (_, _, t, elig, _) in sim.crash_log[:3]]
+        assert deltas == [ROUND, 2 * ROUND, 4 * ROUND]
+        assert [r for (_, r, _, _, _) in sim.crash_log] == [1, 2, 3, 4]
+        assert sim.crash_log[3][4] is True  # terminal
+        assert res.jobs[0].failed and 0 in res.failed_jobs
+
+
+# --------------------------------------------------------------------------- #
+# GPU_DEGRADE routes through the scheduler's targeted invalidation
+# --------------------------------------------------------------------------- #
+class TestDegradeInvalidation:
+    def test_degrade_and_recovery_invalidate_once_each(self, profile):
+        cluster = ClusterSpec(3, 4)
+        trace = _tiny_trace(profile, 8, seed=13, max_rounds=10)
+        sched = _scheduler(cluster, profile)
+        calls = []
+        orig = sched.invalidate_node
+
+        def spy(node):
+            calls.append(node)
+            return orig(node)
+
+        sched.invalidate_node = spy
+        events = [
+            FailureEvent(2 * ROUND, GPU_DEGRADE, node=1, factor=0.5),
+            # same factor again: no state change, no invalidation
+            FailureEvent(4 * ROUND, GPU_DEGRADE, node=1, factor=0.5),
+            # recovery back to full speed invalidates again
+            FailureEvent(6 * ROUND, GPU_DEGRADE, node=1, factor=1.0),
+        ]
+        Simulator(cluster, trace, sched, profile, SimConfig(),
+                  failures=events).run()
+        assert calls == [1, 1]
+
+    def test_untouched_nodes_warm_state_survives(self, profile):
+        """The degrade-driven invalidation is targeted: matching memo
+        state for pairs not touching the degraded node keeps hitting."""
+        from repro.core.jobs import JobState
+
+        cluster = ClusterSpec(3, 4)
+        trace = _tiny_trace(profile, 10, seed=14)
+        states = [JobState(spec=s) for s in trace]
+        sched = _scheduler(cluster, profile)
+        prev = None
+        for rnd in range(3):
+            prev = sched.decide(states, rnd * ROUND, prev).plan
+        assert sched.invalidate_node(1) > 0
+        before = sched.match_context.stats["memo_instances"]
+        sched.decide(states, 3 * ROUND, prev)
+        assert sched.match_context.stats["memo_instances"] > before
+
+
+# --------------------------------------------------------------------------- #
+# Tentpole: failure-aware placement through the matching layer
+# --------------------------------------------------------------------------- #
+class TestFailureAwarePlacement:
+    def test_health_blind_ignores_degradation(self, profile):
+        """knob off: degraded speeds and outage history change NOTHING —
+        plans stay bit-identical to a health-free decide()."""
+        from repro.core.jobs import JobState
+
+        cluster = ClusterSpec(2, 4)
+        trace = _tiny_trace(profile, 8, seed=15)
+        a = _scheduler(cluster, profile)
+        b = _scheduler(cluster, profile)
+        sa = [JobState(spec=s) for s in trace]
+        sb = [JobState(spec=s) for s in trace]
+        health = ClusterHealth(2)
+        health.speed_factor[0] = 0.5
+        health.note_outage()
+        prev_a = prev_b = None
+        for rnd in range(3):
+            da = a.decide(sa, rnd * ROUND, prev_a)
+            db = b.decide(sb, rnd * ROUND, prev_b, health=health)
+            assert np.array_equal(da.plan.slots, db.plan.slots)
+            prev_a, prev_b = da.plan, db.plan
+
+    def test_health_aware_all_healthy_is_bit_identical(self, profile):
+        """knob on, pristine cluster: the health terms never activate and
+        the plans are bit-identical to the seed path."""
+        from repro.core.jobs import JobState
+
+        cluster = ClusterSpec(2, 4)
+        trace = _tiny_trace(profile, 8, seed=16)
+        a = _scheduler(cluster, profile)
+        b = _scheduler(cluster, profile, health_aware=True)
+        sa = [JobState(spec=s) for s in trace]
+        sb = [JobState(spec=s) for s in trace]
+        prev_a = prev_b = None
+        for rnd in range(3):
+            da = a.decide(sa, rnd * ROUND, prev_a)
+            db = b.decide(sb, rnd * ROUND, prev_b, health=ClusterHealth(2))
+            assert np.array_equal(da.plan.slots, db.plan.slots)
+            prev_a, prev_b = da.plan, db.plan
+
+    def test_straggler_drain_moves_job_to_spare_capacity(self, profile):
+        from repro.core.jobs import JobState
+
+        cluster = ClusterSpec(2, 4)
+        spec = JobSpec(job_id=0, model="resnet50", num_gpus=4,
+                       total_iters=1e9, arrival_time=0.0)
+        health = ClusterHealth(2)
+        health.speed_factor[0] = 0.4
+
+        aware = _scheduler(cluster, profile, health_aware=True)
+        states = [JobState(spec=spec)]
+        d0 = aware.decide(states, 0.0, None)
+        assert {cluster.node_of(g) for g in d0.plan.job_gpu_map()[0]} == {0}
+        d1 = aware.decide(states, ROUND, d0.plan, health=health)
+        assert {cluster.node_of(g) for g in d1.plan.job_gpu_map()[0]} == {1}
+
+        # a health-blind scheduler stays put on the straggler
+        blind = _scheduler(cluster, profile)
+        b0 = blind.decide(states, 0.0, None)
+        b1 = blind.decide(states, ROUND, b0.plan, health=health)
+        assert {cluster.node_of(g) for g in b1.plan.job_gpu_map()[0]} == {0}
+
+    def test_no_drain_without_spare_capacity(self, profile):
+        """Every node busy: the drain penalty is uniform over occupied
+        rows, so it cannot justify churn — plans match the blind path."""
+        from repro.core.jobs import JobState
+
+        cluster = ClusterSpec(2, 4)
+        specs = [JobSpec(job_id=i, model="resnet50", num_gpus=4,
+                         total_iters=1e9, arrival_time=0.0)
+                 for i in range(2)]
+        states = [JobState(spec=s) for s in specs]
+        health = ClusterHealth(2)
+        health.speed_factor[0] = 0.4
+        aware = _scheduler(cluster, profile, health_aware=True)
+        blind = _scheduler(cluster, profile)
+        pa = aware.decide(states, 0.0, None).plan
+        pb = blind.decide(states, 0.0, None).plan
+        da = aware.decide(states, ROUND, pa, health=health)
+        db = blind.decide(states, ROUND, pb, health=health)
+        assert np.array_equal(da.plan.slots, db.plan.slots)
+
+    def test_fused_parity_with_health_terms(self, profile):
+        """Fused decide() with the drain penalties folded in-kernel stays
+        bit-identical to the host planner over a churn replay with moving
+        degradations."""
+        from repro.core.jobs import JobState
+
+        cluster = ClusterSpec(3, 4)
+        trace = _tiny_trace(profile, 10, seed=17)
+        sh = [JobState(spec=s) for s in trace]
+        sf = [JobState(spec=s) for s in trace]
+        host = _scheduler(cluster, profile, health_aware=True,
+                          tie_break=True)
+        fused = _scheduler(cluster, profile, health_aware=True,
+                           tie_break=True, fused_fanout=True)
+        health = ClusterHealth(3)
+        health.speed_factor[1] = 0.6
+        health.note_outage()
+        ph = pf = None
+        for rnd in range(6):
+            if rnd == 3:
+                # mid-replay churn: the degradation moves nodes (the sim
+                # invalidates the touched nodes; mirror it here)
+                health.speed_factor[1] = 1.0
+                health.speed_factor[2] = 0.3
+                for n in (1, 2):
+                    host.invalidate_node(n)
+                    fused.invalidate_node(n)
+            # deterministic service churn so plans keep changing
+            for i, (x, y) in enumerate(zip(sh, sf)):
+                bump = 137.0 * ((i + rnd) % 5)
+                x.attained_service += bump
+                y.attained_service += bump
+            dh = host.decide(sh, rnd * ROUND, ph, health=health)
+            df = fused.decide(sf, rnd * ROUND, pf, health=health)
+            assert np.array_equal(dh.plan.slots, df.plan.slots), f"round {rnd}"
+            ph, pf = dh.plan, df.plan
+        # served by the fused lane, not the budget fallback
+        assert fused._fused_planner.stats["fused_budget_fallbacks"] == 0
+
+    def test_domain_spread_placement_spans_racks(self, profile):
+        from repro.core.jobs import JobState
+        from repro.core.placement import place_without_packing
+
+        cluster = ClusterSpec(4, 4, nodes_per_rack=2)
+        spec = JobSpec(job_id=0, model="resnet50", num_gpus=8,
+                       total_iters=1e9, arrival_time=0.0)
+        states = [JobState(spec=spec)]
+        plan, _, _ = place_without_packing(cluster, states)
+        racks = {cluster.rack_of(cluster.node_of(g))
+                 for g in plan.job_gpu_map()[0]}
+        assert racks == {0}  # seed behaviour: consolidate into one rack
+        plan2, _, _ = place_without_packing(cluster, states,
+                                            spread_domains=True)
+        racks2 = {cluster.rack_of(cluster.node_of(g))
+                  for g in plan2.job_gpu_map()[0]}
+        assert racks2 == {0, 1}
+
+    def test_hot_hazard_spreads_gangs(self, profile):
+        """End-to-end decide(): a hot empirical outage process makes the
+        failure-aware arm spread a 2-node gang across racks; a cold
+        process keeps the seed consolidation."""
+        from repro.core.jobs import JobState
+
+        cluster = ClusterSpec(4, 4, nodes_per_rack=2)
+        sched = TesseraeScheduler(
+            cluster, FailureAwarePolicy(TiresiasPolicy(profile)), profile,
+            lap_backend="numpy", migration_algorithm="node",
+            health_aware=True,
+        )
+        spec = JobSpec(job_id=0, model="resnet50", num_gpus=8,
+                       total_iters=1e9, arrival_time=0.0)
+        states = [JobState(spec=spec)]
+        hot = ClusterHealth(4)
+        for _ in range(40):
+            hot.note_outage()  # tiny empirical MTBF: hazard is hot
+        dec = sched.decide(states, ROUND, None, health=hot)
+        racks = {cluster.rack_of(cluster.node_of(g))
+                 for g in dec.plan.job_gpu_map()[0]}
+        assert racks == {0, 1}
+        cold = sched.decide(states, ROUND, None, health=ClusterHealth(4))
+        racks_cold = {cluster.rack_of(cluster.node_of(g))
+                      for g in cold.plan.job_gpu_map()[0]}
+        assert racks_cold == {0}
+
+    def test_failure_aware_policy_cold_order_identical(self, profile):
+        from repro.core.jobs import JobState
+
+        cluster = ClusterSpec(4, 4)
+        inner = TiresiasPolicy(profile)
+        wrapped = FailureAwarePolicy(inner)
+        assert wrapped.name == "tiresias-fa"
+        states = [JobState(spec=s) for s in _tiny_trace(profile, 12, seed=18)]
+        for i, s in enumerate(states):
+            s.attained_service = 911.0 * (i % 4)
+        by_inner = sorted(states, key=lambda s: inner.sort_key(s, 0.0, cluster))
+        by_wrap = sorted(states, key=lambda s: wrapped.sort_key(s, 0.0, cluster))
+        assert [s.job_id for s in by_inner] == [s.job_id for s in by_wrap]
+
+    def test_failure_aware_policy_hot_boost_is_subordinate(self, profile):
+        from repro.core.jobs import JobState
+
+        cluster = ClusterSpec(4, 4)
+        wrapped = FailureAwarePolicy(TiresiasPolicy(profile))
+        mk = lambda jid, gpus, arr: JobState(spec=JobSpec(
+            job_id=jid, model="resnet50", num_gpus=gpus,
+            total_iters=1e9, arrival_time=arr))
+        small, gang, later_gang = mk(0, 1, 100.0), mk(1, 8, 100.0), mk(2, 8, 200.0)
+        wrapped.set_spread_hot(True)
+        # same inner tier: the multi-node gang wins the tie
+        assert wrapped.sort_key(gang, 0.0, cluster) < wrapped.sort_key(
+            small, 0.0, cluster
+        )
+        # different inner tier: queue discipline is untouched
+        assert wrapped.sort_key(small, 0.0, cluster) < wrapped.sort_key(
+            later_gang, 0.0, cluster
+        )
+        wrapped.set_spread_hot(False)
+        assert wrapped.sort_key(gang, 0.0, cluster) == wrapped.sort_key(
+            small, 0.0, cluster
+        )
+
+
+# --------------------------------------------------------------------------- #
+# Adaptive checkpoint cadence (Young's interval)
+# --------------------------------------------------------------------------- #
+class TestAdaptiveCheckpoint:
+    def test_interval_formula_and_clamps(self, profile):
+        from repro.core.jobs import JobState, migration_overhead_s
+
+        cluster = ClusterSpec(2, 4)
+        spec = JobSpec(job_id=0, model="resnet50", num_gpus=8,
+                       total_iters=1e9, arrival_time=0.0)
+        s = JobState(spec=spec)
+        s.gpus = frozenset(range(8))  # spans both nodes
+        health = ClusterHealth(2)
+
+        fixed = Simulator(cluster, [spec], _scheduler(cluster, profile),
+                          profile, SimConfig())
+        assert fixed._ckpt_interval_s(s, health, 1000.0) == 1800.0  # knob off
+
+        cfg = SimConfig(adaptive_checkpoint=True,
+                        checkpoint_interval_s=10_000.0)
+        sim = Simulator(cluster, [spec], _scheduler(cluster, profile),
+                        profile, cfg)
+        # no observed outage yet: fixed cadence
+        assert sim._ckpt_interval_s(s, health, 1000.0) == 10_000.0
+
+        health.note_outage()
+        now = 50_000.0
+        mtbf = health.empirical_mtbf_s(now)
+        young = (2.0 * 0.5 * migration_overhead_s("resnet50") * mtbf / 2) ** 0.5
+        got = sim._ckpt_interval_s(s, health, now)
+        assert got == pytest.approx(
+            min(10_000.0, max(cfg.round_duration_s, young))
+        )
+        # a single-node job sees twice the gang's MTBF: longer cadence
+        s1 = JobState(spec=JobSpec(job_id=1, model="resnet50", num_gpus=4,
+                                   total_iters=1e9, arrival_time=0.0))
+        s1.gpus = frozenset(range(4))
+        assert sim._ckpt_interval_s(s1, health, now) >= got
+
+    def test_adaptive_reduces_lost_work(self, profile):
+        """Differential: with an observed outage, the adaptive cadence
+        checkpoints aggressively and a later crash loses far less work
+        than the fixed (here: effectively never) cadence."""
+        cluster = ClusterSpec(2, 4)
+        rate = profile.isolated("resnet50", 4, "dp")
+        spec = JobSpec(job_id=0, model="resnet50", num_gpus=4,
+                       total_iters=rate * ROUND * 40, arrival_time=0.0)
+        events = [
+            FailureEvent(1 * ROUND, NODE_DOWN, node=1),  # observed outage
+            FailureEvent(2 * ROUND, NODE_UP, node=1),    # (job is on node 0)
+            FailureEvent(20 * ROUND, JOB_FAIL, job_id=0),
+        ]
+
+        def run(adaptive):
+            cfg = SimConfig(checkpoint_interval_s=1e9,
+                            adaptive_checkpoint=adaptive,
+                            backoff_base_s=ROUND, max_retries=5)
+            sched = _scheduler(cluster, profile)
+            return Simulator(cluster, [spec], sched, profile, cfg,
+                             failures=list(events)).run()
+
+        fixed = run(False)
+        adapt = run(True)
+        assert not fixed.jobs[0].failed and not adapt.jobs[0].failed
+        assert fixed.lost_work_s_total > 0.0
+        assert adapt.lost_work_s_total < fixed.lost_work_s_total
+
+
+# --------------------------------------------------------------------------- #
+# ClusterHealth: empirical MTBF and the hazard flag
+# --------------------------------------------------------------------------- #
+class TestClusterHealthHazard:
+    def test_empirical_mtbf_and_hazard(self):
+        h = ClusterHealth(4)
+        assert h.empirical_mtbf_s(7200.0) is None
+        assert not h.hazard_hot(7200.0, 1e12)
+        h.note_outage()
+        h.note_outage()
+        # pooled estimate: elapsed * num_nodes / outages
+        assert h.empirical_mtbf_s(7200.0) == pytest.approx(7200.0 * 4 / 2)
+        assert h.hazard_hot(7200.0, 20_000.0)
+        assert not h.hazard_hot(7200.0, 10_000.0)
+        # degenerate now: the elapsed floor keeps the estimate finite
+        assert h.empirical_mtbf_s(0.0) == pytest.approx(2.0)
+
+    def test_copy_carries_outage_history(self):
+        h = ClusterHealth(3)
+        h.note_outage()
+        c = h.copy()
+        assert c.outages == 1
+        c.note_outage()
+        assert h.outages == 1 and c.outages == 2

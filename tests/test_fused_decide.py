@@ -213,3 +213,38 @@ class TestShardSplitProperty:
             base.physical_plan.slots, host.physical_plan.slots
         )
         assert base.matching_cost == pytest.approx(host.matching_cost, abs=1e-9)
+
+
+class TestFusedHealthTermParity:
+    """Straggler-drain penalties folded into the in-program cost assembly
+    must stay bit-identical to the host planner: both sides share the
+    same host-computed pen matrix and the mantissa budget accounts for
+    its magnitude, so parity holds by construction — this pins it."""
+
+    @given(seed=st.integers(0, 2**32 - 1), drop=st.integers(0, 3))
+    @settings(max_examples=10, deadline=None)
+    def test_speed_terms_preserve_host_parity(self, seed, drop):
+        profile = ThroughputProfile()
+        cluster = ClusterSpec(4, 4)
+        jobs = synthetic_active_jobs(12, seed=seed, profile=profile)
+        jobs = [j for j in jobs if j.num_gpus <= 4 or j.num_gpus % 4 == 0]
+        prev, _, _ = place_without_packing(cluster, jobs)
+        new, _, _ = place_without_packing(cluster, jobs[drop:] or jobs)
+        g = {j.job_id: j.num_gpus for j in jobs}
+        rng = np.random.default_rng(seed)
+        speed = np.where(rng.random(4) < 0.5,
+                         rng.uniform(0.2, 0.9, 4), 1.0)
+
+        fused = FusedMigrationPlanner().plan(
+            prev, new, g, tie_break=True, speed_factor=speed
+        )
+        host = plan_migration(
+            prev, new, g, algorithm="node", backend="scipy",
+            tie_break=True, speed_factor=speed,
+        )
+        np.testing.assert_array_equal(
+            fused.physical_plan.slots, host.physical_plan.slots
+        )
+        assert fused.matching_cost == pytest.approx(
+            host.matching_cost, abs=1e-9
+        )

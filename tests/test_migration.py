@@ -217,3 +217,49 @@ class TestBatchedAuctionMigration:
         base = plan_migration(p_i, p_j, num_gpus_of, algorithm="none")
         multi = sum(1 for g in num_gpus_of.values() if g > 1)
         assert auct.num_migrations <= base.num_migrations + multi
+
+
+class TestStragglerDrainPenalties:
+    """Health terms in the relabelling benefit: the straggler-drain
+    penalty drains degraded nodes through the SAME matching layer the
+    rack/type terms use — half-unit quantised, occupied-rows only, and
+    a no-op (None) on healthy clusters (the seed bit-identity)."""
+
+    def test_healthy_speeds_add_no_term(self):
+        from repro.core.migration import _relabel_penalties
+
+        cluster = ClusterSpec(4, 4)
+        assert _relabel_penalties(cluster) is None
+        assert _relabel_penalties(cluster, speed_factor=np.ones(4)) is None
+
+    def test_penalties_are_half_unit_quantised_and_targeted(self):
+        from repro.core.migration import _relabel_penalties
+
+        cluster = ClusterSpec(4, 4)
+        speed = np.array([1.0, 0.37, 0.9, 1.0])
+        occ = np.array([True, True, False, False])
+        pen = _relabel_penalties(cluster, occupied_logical=occ,
+                                 speed_factor=speed)
+        assert pen is not None
+        # exactness contract of the auction backends: multiples of 0.5
+        np.testing.assert_array_equal(pen * 2.0, np.round(pen * 2.0))
+        # only occupied logical columns are penalised, only slow rows pay
+        assert np.all(pen[:, ~occ] == 0.0)
+        assert np.all(pen[[0, 3], :] == 0.0)
+        assert np.all(pen[1, occ] > 0.0)
+        # deeper degradation, steeper penalty
+        assert pen[1, 0] > pen[2, 0] > 0.0
+
+    def test_drain_relabels_onto_spare_healthy_node(self):
+        cluster = ClusterSpec(2, 4)
+        prev = _mk(cluster, {0: [0, 1, 2, 3]})
+        new = _mk(cluster, {0: [0, 1, 2, 3]})
+        res = plan_migration(prev, new, {0: 4}, algorithm="node",
+                             speed_factor=np.array([0.4, 1.0]))
+        assert set(res.physical_plan.job_gpu_map()[0]) == {4, 5, 6, 7}
+        assert res.num_migrations == 1
+        # full-speed cluster: untouched (bit-identical seed path)
+        res2 = plan_migration(prev, new, {0: 4}, algorithm="node",
+                              speed_factor=np.ones(2))
+        assert set(res2.physical_plan.job_gpu_map()[0]) == {0, 1, 2, 3}
+        assert res2.num_migrations == 0
