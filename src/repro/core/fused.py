@@ -401,7 +401,7 @@ class FusedMigrationPlanner:
         max_id = max(num_gpus_of) if num_gpus_of else 0
         weights = np.zeros(max_id + 2, np.float32)
         for j, g in num_gpus_of.items():
-            weights[j] = scale / (2.0 * g)
+            weights[j] = scale / (2.0 * g)  # tessalint: mantissa-ok(exact for power-of-two gpu counts; the _F32_MANTISSA budget guard above falls back to host otherwise)
         pen_scaled = (
             np.zeros((kc, kc), np.float32)
             if pen is None
@@ -443,7 +443,7 @@ class FusedMigrationPlanner:
         )
         # THE readout: everything host-side comes off the device here, once
         phys_dev, node_assign_dev, cost_dev, conv_dev, stats_dev = out[:5]
-        phys, node_assignment, cost_scaled, converged, stats = jax.device_get(
+        phys, node_assignment, cost_scaled, converged, stats = jax.device_get(  # tessalint: sync-ok(THE one sanctioned readout per fused round; see BENCH_fused_decide.json)
             (phys_dev, node_assign_dev, cost_dev, conv_dev, stats_dev)
         )
         self.stats["fused_readouts"] += 1

@@ -538,7 +538,7 @@ def auction_assignment(
     n, m = cost.shape
     sq = masked_square_benefit(cost, maximize, row_mask, col_mask)
     res = auction_lap(jnp.asarray(sq), use_kernel=use_kernel)
-    col_of = np.asarray(res.col_of)
+    col_of = np.asarray(res.col_of)  # tessalint: sync-ok(single readout of the finished assignment; this wrapper's contract is scipy-style host output)
     row_ind = np.arange(sq.shape[0])
     ok = (row_ind < n) & (col_of < m) & (col_of >= 0)
     if row_mask is not None:

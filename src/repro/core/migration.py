@@ -52,7 +52,7 @@ def _weight_lookup(num_gpus_of: Dict[int, int]) -> np.ndarray:
     max_id = max(num_gpus_of) if num_gpus_of else 0
     w = np.zeros(max_id + 2, dtype=np.float64)
     for j, g in num_gpus_of.items():
-        w[j] = 1.0 / (2.0 * g)
+        w[j] = 1.0 / (2.0 * g)  # tessalint: mantissa-ok(f64 host reference path per Algorithm 3; the device path scales to the f32 budget in fused._cost_scale)
     # EMPTY == -1 indexes the last element, which stays 0.
     return w
 

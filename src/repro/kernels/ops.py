@@ -26,6 +26,32 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _require(cond: bool, msg: str) -> None:
+    """Shape/dtype contract check.  Runs against static metadata only, so
+    under jit it fires at trace time and costs nothing per call."""
+    if not cond:
+        raise ValueError(msg)
+
+
+def _check_bid_args(name: str, mat: jax.Array, prices: jax.Array) -> None:
+    _require(
+        mat.ndim in (2, 3),
+        f"{name}: matrix must be (n, m) or (B, n, m), got shape {mat.shape}",
+    )
+    _require(
+        jnp.issubdtype(mat.dtype, jnp.floating),
+        f"{name}: matrix must be floating, got dtype {mat.dtype}",
+    )
+    want = (
+        (mat.shape[0], mat.shape[-1]) if mat.ndim == 3 else (mat.shape[-1],)
+    )
+    _require(
+        tuple(prices.shape) == want,
+        f"{name}: prices shape {prices.shape} does not match matrix "
+        f"{mat.shape} (want {want})",
+    )
+
+
 def lap_bid_top2(vals: jax.Array):
     """Auction bid step on a precomputed (benefit - price) matrix.
 
@@ -39,7 +65,18 @@ def lap_bid_top2(vals: jax.Array):
     ``jax.vmap`` each instance is a 2-D tracer and vmap's pallas batching
     rule lifts the 2-D kernel into one batched ``pallas_call`` itself;
     the explicit branch serves direct 3-D callers and parity tests.
+
+    Shapes: ``vals`` (n, m) or (B, n, m), floating.  Returns
+    ``(best_v, best_j, second_v)``, each (n,) / (B, n).
     """
+    _require(
+        vals.ndim in (2, 3),
+        f"lap_bid_top2: vals must be (n, m) or (B, n, m), got shape {vals.shape}",
+    )
+    _require(
+        jnp.issubdtype(vals.dtype, jnp.floating),
+        f"lap_bid_top2: vals must be floating, got dtype {vals.dtype}",
+    )
     if vals.ndim == 3:
         return lap_bid_pallas_batched(
             vals,
@@ -52,6 +89,13 @@ def lap_bid_top2(vals: jax.Array):
 
 
 def lap_bid(a: jax.Array, prices: jax.Array):
+    """Auction bid step on a BENEFIT matrix; prices subtract in-kernel.
+
+    Shapes: ``a`` (n, m) with ``prices`` (m,), or batched ``a`` (B, n, m)
+    with ``prices`` (B, m); both floating.  Returns
+    ``(best_v, best_j, second_v)``, each (n,) / (B, n).
+    """
+    _check_bid_args("lap_bid", a, prices)
     if a.ndim == 3:
         return lap_bid_pallas_batched(a, prices, interpret=_default_interpret())
     return lap_bid_pallas(a, prices, interpret=_default_interpret())
@@ -62,7 +106,14 @@ def lap_bid_fused(cost: jax.Array, prices: jax.Array, tb_scale=0.0):
     the ``-cost`` negation and the positional tie-break ramp assemble
     inside the kernel's tiled sweep, so no perturbed benefit matrix is
     ever materialised in HBM (see ``lap_bid.lap_bid_fused_pallas``).
-    ``tb_scale=0`` is the plain (un-perturbed) bid on ``-cost``."""
+    ``tb_scale=0`` is the plain (un-perturbed) bid on ``-cost``.
+
+    Shapes: ``cost`` (n, m) with ``prices`` (m,), or batched ``cost``
+    (B, n, m) with ``prices`` (B, m); both floating.  ``tb_scale`` is a
+    scalar (or (B,) when batched).  Returns ``(best_v, best_j, second_v)``,
+    each (n,) / (B, n).
+    """
+    _check_bid_args("lap_bid_fused", cost, prices)
     if cost.ndim == 3:
         return lap_bid_fused_pallas_batched(
             cost, prices, tb_scale, interpret=_default_interpret()
@@ -76,9 +127,26 @@ def migration_cost_matrix(
     """Algorithm-3 cost matrix via the Pallas kernel.
 
     ``slots_u``/``slots_v``: (U, MAX_PACK) int arrays of job ids (-1 empty).
+    Returns a host (U, V) float64 matrix.
     """
     slots_u = np.asarray(slots_u)
     slots_v = np.asarray(slots_v)
+    _require(
+        slots_u.ndim == 2 and slots_v.ndim == 2,
+        "migration_cost_matrix: slots must be (U, MAX_PACK) / (V, MAX_PACK), "
+        f"got shapes {slots_u.shape} and {slots_v.shape}",
+    )
+    _require(
+        slots_u.shape[1] == slots_v.shape[1],
+        "migration_cost_matrix: slots_u and slots_v disagree on MAX_PACK "
+        f"({slots_u.shape[1]} vs {slots_v.shape[1]})",
+    )
+    _require(
+        np.issubdtype(slots_u.dtype, np.integer)
+        and np.issubdtype(slots_v.dtype, np.integer),
+        "migration_cost_matrix: slots must hold integer job ids, got "
+        f"dtypes {slots_u.dtype} and {slots_v.dtype}",
+    )
     max_id = max(num_gpus_of, default=0)
     lookup = np.zeros(max_id + 2, dtype=np.float32)
     for j, g in num_gpus_of.items():
@@ -92,20 +160,54 @@ def migration_cost_matrix(
         jnp.asarray(w_v),
         interpret=_default_interpret(),
     )
-    return np.asarray(out, dtype=np.float64)
+    return np.asarray(out, dtype=np.float64)  # tessalint: sync-ok(this wrapper's documented contract is a host float64 matrix; one readout of the kernel output)
 
 
 def flash_decode(q, k, v, valid_len):
-    """Single-token GQA decode attention; q (B,H,D), cache k/v (B,S,KV,D)."""
+    """Single-token GQA decode attention; q (B,H,D), cache k/v (B,S,KV,D).
+
+    ``H`` must be a multiple of ``KV`` (query-head groups share a KV
+    head); ``valid_len`` is (B,) integer occupancy of the ring buffer.
+    Returns (B, H, D).
+    """
     from repro.kernels.flash_decode import flash_decode_pallas
 
+    _require(
+        q.ndim == 3 and k.ndim == 4 and v.ndim == 4,
+        f"flash_decode: want q (B,H,D), k/v (B,S,KV,D); got q {q.shape}, "
+        f"k {k.shape}, v {v.shape}",
+    )
+    _require(
+        k.shape == v.shape,
+        f"flash_decode: k/v cache shapes differ ({k.shape} vs {v.shape})",
+    )
+    _require(
+        q.shape[0] == k.shape[0] and q.shape[-1] == k.shape[-1],
+        f"flash_decode: q {q.shape} and cache {k.shape} disagree on "
+        "batch or head dim",
+    )
+    _require(
+        q.shape[1] % k.shape[2] == 0,
+        f"flash_decode: H={q.shape[1]} must be a multiple of KV={k.shape[2]}",
+    )
     return flash_decode_pallas(q, k, v, valid_len, interpret=_default_interpret())
 
 
 def flash_attention(
     q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True
 ) -> jax.Array:
-    """Causal flash attention; q/k/v (B, H, S, D) or (BH, S, D)."""
+    """Causal flash attention; q/k/v (B, H, S, D) or (BH, S, D).
+
+    All three inputs must share one shape; returns that shape.
+    """
+    _require(
+        q.ndim in (3, 4),
+        f"flash_attention: q must be (B,H,S,D) or (BH,S,D), got {q.shape}",
+    )
+    _require(
+        q.shape == k.shape == v.shape,
+        f"flash_attention: q/k/v shapes differ: {q.shape}, {k.shape}, {v.shape}",
+    )
     squeeze = False
     if q.ndim == 4:
         b, h, s, d = q.shape

@@ -29,7 +29,15 @@ import jax.numpy as jnp
 
 def tile_col_ids(shape: tuple, col_offset) -> jax.Array:
     """Global column ids for a tile of ``shape`` whose minor (last) axis
-    starts at ``col_offset``.  Uses ``broadcasted_iota`` (>= 2-D on TPU)."""
+    starts at ``col_offset``.  Uses ``broadcasted_iota`` (>= 2-D on TPU).
+
+    ``shape`` must be a static tuple of >= 2 dims (the TPU iota floor);
+    returns an int32 array of ``shape``.
+    """
+    if len(shape) < 2:
+        raise ValueError(
+            f"tile_col_ids: TPU iota needs a >= 2-D tile, got shape {shape}"
+        )
     return jax.lax.broadcasted_iota(jnp.int32, shape, len(shape) - 1) + col_offset
 
 
@@ -41,4 +49,8 @@ def mask_ragged_cols(x: jax.Array, col_offset, valid_cols, fill) -> jax.Array:
     ``>= valid_cols`` become ``fill``; the rest pass through unchanged.
     ``valid_cols`` may be static (int) or traced (SMEM scalar).
     """
+    if x.ndim < 2:
+        raise ValueError(
+            f"mask_ragged_cols: tile must be >= 2-D (TPU iota floor), got {x.shape}"
+        )
     return jnp.where(tile_col_ids(x.shape, col_offset) < valid_cols, x, fill)

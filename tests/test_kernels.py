@@ -292,3 +292,107 @@ class TestAuctionWithKernel:
         got = benefit[np.arange(8), col].sum()
         r, c = scipy_lsa(benefit, maximize=True)
         assert np.isclose(got, benefit[r, c].sum())
+
+
+class TestShapeContracts:
+    """The ops-layer entry points validate shape/dtype at trace time and
+    raise ValueError with the offending shapes in the message."""
+
+    def test_lap_bid_prices_mismatch(self):
+        from repro.kernels import ops
+
+        a = jnp.zeros((4, 6), jnp.float32)
+        with pytest.raises(ValueError, match="prices shape"):
+            ops.lap_bid(a, jnp.zeros((5,), jnp.float32))
+
+    def test_lap_bid_batched_prices_mismatch(self):
+        from repro.kernels import ops
+
+        a = jnp.zeros((2, 4, 6), jnp.float32)
+        # batched prices must be (B, m), not (m,)
+        with pytest.raises(ValueError, match="prices shape"):
+            ops.lap_bid(a, jnp.zeros((6,), jnp.float32))
+
+    def test_lap_bid_rejects_integer_matrix(self):
+        from repro.kernels import ops
+
+        a = jnp.zeros((4, 6), jnp.int32)
+        with pytest.raises(ValueError, match="floating"):
+            ops.lap_bid(a, jnp.zeros((6,), jnp.float32))
+
+    def test_lap_bid_rejects_1d(self):
+        from repro.kernels import ops
+
+        with pytest.raises(ValueError, match=r"\(n, m\) or \(B, n, m\)"):
+            ops.lap_bid(jnp.zeros((6,), jnp.float32), jnp.zeros((6,), jnp.float32))
+
+    def test_lap_bid_fused_shares_contract(self):
+        from repro.kernels import ops
+
+        c = jnp.zeros((2, 4, 6), jnp.float32)
+        with pytest.raises(ValueError, match="lap_bid_fused"):
+            ops.lap_bid_fused(c, jnp.zeros((2, 5), jnp.float32))
+
+    def test_lap_bid_top2_rejects_4d(self):
+        from repro.kernels import ops
+
+        with pytest.raises(ValueError, match="lap_bid_top2"):
+            ops.lap_bid_top2(jnp.zeros((2, 2, 4, 6), jnp.float32))
+
+    def test_valid_calls_pass(self):
+        from repro.kernels import ops
+
+        rng = np.random.default_rng(7)
+        a = jnp.asarray(rng.normal(size=(5, 8)), jnp.float32)
+        p = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+        bv, bj, sv = ops.lap_bid(a, p)
+        rv, rj, rsv = ref.lap_bid_top2(a - p[None, :])
+        np.testing.assert_array_equal(np.asarray(bj), np.asarray(rj))
+
+    def test_migration_cost_rejects_float_slots(self):
+        from repro.kernels import ops
+
+        with pytest.raises(ValueError, match="integer job ids"):
+            ops.migration_cost_matrix(
+                np.zeros((3, 4), np.float32), np.zeros((3, 4), np.int32), {0: 1}
+            )
+
+    def test_migration_cost_rejects_pack_mismatch(self):
+        from repro.kernels import ops
+
+        with pytest.raises(ValueError, match="MAX_PACK"):
+            ops.migration_cost_matrix(
+                np.zeros((3, 4), np.int32), np.zeros((3, 5), np.int32), {0: 1}
+            )
+
+    def test_flash_decode_head_group_contract(self):
+        from repro.kernels import ops
+
+        q = jnp.zeros((2, 3, 8), jnp.float32)  # H=3 not a multiple of KV=2
+        kv = jnp.zeros((2, 16, 2, 8), jnp.float32)
+        with pytest.raises(ValueError, match="multiple of KV"):
+            ops.flash_decode(q, kv, kv, jnp.array([4, 4]))
+
+    def test_flash_attention_shape_mismatch(self):
+        from repro.kernels import ops
+
+        q = jnp.zeros((2, 8, 4), jnp.float32)
+        k = jnp.zeros((2, 9, 4), jnp.float32)
+        with pytest.raises(ValueError, match="q/k/v shapes differ"):
+            ops.flash_attention(q, k, q)
+
+    def test_tile_mask_iota_floor(self):
+        from repro.kernels.tile_mask import mask_ragged_cols, tile_col_ids
+
+        with pytest.raises(ValueError, match="2-D"):
+            tile_col_ids((8,), 0)
+        with pytest.raises(ValueError, match="2-D"):
+            mask_ragged_cols(jnp.zeros((8,)), 0, 4, 0.0)
+
+    def test_tile_mask_valid(self):
+        from repro.kernels.tile_mask import mask_ragged_cols
+
+        x = jnp.ones((2, 4))
+        out = np.asarray(mask_ragged_cols(x, 2, 4, -9.0))
+        # global cols are [2, 3, 4, 5]; cols >= 4 get the fill value
+        np.testing.assert_array_equal(out, [[1, 1, -9, -9], [1, 1, -9, -9]])

@@ -1,0 +1,24 @@
+"""tessalint — a JAX-aware static-analysis suite for the Tesserae repo.
+
+Five AST passes enforce the contracts the CI gates only catch
+dynamically (and flakily): device residency (``sync``), bit-identical
+determinism (``det``), jit hygiene (``jit``), the f32 cost-exactness
+budget (``mantissa``) and the prewarm threading contract (``thread``) —
+plus a ``pragma`` meta-rule keeping the suppressions themselves honest.
+
+Usage::
+
+    python -m tools.tessalint src/ [--format json] [--rules sync,det]
+
+Public API: :func:`tools.tessalint.runner.run_paths`,
+:class:`tools.tessalint.findings.Finding`,
+:class:`tools.tessalint.manifest.Manifest`.
+"""
+
+from tools.tessalint.findings import JSON_VERSION, Finding
+from tools.tessalint.manifest import Manifest
+from tools.tessalint.runner import lint_file, run_paths
+
+__version__ = "1.0.0"
+
+__all__ = ["Finding", "JSON_VERSION", "Manifest", "lint_file", "run_paths", "__version__"]

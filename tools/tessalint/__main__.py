@@ -1,0 +1,81 @@
+"""CLI: ``python -m tools.tessalint src/`` (or the ``tessalint`` console
+script).  Exit code 0 = clean (pragma-suppressed findings allowed),
+1 = unsuppressed findings, 2 = usage error."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from tools.tessalint.manifest import DEFAULT_MANIFEST_PATH
+from tools.tessalint.passes import ALL_RULES, DESCRIPTIONS
+from tools.tessalint.runner import run_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tessalint",
+        description="JAX-aware static analysis for the Tesserae repo: "
+        "device residency, determinism, jit hygiene, mantissa budget, "
+        "prewarm threading.",
+    )
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument(
+        "--format", choices=("text", "json"), default="text", dest="fmt"
+    )
+    ap.add_argument(
+        "--manifest",
+        default=str(DEFAULT_MANIFEST_PATH),
+        help="rule-scoping manifest (default: the repo manifest)",
+    )
+    ap.add_argument(
+        "--rules",
+        default=None,
+        help="comma-separated rule subset (default: all): "
+        + ",".join(ALL_RULES),
+    )
+    ap.add_argument(
+        "--show-suppressed",
+        action="store_true",
+        help="also print pragma-suppressed findings (text format)",
+    )
+    args = ap.parse_args(argv)
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = [r for r in rules if r not in ALL_RULES]
+        if unknown:
+            print(f"unknown rule(s): {', '.join(unknown)}", file=sys.stderr)
+            return 2
+
+    try:
+        rep, findings = run_paths(args.paths, manifest_path=args.manifest, rules=rules)
+    except (FileNotFoundError, ValueError) as e:
+        print(f"tessalint: {e}", file=sys.stderr)
+        return 2
+
+    if args.fmt == "json":
+        print(json.dumps(rep, indent=2, sort_keys=True))
+    else:
+        shown = [
+            f
+            for f in findings
+            if not f.suppressed or args.show_suppressed
+        ]
+        for f in sorted(shown, key=lambda f: (f.path, f.line, f.col)):
+            print(f.format_text())
+        n = len(rep["findings"])
+        print(
+            f"tessalint: {n} finding{'s' if n != 1 else ''} "
+            f"({rep['suppressed_count']} suppressed) in "
+            f"{rep['files_scanned']} files"
+        )
+        if n:
+            print("rules: " + ", ".join(f"{k}: {DESCRIPTIONS[k]}" for k in rep["counts"]))
+    return 1 if rep["findings"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

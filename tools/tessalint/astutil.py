@@ -1,0 +1,87 @@
+"""Shared AST helpers: import-alias resolution and dotted-name utilities.
+
+All passes resolve call targets through :class:`Imports` so rules match
+the CANONICAL module path (``numpy.asarray``, ``time.time``,
+``jax.device_get``) regardless of the import style at the top of the
+file (``import numpy as np``, ``from time import time``, ...).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Optional
+
+
+class Imports:
+    """Alias table for one module: maps local names to canonical dotted
+    module paths.
+
+    * ``import numpy as np``            → ``np → numpy``
+    * ``import jax.numpy as jnp``       → ``jnp → jax.numpy``
+    * ``from jax import numpy as jnp``  → ``jnp → jax.numpy``
+    * ``from time import time``         → ``time → time.time``
+    """
+
+    def __init__(self, tree: ast.Module):
+        self.aliases: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0]
+                    )
+            elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    self.aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Canonical dotted path of a Name/Attribute chain, or None."""
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = self.aliases.get(node.id, node.id)
+        parts.append(root)
+        return ".".join(reversed(parts))
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """Literal dotted source text of a Name/Attribute chain (NO alias
+    resolution) — e.g. ``self.scheduler.prewarm``.  None for anything
+    that is not a pure chain."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def functions_with_qualnames(tree: ast.Module):
+    """Yield ``(qualname, FunctionDef)`` for every (async) function in the
+    module, with ``Class.method`` / ``outer.<locals>.inner`` qualnames."""
+    out = []
+
+    def visit(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}{child.name}"
+                out.append((q, child))
+                visit(child, f"{q}.<locals>.")
+            elif isinstance(child, ast.ClassDef):
+                visit(child, f"{prefix}{child.name}.")
+            else:
+                visit(child, prefix)
+
+    visit(tree, "")
+    return out
+
+
+def call_name(node: ast.Call, imports: Imports) -> Optional[str]:
+    return imports.resolve(node.func)

@@ -1,0 +1,82 @@
+"""Finding record + the JSON report schema (``tessalint-v1``).
+
+A finding is one rule violation at one source location.  The JSON report
+is the machine surface CI consumes: ``{"version", "rules", "findings",
+"counts", "suppressed_count", "files_scanned"}`` with each finding a flat
+dict that round-trips losslessly through :meth:`Finding.to_dict` /
+:meth:`Finding.from_dict` (pinned by the self-test suite).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+#: schema version stamped into every JSON report
+JSON_VERSION = "tessalint-v1"
+
+#: severity ladder: P1 findings break the contract the rule guards
+#: (exactness, determinism, the one-readout budget); P2 findings are
+#: hygiene (recompile hazards, pragma bookkeeping).
+SEVERITIES = ("P1", "P2")
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str          # rule id, e.g. "sync"
+    path: str          # file path as scanned
+    line: int          # 1-based line of the offending node
+    col: int           # 0-based column
+    message: str       # what is wrong
+    snippet: str = ""  # the stripped source line
+    hint: str = ""     # how to fix (or how to suppress legitimately)
+    severity: str = "P1"
+    suppressed: bool = False       # True when a pragma covers it
+    suppress_reason: str = ""      # the pragma's (reason) text
+    #: last line of the flagged node — pragmas anywhere in
+    #: [line, end_line] suppress the finding (multi-line calls put the
+    #: pragma on whichever physical line survives reformatting).
+    end_line: int = 0
+
+    def __post_init__(self):
+        if self.end_line < self.line:
+            self.end_line = self.line
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"severity must be one of {SEVERITIES}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Finding":
+        return cls(**d)
+
+    def format_text(self) -> str:
+        loc = f"{self.path}:{self.line}:{self.col}"
+        out = f"{loc} [{self.rule}/{self.severity}] {self.message}"
+        if self.snippet:
+            out += f"\n    | {self.snippet}"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        if self.suppressed:
+            out += f"\n    suppressed: {self.suppress_reason}"
+        return out
+
+
+def report(
+    findings: List[Finding], rules: List[str], files_scanned: int
+) -> dict:
+    """The ``tessalint-v1`` JSON report for one run.  ``findings`` holds
+    only UNSUPPRESSED findings; suppressed ones are counted."""
+    active = [f for f in findings if not f.suppressed]
+    counts: Dict[str, int] = {}
+    for f in active:
+        counts[f.rule] = counts.get(f.rule, 0) + 1
+    return {
+        "version": JSON_VERSION,
+        "rules": sorted(rules),
+        "findings": [f.to_dict() for f in active],
+        "counts": counts,
+        "suppressed_count": sum(1 for f in findings if f.suppressed),
+        "files_scanned": files_scanned,
+    }

@@ -1,0 +1,81 @@
+"""Per-module rule scoping: which rules run where, with what options.
+
+The manifest is a JSON file (``tools/tessalint/manifest.json`` for this
+repo; ``--manifest`` overrides) of the shape::
+
+    {
+      "version": "tessalint-manifest-v1",
+      "rules": {
+        "<rule>": {
+          "include": ["src/repro/core/fused.py", "src/repro/kernels/*.py"],
+          "exclude": ["src/repro/testing/*"],
+          "options": {...rule-specific...}
+        }
+      }
+    }
+
+Patterns are ``fnmatch``-style against the POSIX form of the scanned
+path; a pattern also matches when the path merely ENDS with it
+(``*/<pattern>``), so the same manifest works from the repo root, from an
+absolute path, or against a fixture copy of the tree.  A rule with no
+manifest entry runs nowhere — scoping is opt-in by design: every pass is
+repo-specific and only meaningful on the modules whose contract it
+guards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+from pathlib import Path, PurePosixPath
+from typing import Dict, List
+
+MANIFEST_VERSION = "tessalint-manifest-v1"
+DEFAULT_MANIFEST_PATH = Path(__file__).with_name("manifest.json")
+
+
+@dataclasses.dataclass
+class RuleConfig:
+    include: List[str] = dataclasses.field(default_factory=list)
+    exclude: List[str] = dataclasses.field(default_factory=list)
+    options: dict = dataclasses.field(default_factory=dict)
+
+
+def _match(path: str, pattern: str) -> bool:
+    return fnmatch.fnmatch(path, pattern) or fnmatch.fnmatch(path, f"*/{pattern}")
+
+
+class Manifest:
+    def __init__(self, rules: Dict[str, RuleConfig]):
+        self.rules = rules
+
+    @classmethod
+    def load(cls, path: Path = DEFAULT_MANIFEST_PATH) -> "Manifest":
+        data = json.loads(Path(path).read_text())
+        if data.get("version") != MANIFEST_VERSION:
+            raise ValueError(
+                f"manifest version {data.get('version')!r} != {MANIFEST_VERSION!r}"
+            )
+        rules = {
+            name: RuleConfig(
+                include=list(cfg.get("include", [])),
+                exclude=list(cfg.get("exclude", [])),
+                options=dict(cfg.get("options", {})),
+            )
+            for name, cfg in data.get("rules", {}).items()
+        }
+        return cls(rules)
+
+    def applies(self, rule: str, path) -> bool:
+        cfg = self.rules.get(rule)
+        if cfg is None:
+            return False
+        p = str(PurePosixPath(Path(path).as_posix()))
+        if not any(_match(p, pat) for pat in cfg.include):
+            return False
+        return not any(_match(p, pat) for pat in cfg.exclude)
+
+    def options(self, rule: str) -> dict:
+        cfg = self.rules.get(rule)
+        return dict(cfg.options) if cfg else {}

@@ -1,0 +1,40 @@
+"""Pass registry: rule id → (runner, one-line description)."""
+
+from __future__ import annotations
+
+from tools.tessalint.passes import (
+    concurrency,
+    determinism,
+    jit_hygiene,
+    mantissa,
+    sync_point,
+)
+
+#: rule id -> pass module.  The ``pragma`` meta-rule (pragma hygiene:
+#: malformed/empty/unknown/unused suppressions) is implemented by the
+#: runner itself, not a pass.
+PASSES = {
+    sync_point.RULE: sync_point,
+    determinism.RULE: determinism,
+    jit_hygiene.RULE: jit_hygiene,
+    mantissa.RULE: mantissa,
+    concurrency.RULE: concurrency,
+}
+
+DESCRIPTIONS = {
+    "sync": "device→host transfers outside sanctioned readouts "
+    "(the one-readout-per-round contract)",
+    "det": "wall clock / unseeded RNG / set-iteration order reachable "
+    "from plan construction",
+    "jit": "static-arg mismatches, mutable closure capture and "
+    "recompile hazards in @jax.jit functions",
+    "mantissa": "unquantised floats in the fused cost-assembly graph "
+    "(the 2^24 f32 exactness budget)",
+    "thread": "shared-state access while the speculative-prewarm "
+    "background thread may own it",
+    "pragma": "suppression hygiene: malformed, reason-less, unknown or "
+    "unused tessalint pragmas",
+}
+
+#: every rule id a pragma may name
+ALL_RULES = tuple(PASSES) + ("pragma",)

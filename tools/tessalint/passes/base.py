@@ -1,0 +1,34 @@
+"""Shared pass infrastructure: one parsed file + its per-rule options."""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import List
+
+from tools.tessalint.astutil import Imports
+
+
+@dataclasses.dataclass
+class FileContext:
+    path: str
+    source: str
+    lines: List[str]
+    tree: ast.Module
+    imports: Imports
+    options: dict  # this rule's manifest options for this file
+
+    def snippet(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+
+def scopes(tree: ast.Module):
+    """Yield every function body plus the module top level as analysis
+    scopes (deepest functions LAST, so callers can overwrite outer-scope
+    conclusions with inner-scope ones when keying by node)."""
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node

@@ -1,0 +1,129 @@
+"""Rule ``thread`` — shared-state access while a background thread owns it.
+
+The simulator's ``speculative_prewarm`` hands ``self.scheduler`` (and
+with it the ``MatchContext`` and policy state) to a background thread
+between rounds; the documented contract is that NOTHING touches the
+scheduler until the future is joined at the top of the next round.  The
+``MatchContext`` docstring says it outright: "Thread-safety: none".
+
+This pass flags, inside any function that submits a BOUND METHOD to an
+executor or thread:
+
+* access to the submitted method's owner object (``self.scheduler`` in
+  ``executor.submit(self.scheduler.prewarm, ...)``) at a point that is
+  AFTER the submit in source order with no intervening join point
+  (``.result()`` / ``.join()`` / ``.shutdown()``) — the window where the
+  background thread may still own the object;
+* a submit with NO join point anywhere in the function
+  (fire-and-forget on shared state).
+
+Source order is a deliberate approximation of execution order: the
+repo's one submit sits at the bottom of the round loop with the join at
+the top, so the back-edge window is clean by construction; an access
+slipped between submit and loop end — the realistic regression — is
+exactly what source order catches.  Full flow-sensitive ordering is the
+next rung on the ladder (tools/tessalint/README.md).
+
+Detected submit forms: ``<executor>.submit(obj.method, ...)`` and
+``threading.Thread(target=obj.method, ...)``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+from tools.tessalint.astutil import call_name, dotted
+from tools.tessalint.findings import Finding
+from tools.tessalint.passes.base import FileContext
+
+RULE = "thread"
+
+_JOIN_METHODS = {"result", "join", "shutdown"}
+
+
+def _submitted_owner(node: ast.Call, imports) -> Optional[str]:
+    """Dotted owner expression of a bound method handed to a thread."""
+    target = None
+    if isinstance(node.func, ast.Attribute) and node.func.attr == "submit":
+        if node.args:
+            target = node.args[0]
+    elif call_name(node, imports) == "threading.Thread":
+        for kw in node.keywords:
+            if kw.arg == "target":
+                target = kw.value
+    if isinstance(target, ast.Attribute):
+        return dotted(target.value)
+    return None
+
+
+def run(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def flag(node, message, hint):
+        findings.append(
+            Finding(
+                RULE,
+                ctx.path,
+                node.lineno,
+                node.col_offset,
+                message,
+                snippet=ctx.snippet(node.lineno),
+                hint=hint,
+                severity="P1",
+                end_line=getattr(node, "end_lineno", node.lineno) or node.lineno,
+            )
+        )
+
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        submits: List[Tuple[int, str, ast.Call]] = []
+        joins: List[int] = []
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            owner = _submitted_owner(node, ctx.imports)
+            if owner is not None:
+                submits.append((node.lineno, owner, node))
+            elif (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in _JOIN_METHODS
+            ):
+                joins.append(node.lineno)
+        if not submits:
+            continue
+
+        for submit_line, owner, submit_node in submits:
+            if not joins:
+                flag(
+                    submit_node,
+                    f"background thread takes {owner!r} with no join point "
+                    "in this function",
+                    "join the future (.result()/.join()/.shutdown()) before "
+                    "the shared object is touched again",
+                )
+                continue
+            prefix = owner + "."
+            submit_end = getattr(submit_node, "end_lineno", submit_line) or submit_line
+            for node in ast.walk(fn):
+                if not isinstance(node, (ast.Attribute, ast.Name)):
+                    continue
+                d = dotted(node)
+                if d is None or (d != owner and not d.startswith(prefix)):
+                    continue
+                line = node.lineno
+                if line <= submit_end:
+                    continue
+                # joined between submit and this access?
+                if any(submit_line < j <= line for j in joins):
+                    continue
+                flag(
+                    node,
+                    f"{d!r} accessed while the background thread from line "
+                    f"{submit_line} may still own {owner!r}",
+                    "move the access above the submit or behind the join "
+                    "point (.result()) — MatchContext is not thread-safe",
+                )
+                break  # one finding per submit is enough signal
+    return findings

@@ -1,0 +1,186 @@
+"""Rule ``det`` — nondeterminism reachable from plan construction.
+
+Every CI gate in this repo (perf-smoke, chaos-smoke, fused-smoke, the
+60-round churn differentials) asserts BIT-IDENTICAL plans across runs and
+backends.  That only holds while plan construction never reads a
+wall clock or an unseeded RNG, and never lets set-iteration order leak
+into an ordering-sensitive output.
+
+In manifest-scoped modules, flag:
+
+* wall clock: ``time.time`` / ``time.time_ns`` / ``datetime.now`` /
+  ``datetime.utcnow`` / ``date.today``.  (``time.perf_counter`` /
+  ``time.monotonic`` are NOT flagged — they feed duration telemetry,
+  never decisions; the decide-deadline watchdog takes an injectable
+  clock for exactly this reason.)
+* unseeded RNG: legacy module-level ``np.random.*`` (global-state), any
+  ``random.*`` module function (``random.Random(seed)`` instances are
+  fine), and ``np.random.default_rng()`` called with NO seed.
+* iteration over sets: ``for``/comprehension iteration (or
+  ``list()``/``tuple()`` materialisation) of a set literal, a
+  ``set()``/``frozenset()`` call, a set comprehension, or a
+  ``.intersection()/.union()/...`` result — unless wrapped in
+  ``sorted()``.  CPython set order varies with insertion history and
+  pointer hashing; a plan built from it is only accidentally stable.
+
+Options:
+* ``flag_dict_keys`` (default false): also flag ``.keys()`` iteration.
+  Python 3.7+ dicts iterate in insertion order, so ``.keys()`` is
+  deterministic whenever insertion is — scope this only onto modules
+  whose dicts are filled from already-suspect orders.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from tools.tessalint.astutil import call_name
+from tools.tessalint.findings import Finding
+from tools.tessalint.passes.base import FileContext
+
+RULE = "det"
+
+_WALLCLOCK = {
+    "time.time",
+    "time.time_ns",
+    "datetime.datetime.now",
+    "datetime.datetime.utcnow",
+    "datetime.date.today",
+}
+_NP_RANDOM_OK = {
+    "numpy.random.default_rng",
+    "numpy.random.Generator",
+    "numpy.random.SeedSequence",
+    "numpy.random.PCG64",
+    "numpy.random.Philox",
+    "numpy.random.BitGenerator",
+}
+_PY_RANDOM_OK = {"random.Random", "random.SystemRandom", "random.getstate", "random.setstate"}
+_SET_METHODS = {"intersection", "union", "difference", "symmetric_difference"}
+_ORDER_SINKS = {"list", "tuple", "enumerate", "iter", "next"}
+_ORDER_SAFE = {"sorted", "len", "sum", "min", "max", "any", "all", "set", "frozenset"}
+
+
+def _setish(node: ast.AST, imports) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        q = call_name(node, imports)
+        if q in {"set", "frozenset"}:
+            return True
+        if (
+            isinstance(node.func, ast.Attribute)
+            and node.func.attr in _SET_METHODS
+            and _setish(node.func.value, imports)
+        ):
+            return True
+    return False
+
+
+def _keysish(node: ast.AST) -> bool:
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Attribute)
+        and node.func.attr == "keys"
+        and not node.args
+    )
+
+
+def run(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+    flag_keys = bool(ctx.options.get("flag_dict_keys", False))
+
+    def flag(node, message, hint, severity="P1"):
+        findings.append(
+            Finding(
+                RULE,
+                ctx.path,
+                node.lineno,
+                node.col_offset,
+                message,
+                snippet=ctx.snippet(node.lineno),
+                hint=hint,
+                severity=severity,
+                end_line=getattr(node, "end_lineno", node.lineno) or node.lineno,
+            )
+        )
+
+    def check_iter(it: ast.AST, where: str):
+        if _setish(it, ctx.imports):
+            flag(
+                it,
+                f"{where} over a set: iteration order is not deterministic",
+                "wrap in sorted(...) before the order can reach a plan, "
+                "or keep the collection a list",
+            )
+        elif flag_keys and _keysish(it):
+            flag(
+                it,
+                f"{where} over dict.keys(): order follows insertion "
+                "history, which this module does not control",
+                "iterate sorted(d) instead",
+                severity="P2",
+            )
+
+    parents = {}
+    for parent in ast.walk(ctx.tree):
+        for child in ast.iter_child_nodes(parent):
+            parents[id(child)] = parent
+
+    def _inside_sorted(node: ast.AST) -> bool:
+        p: Optional[ast.AST] = parents.get(id(node))
+        if isinstance(p, ast.Call):
+            q = call_name(p, ctx.imports)
+            return q in _ORDER_SAFE
+        return False
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            q = call_name(node, ctx.imports)
+            if q in _WALLCLOCK:
+                flag(
+                    node,
+                    f"wall clock {q}() reachable from plan construction",
+                    "thread an injectable clock (the scheduler's watchdog "
+                    "pattern) or use simulation time",
+                )
+            elif q is not None and q.startswith("numpy.random."):
+                if q == "numpy.random.default_rng" and not node.args and not node.keywords:
+                    flag(
+                        node,
+                        "np.random.default_rng() without a seed draws OS "
+                        "entropy",
+                        "pass an explicit seed (composable child streams: "
+                        "default_rng([seed, salt]))",
+                    )
+                elif q not in _NP_RANDOM_OK:
+                    flag(
+                        node,
+                        f"legacy global-state RNG {q}()",
+                        "use a seeded np.random.default_rng(seed) generator "
+                        "threaded through the call graph",
+                    )
+            elif (
+                q is not None
+                and q.startswith("random.")
+                and q not in _PY_RANDOM_OK
+            ):
+                flag(
+                    node,
+                    f"module-level stdlib RNG {q}() shares mutable global "
+                    "state",
+                    "construct a seeded random.Random(seed) and thread it "
+                    "explicitly",
+                )
+            elif q in _ORDER_SINKS and node.args and not _inside_sorted(node):
+                check_iter(node.args[0], f"{q}()")
+        elif isinstance(node, (ast.For, ast.AsyncFor)) and not _inside_sorted(
+            node.iter
+        ):
+            check_iter(node.iter, "for loop")
+        elif isinstance(node, (ast.ListComp, ast.GeneratorExp, ast.DictComp)):
+            for gen in node.generators:
+                if not _inside_sorted(gen.iter):
+                    check_iter(gen.iter, "comprehension")
+    return findings

@@ -1,0 +1,261 @@
+"""Rule ``jit`` — hygiene of ``@jax.jit`` functions.
+
+The fused decide() relies on jitted programs whose compiled signature is
+REUSED across churn rounds (bucket padding exists for exactly this).
+Three statically-checkable hazards defeat that:
+
+* **static-arg mismatches** — ``static_argnames`` naming a parameter the
+  signature does not have, or ``static_argnums`` out of range: jax
+  raises at call time (or silently treats the wrong arg as static after
+  a refactor reorders parameters).  P1: mechanical, always a bug.
+* **mutable closure capture** — a jitted function reading module-level
+  mutable state (a list/dict/set, or anything rebound via ``global``):
+  the value is baked in at TRACE time, so later mutations silently
+  don't apply until an unrelated retrace.  P1.
+* **shape-recompile hazards** — Python ``if``/``while`` on a traced
+  parameter is a trace error (or constant-folds); branching on its
+  ``.shape``/``len()`` is legal but recompiles per shape.  P2 for shape
+  branches (sometimes intended), P1 for direct tracer conditionals.
+
+Detected jit forms: ``@jax.jit``, ``@jax.jit(...)``,
+``@functools.partial(jax.jit, ...)`` (and the bare ``partial`` alias),
+plus ``name = jax.jit(fn, ...)`` rebinding a function defined in the
+same module.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.tessalint.astutil import call_name
+from tools.tessalint.findings import Finding
+from tools.tessalint.passes.base import FileContext
+
+RULE = "jit"
+
+_MUTABLE_CTORS = {"list", "dict", "set", "collections.OrderedDict", "collections.defaultdict"}
+
+
+def _static_spec(call: Optional[ast.Call]) -> Tuple[List[int], List[str]]:
+    """Literal static_argnums / static_argnames from a jit(...) call."""
+    nums: List[int] = []
+    names: List[str] = []
+    if call is None:
+        return nums, names
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            for v in _iter_literal(kw.value):
+                if isinstance(v, int):
+                    nums.append(v)
+        elif kw.arg == "static_argnames":
+            for v in _iter_literal(kw.value):
+                if isinstance(v, str):
+                    names.append(v)
+    return nums, names
+
+
+def _iter_literal(node: ast.AST):
+    if isinstance(node, ast.Constant):
+        yield node.value
+    elif isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        for el in node.elts:
+            if isinstance(el, ast.Constant):
+                yield el.value
+
+
+def _jit_call_of(dec: ast.AST, imports) -> Optional[Tuple[bool, Optional[ast.Call]]]:
+    """(is_jit, configuring_call) for a decorator / wrapping expression."""
+    q = imports.resolve(dec)
+    if q == "jax.jit":
+        return True, None
+    if isinstance(dec, ast.Call):
+        qc = call_name(dec, imports)
+        if qc == "jax.jit":
+            return True, dec
+        if qc == "functools.partial" and dec.args:
+            if imports.resolve(dec.args[0]) == "jax.jit":
+                return True, dec
+    return None
+
+
+def _module_mutables(tree: ast.Module, imports) -> Set[str]:
+    """Module-level names bound to mutable containers."""
+    out: Set[str] = set()
+    for stmt in tree.body:
+        targets = []
+        value = None
+        if isinstance(stmt, ast.Assign):
+            targets, value = stmt.targets, stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            targets, value = [stmt.target], stmt.value
+        for t in targets:
+            if not isinstance(t, ast.Name):
+                continue
+            if isinstance(value, (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp, ast.SetComp)):
+                out.add(t.id)
+            elif isinstance(value, ast.Call) and call_name(value, imports) in _MUTABLE_CTORS:
+                out.add(t.id)
+    return out
+
+
+def run(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+    mutables = _module_mutables(ctx.tree, ctx.imports)
+
+    def flag(node, message, hint, severity="P1"):
+        findings.append(
+            Finding(
+                RULE,
+                ctx.path,
+                node.lineno,
+                node.col_offset,
+                message,
+                snippet=ctx.snippet(node.lineno),
+                hint=hint,
+                severity=severity,
+                end_line=getattr(node, "end_lineno", node.lineno) or node.lineno,
+            )
+        )
+
+    # jitted functions: decorator form + `name = jax.jit(fn)` rebinding
+    defs: Dict[str, ast.FunctionDef] = {
+        n.name: n
+        for n in ast.walk(ctx.tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+    jitted: List[Tuple[ast.FunctionDef, Optional[ast.Call], ast.AST]] = []
+    for fn in defs.values():
+        for dec in fn.decorator_list:
+            info = _jit_call_of(dec, ctx.imports)
+            if info:
+                jitted.append((fn, info[1], dec))
+                break
+    for stmt in ast.walk(ctx.tree):
+        if isinstance(stmt, ast.Assign) and isinstance(stmt.value, ast.Call):
+            if call_name(stmt.value, ctx.imports) == "jax.jit" and stmt.value.args:
+                target_fn = stmt.value.args[0]
+                if isinstance(target_fn, ast.Name) and target_fn.id in defs:
+                    jitted.append((defs[target_fn.id], stmt.value, stmt.value))
+
+    for fn, call, site in jitted:
+        a = fn.args
+        pos_params = [p.arg for p in [*a.posonlyargs, *a.args]]
+        all_params = pos_params + [p.arg for p in a.kwonlyargs]
+        nums, names = _static_spec(call)
+
+        # --- static-arg mismatches ----------------------------------- #
+        for name in names:
+            if name not in all_params:
+                flag(
+                    site,
+                    f"static_argnames names {name!r}, which is not a "
+                    f"parameter of {fn.name}()",
+                    f"signature: ({', '.join(all_params)})",
+                )
+        for num in nums:
+            if not (0 <= num < len(pos_params)):
+                flag(
+                    site,
+                    f"static_argnums index {num} out of range for "
+                    f"{fn.name}() ({len(pos_params)} positional parameters)",
+                    "static_argnums indexes positional parameters only",
+                )
+        static = set(names) | {
+            pos_params[i] for i in nums if 0 <= i < len(pos_params)
+        }
+        traced = [p for p in all_params if p not in static and p != "self"]
+
+        # --- mutable closure capture --------------------------------- #
+        local: Set[str] = set(all_params)
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Assign):
+                for t in sub.targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            local.add(n.id)
+            elif isinstance(sub, ast.Global):
+                for name in sub.names:
+                    flag(
+                        sub,
+                        f"jitted {fn.name}() declares global {name!r}: "
+                        "rebinding is invisible after the first trace",
+                        "pass the value as an argument instead",
+                    )
+        reported: Set[str] = set()
+        for sub in ast.walk(fn):
+            if (
+                isinstance(sub, ast.Name)
+                and isinstance(sub.ctx, ast.Load)
+                and sub.id in mutables
+                and sub.id not in local
+                and sub.id not in reported
+            ):
+                reported.add(sub.id)
+                flag(
+                    sub,
+                    f"jitted {fn.name}() closes over module-level mutable "
+                    f"{sub.id!r}: its value is baked in at trace time",
+                    "pass it as a (possibly static) argument, or make the "
+                    "module binding an immutable tuple/frozenset",
+                )
+
+        # --- Python control flow on traced parameters ----------------- #
+        for sub in ast.walk(fn):
+            if not isinstance(sub, (ast.If, ast.While)):
+                continue
+            # `if x is None:` dispatch on optional args happens at trace
+            # time against the Python value None — idiomatic, no hazard.
+            if isinstance(sub.test, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in sub.test.ops
+            ):
+                continue
+            for ref in ast.walk(sub.test):
+                if isinstance(ref, ast.Name) and ref.id in traced:
+                    parent_attr = None
+                    # distinguish `x.shape...` / `len(x)` from a raw tracer
+                    flag_shape = False
+                    for up in ast.walk(sub.test):
+                        if (
+                            isinstance(up, ast.Attribute)
+                            and isinstance(up.value, ast.Name)
+                            and up.value.id == ref.id
+                            and up.attr in ("shape", "ndim", "size", "dtype")
+                        ):
+                            flag_shape = True
+                        if (
+                            isinstance(up, ast.Call)
+                            and call_name(up, ctx.imports) == "len"
+                            and up.args
+                            and isinstance(up.args[0], ast.Name)
+                            and up.args[0].id == ref.id
+                        ):
+                            flag_shape = True
+                    # a shape branch that only raises is trace-time input
+                    # validation, not a recompile knob
+                    only_raises = isinstance(sub, ast.If) and all(
+                        isinstance(s, ast.Raise) for s in sub.body
+                    )
+                    if flag_shape and only_raises:
+                        break
+                    if flag_shape:
+                        flag(
+                            sub.test,
+                            f"jitted {fn.name}() branches on the shape of "
+                            f"traced parameter {ref.id!r}: recompiles for "
+                            "every new shape",
+                            "bucket-pad inputs to a stable signature, or "
+                            "mark the driving arg static",
+                            severity="P2",
+                        )
+                    else:
+                        flag(
+                            sub.test,
+                            f"jitted {fn.name}() has Python control flow on "
+                            f"traced parameter {ref.id!r}",
+                            "use lax.cond / jnp.where, or mark the "
+                            "parameter static",
+                        )
+                    _ = parent_attr
+                    break
+    return findings

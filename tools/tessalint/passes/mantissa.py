@@ -1,0 +1,153 @@
+"""Rule ``mantissa`` — unquantised values in the fused cost-assembly graph.
+
+The fused decide() assembles Algorithm-3 costs as EXACT integers in f32
+under a 2^24 mantissa budget (``fused._F32_MANTISSA``): scaled costs are
+integers, tie-break quanta are powers of two, and health penalties are
+CEILed to half-units (``STRAGGLER_DRAIN_COST``) before scaling.  One
+stray ``0.3`` flowing into a cost term silently breaks the bit-identity
+between the fused program and the host planner — the 60-round
+differential flakes, rarely, instead of a test failing loudly.
+
+Within the manifest-scoped functions (``options.functions``, qualnames;
+``"*"`` scopes a whole module), flag:
+
+* float literals that are neither half-units (``k / 2``) nor exact
+  powers of two — the two shapes the quantisation contract allows;
+* true division whose result is bound to a cost-carrying name
+  (``options.value_pattern`` regex, default
+  ``cost|weight|pen|benefit``), unless the denominator is a
+  power-of-two literal — anything else must justify why the quotient
+  stays on the integer/half-unit lattice.
+"""
+
+from __future__ import annotations
+
+import ast
+import math
+import re
+from typing import List
+
+from tools.tessalint.astutil import functions_with_qualnames
+from tools.tessalint.findings import Finding
+from tools.tessalint.passes.base import FileContext
+
+RULE = "mantissa"
+
+_DEFAULT_VALUE_PATTERN = r"cost|weight|pen|benefit"
+
+
+def _is_half_unit(v: float) -> bool:
+    return v == int(v) or (2.0 * v) == int(2.0 * v)
+
+
+def _is_pow2(v: float) -> bool:
+    if v <= 0.0 or math.isinf(v) or math.isnan(v):
+        return False
+    m, _ = math.frexp(v)
+    return m == 0.5
+
+
+def _pow2_literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant) and isinstance(node.value, (int, float)):
+        return _is_pow2(float(node.value))
+    if (
+        isinstance(node, ast.BinOp)
+        and isinstance(node.op, ast.Pow)
+        and isinstance(node.left, ast.Constant)
+        and node.left.value in (2, 2.0)
+    ):
+        return True
+    return False
+
+
+def _target_names(target: ast.AST) -> List[str]:
+    """Root names of an assignment target (``weights[j]`` → ``weights``)."""
+    node = target
+    while isinstance(node, (ast.Subscript, ast.Attribute, ast.Starred)):
+        node = node.value
+    if isinstance(node, ast.Name):
+        return [node.id]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            out.extend(_target_names(el))
+        return out
+    return []
+
+
+def run(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+    wanted = set(ctx.options.get("functions", []))
+    pat = re.compile(ctx.options.get("value_pattern", _DEFAULT_VALUE_PATTERN))
+
+    scoped: List[ast.AST] = []
+    if "*" in wanted:
+        scoped.append(ctx.tree)
+    else:
+        for qual, fn in functions_with_qualnames(ctx.tree):
+            if qual in wanted or fn.name in wanted:
+                scoped.append(fn)
+    if not scoped:
+        return findings
+
+    def flag(node, message, hint):
+        findings.append(
+            Finding(
+                RULE,
+                ctx.path,
+                node.lineno,
+                node.col_offset,
+                message,
+                snippet=ctx.snippet(node.lineno),
+                hint=hint,
+                severity="P1",
+                end_line=getattr(node, "end_lineno", node.lineno) or node.lineno,
+            )
+        )
+
+    seen = set()
+    for scope in scoped:
+        for node in ast.walk(scope):
+            if id(node) in seen:
+                continue
+            if (
+                isinstance(node, ast.Constant)
+                and isinstance(node.value, float)
+                and not _is_half_unit(node.value)
+                and not _is_pow2(node.value)
+            ):
+                seen.add(id(node))
+                flag(
+                    node,
+                    f"float literal {node.value!r} is neither a half-unit "
+                    "nor a power of two",
+                    "cost terms must stay on the half-unit lattice "
+                    "(CEIL to half-units like STRAGGLER_DRAIN_COST) so the "
+                    "f32 assembly stays exact under the 2^24 budget",
+                )
+            elif isinstance(node, ast.Assign) and _divides_value(node.value):
+                names = []
+                for t in node.targets:
+                    names.extend(_target_names(t))
+                hits = [n for n in names if pat.search(n)]
+                if hits:
+                    seen.add(id(node))
+                    flag(
+                        node.value,
+                        f"unquantised division feeds cost-carrying name "
+                        f"{hits[0]!r}",
+                        "divide by a power of two, or route through a "
+                        "half-unit quantisation helper and document why the "
+                        "quotient is exact",
+                    )
+    return findings
+
+
+def _divides_value(value: ast.AST) -> bool:
+    """True when the expression contains a true division NOT by a
+    power-of-two literal."""
+    for sub in ast.walk(value):
+        if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Div):
+            if not _pow2_literal(sub.right):
+                return True
+    return False

@@ -1,0 +1,112 @@
+"""Line-level suppression pragmas.
+
+Syntax (trailing comment on the flagged line, or any physical line of the
+flagged multi-line expression)::
+
+    x = np.asarray(dev)  # tessalint: sync-ok(THE one readout per round)
+
+Several rules may share one pragma comment, comma-separated::
+
+    # tessalint: sync-ok(readout), det-ok(seeded upstream)
+
+Every suppression MUST carry a non-empty reason — a bare ``sync-ok()`` is
+itself reported (rule ``pragma``), as is a pragma naming an unknown rule
+or one the runner can't parse.  Blanket (file- or block-level)
+suppressions are deliberately unsupported: the point of the pragma is a
+reviewed, per-site justification.
+"""
+
+from __future__ import annotations
+
+import io
+import re
+import tokenize
+from typing import Dict, Iterator, List, Tuple
+
+from tools.tessalint.findings import Finding
+
+_PRAGMA_RE = re.compile(r"#\s*tessalint:\s*(?P<body>.*)$")
+_ITEM_START_RE = re.compile(r"(?P<rule>[A-Za-z][\w-]*)-ok\(")
+
+
+def _comment_tokens(lines: List[str]) -> Iterator[Tuple[int, int, str]]:
+    """(line, col, text) of every REAL comment — a ``# tessalint:`` inside
+    a string literal (e.g. this linter's own docstrings) is not a pragma."""
+    reader = io.StringIO("\n".join(lines) + "\n").readline
+    try:
+        for tok in tokenize.generate_tokens(reader):
+            if tok.type == tokenize.COMMENT:
+                yield tok.start[0], tok.start[1], tok.string
+    except (tokenize.TokenizeError, IndentationError, SyntaxError):
+        # unparseable file: the runner already reports it; no pragmas
+        return
+
+
+def scan_pragmas(
+    path: str, lines: List[str], known_rules
+) -> Tuple[Dict[int, Dict[str, str]], List[Finding]]:
+    """Parse every ``# tessalint:`` comment in ``lines``.
+
+    Returns ``(pragmas, problems)`` where ``pragmas[lineno][rule]`` is the
+    suppression reason (1-based line numbers) and ``problems`` are
+    ``pragma``-rule findings for malformed/empty/unknown entries.
+    """
+    pragmas: Dict[int, Dict[str, str]] = {}
+    problems: List[Finding] = []
+    for i, col, comment in _comment_tokens(lines):
+        raw = lines[i - 1] if i <= len(lines) else comment
+        m = _PRAGMA_RE.search(comment)
+        if not m:
+            continue
+        body = m.group("body").strip()
+        entries: Dict[str, str] = {}
+        # reasons may contain parens/commas: each item's reason runs to the
+        # LAST ')' before the next `<rule>-ok(` (or the end of the comment)
+        starts = list(_ITEM_START_RE.finditer(body))
+        ok = bool(starts) and starts[0].start() == 0
+        for k, im in enumerate(starts) if ok else []:
+            seg_end = starts[k + 1].start() if k + 1 < len(starts) else len(body)
+            seg = body[im.end(): seg_end]
+            close = seg.rfind(")")
+            trailer = seg[close + 1:].strip() if close >= 0 else ""
+            if close < 0 or (trailer != "," if k + 1 < len(starts) else trailer):
+                ok = False
+                break
+            rule, reason = im.group("rule"), seg[:close].strip()
+            if rule not in known_rules:
+                problems.append(
+                    Finding(
+                        "pragma", path, i, col,
+                        f"pragma suppresses unknown rule {rule!r}",
+                        snippet=raw.strip(),
+                        hint=f"known rules: {', '.join(sorted(known_rules))}",
+                        severity="P2",
+                    )
+                )
+            elif not reason:
+                problems.append(
+                    Finding(
+                        "pragma", path, i, col,
+                        f"pragma {rule}-ok() has no reason",
+                        snippet=raw.strip(),
+                        hint="every suppression must carry a reviewed reason: "
+                        f"{rule}-ok(<why this site is intentional>)",
+                        severity="P2",
+                    )
+                )
+            else:
+                entries[rule] = reason
+        if not ok:
+            problems.append(
+                Finding(
+                    "pragma", path, i, col,
+                    "malformed tessalint pragma",
+                    snippet=raw.strip(),
+                    hint="syntax: # tessalint: <rule>-ok(<reason>)[, <rule>-ok(<reason>)...]",
+                    severity="P2",
+                )
+            )
+            continue
+        if entries:
+            pragmas[i] = entries
+    return pragmas, problems

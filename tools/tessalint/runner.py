@@ -1,0 +1,119 @@
+"""Orchestration: walk files, scope rules via the manifest, run passes,
+apply pragma suppressions, and emit the report."""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from tools.tessalint.astutil import Imports
+from tools.tessalint.findings import Finding, report
+from tools.tessalint.manifest import DEFAULT_MANIFEST_PATH, Manifest
+from tools.tessalint.passes import ALL_RULES, PASSES
+from tools.tessalint.passes.base import FileContext
+from tools.tessalint.pragmas import scan_pragmas
+
+
+def iter_py_files(paths: Sequence) -> Iterable[Path]:
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            yield from sorted(
+                q for q in p.rglob("*.py") if "__pycache__" not in q.parts
+            )
+        elif p.suffix == ".py":
+            yield p
+
+
+def lint_file(
+    path: Path, manifest: Manifest, rules: Optional[Sequence[str]] = None
+) -> List[Finding]:
+    """All findings (suppressed ones included, marked) for one file."""
+    source = path.read_text()
+    lines = source.splitlines()
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as e:
+        return [
+            Finding(
+                "pragma",
+                str(path),
+                e.lineno or 1,
+                e.offset or 0,
+                f"file does not parse: {e.msg}",
+                severity="P1",
+            )
+        ]
+    imports = Imports(tree)
+    pragmas, problems = scan_pragmas(str(path), lines, ALL_RULES)
+
+    findings: List[Finding] = []
+    active_rules = [
+        r for r in PASSES if (rules is None or r in rules) and manifest.applies(r, path)
+    ]
+    for rule in active_rules:
+        ctx = FileContext(
+            path=str(path),
+            source=source,
+            lines=lines,
+            tree=tree,
+            imports=imports,
+            options=manifest.options(rule),
+        )
+        findings.extend(PASSES[rule].run(ctx))
+
+    # pragma suppression: a pragma on any physical line of the flagged
+    # node suppresses findings of that rule there
+    used: set = set()
+    for f in findings:
+        for line in range(f.line, f.end_line + 1):
+            reason = pragmas.get(line, {}).get(f.rule)
+            if reason is not None:
+                f.suppressed = True
+                f.suppress_reason = reason
+                used.add((line, f.rule))
+                break
+
+    # unused pragmas for rules that RAN on this file are themselves
+    # findings: a suppression that no longer suppresses anything is a
+    # stale review artifact (the guarded site moved or was fixed)
+    if rules is None or "pragma" in rules:
+        findings.extend(problems)
+        for line, entries in pragmas.items():
+            for rule in entries:
+                if rule in active_rules and (line, rule) not in used:
+                    findings.append(
+                        Finding(
+                            "pragma",
+                            str(path),
+                            line,
+                            0,
+                            f"unused suppression: {rule}-ok on a line the "
+                            f"{rule} pass no longer flags",
+                            snippet=lines[line - 1].strip() if line <= len(lines) else "",
+                            hint="delete the stale pragma (or re-anchor it on "
+                            "the line the finding moved to)",
+                            severity="P2",
+                        )
+                    )
+    return findings
+
+
+def run_paths(
+    paths: Sequence,
+    manifest: Optional[Manifest] = None,
+    manifest_path=None,
+    rules: Optional[Sequence[str]] = None,
+) -> Tuple[dict, List[Finding]]:
+    """Lint ``paths``; returns ``(json_report, all_findings)`` where the
+    report counts only unsuppressed findings."""
+    if manifest is None:
+        manifest = Manifest.load(manifest_path or DEFAULT_MANIFEST_PATH)
+    all_findings: List[Finding] = []
+    n_files = 0
+    for path in iter_py_files(paths):
+        n_files += 1
+        all_findings.extend(lint_file(path, manifest, rules))
+    rep = report(all_findings, list(ALL_RULES), n_files)
+    return rep, all_findings
