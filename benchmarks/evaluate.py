@@ -97,6 +97,7 @@ def run_arm(
     backend: str = "auto",
     profile: Optional[ThroughputProfile] = None,
     type_affinity: bool = True,
+    obs=None,
 ) -> Dict:
     profile = profile or ThroughputProfile()
     sc = workloads.scenario(scenario_name)
@@ -115,7 +116,7 @@ def run_arm(
     cfg = SimConfig(adaptive_checkpoint=policy.endswith("-fa"))
     t0 = time.perf_counter()
     res = Simulator(
-        cluster, trace, sched, profile, cfg, failures=failures
+        cluster, trace, sched, profile, cfg, failures=failures, obs=obs
     ).run()
     wall = time.perf_counter() - t0
 
@@ -299,6 +300,39 @@ def smoke(args) -> int:
         "avg_jct_s_affinity_on": jct_on,
         "avg_jct_s_affinity_off": jct_off,
     }
+    # observability gate: tracing must be decision-inert — an obs-enabled
+    # rerun of one tesserae arm must match the plain arm's deterministic
+    # view exactly, and the exported trace must be schema-valid.
+    from repro.obs import Observability, to_chrome_trace, validate_chrome_trace
+
+    obs = Observability()
+    obs_arm = run_arm(
+        "tesserae-t",
+        scenarios[0],
+        num_gpus=16,
+        num_jobs=args.jobs or 24,
+        seed=args.seed,
+        backend=args.backend,
+        obs=obs,
+    )
+    plain_arm = next(
+        a
+        for a in doc1["arms"]
+        if a["policy"] == "tesserae-t" and a["scenario"] == scenarios[0]
+    )
+    if _deterministic_view([obs_arm]) != _deterministic_view([plain_arm]):
+        failures.append(
+            "obs-enabled arm diverged from the plain arm: tracing perturbed decisions"
+        )
+    trace_doc = to_chrome_trace(obs.tracer)
+    for p in validate_chrome_trace(trace_doc):
+        failures.append(f"obs trace invalid: {p}")
+    if not trace_doc["traceEvents"]:
+        failures.append("obs-enabled arm produced an empty trace")
+    if args.obs_trace:
+        with open(args.obs_trace, "w") as f:
+            json.dump(trace_doc, f)
+        print("wrote obs trace:", args.obs_trace)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(doc1, f, indent=1, sort_keys=True)
@@ -372,6 +406,11 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default="auto")
     ap.add_argument("--json", default=None, help="write the result document here")
+    ap.add_argument(
+        "--obs-trace",
+        default=None,
+        help="(--smoke) write the obs-enabled arm's Chrome/Perfetto trace here",
+    )
     ap.add_argument("--smoke", action="store_true", help="CI smoke lane")
     ap.add_argument(
         "--chaos", action="store_true", help="CI chaos-smoke lane (failure scenarios)"

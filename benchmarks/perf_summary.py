@@ -1,21 +1,41 @@
-"""§Perf before/after summary: baseline vs optimized dry-run configurations.
+"""Perf summaries + the BENCH structural regression gate.
 
-Reads roofline.jsonl (paper-faithful baseline) and roofline_opt.jsonl
-(shard_map MoE + decode cache context sharding) and reports the dominant
-roofline term's improvement per (arch x shape).
+Two modes:
+
+* default (legacy): before/after roofline CSV — reads roofline.jsonl
+  (paper-faithful baseline) and roofline_opt.jsonl (shard_map MoE +
+  decode cache context sharding) and reports the dominant roofline
+  term's improvement per (arch x shape).
+
+* ``--check``: the obs-smoke CI gate.  Validates the committed
+  ``BENCH_*.json`` records on STRUCTURAL invariants only — warm-hit
+  presence, one-host-sync-per-fused-round, zero fallbacks, parity /
+  convergence flags, iteration-reduction ratios — never wall-clock
+  timings, so the gate is stable on loaded CI machines.  Unless
+  ``--no-fresh`` is passed it also runs a small fused churn replay with
+  observability enabled and cross-checks the live metrics registry and
+  ``tesserae-obs-v1`` export against the same invariants, so a
+  regression that silently breaks the telemetry itself (rather than the
+  numbers it reports) is caught too.  Exit code 0/1.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
-from typing import Dict, List
+import sys
+from typing import Callable, Dict, List
 
 from benchmarks.common import csv_row
 
 DIR = os.path.join(os.path.dirname(__file__), "results")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+# --------------------------------------------------------------------------- #
+# Legacy roofline summary
+# --------------------------------------------------------------------------- #
 def _load(name: str) -> Dict:
     out = {}
     path = os.path.join(DIR, name)
@@ -60,5 +80,290 @@ def main(print_csv: bool = True) -> List[str]:
     return rows
 
 
+# --------------------------------------------------------------------------- #
+# --check: structural invariants over the committed BENCH records
+# --------------------------------------------------------------------------- #
+class _Gate:
+    """Collects named pass/fail checks; never raises mid-file so one run
+    reports EVERY violated invariant."""
+
+    def __init__(self) -> None:
+        self.failures: List[str] = []
+        self.passed = 0
+
+    def check(self, ok: bool, what: str) -> None:
+        if ok:
+            self.passed += 1
+        else:
+            self.failures.append(what)
+
+    def skip_missing(self, path: str) -> bool:
+        if not os.path.exists(path):
+            print(f"  [skip] {os.path.basename(path)} not committed")
+            return True
+        return False
+
+
+def _check_warmstart(g: _Gate, path: str) -> None:
+    if g.skip_missing(path):
+        return
+    doc = json.load(open(path))
+    g.check(doc.get("gates_ok") is True, "warmstart: gates_ok flag not True")
+    records = doc.get("records", [])
+    # records alternate cold/warm per bench variant; pair them in order
+    by_bench: Dict[str, Dict[str, dict]] = {}
+    for r in records:
+        by_bench.setdefault(r.get("bench", "?"), {})[r["arm"]] = r
+    for bench, arms in by_bench.items():
+        if "cold" not in arms or "warm" not in arms:
+            continue
+        cold, warm = arms["cold"], arms["warm"]
+        if cold.get("total_bid_iters") is not None:
+            c, w = cold["total_bid_iters"], warm["total_bid_iters"]
+            g.check(
+                w < c,
+                f"warmstart/{bench}: warm bid iters {w} not below cold {c}",
+            )
+            g.check(
+                c >= 1.5 * w,
+                f"warmstart/{bench}: iteration reduction {c}/{w} below 1.5x",
+            )
+        for arm_name, rec in (("cold", cold), ("warm", warm)):
+            for pr in rec.get("per_round", []):
+                g.check(
+                    pr.get("converged", True),
+                    f"warmstart/{bench}/{arm_name}: round {pr.get('round')} "
+                    "not converged",
+                )
+                g.check(
+                    pr.get("parity_ok", True),
+                    f"warmstart/{bench}/{arm_name}: round {pr.get('round')} "
+                    "parity failure",
+                )
+                # rect embeddings may re-solve through the exact fallback
+                # when the warm-start bound certificate trips (documented
+                # MatchContext behaviour) — zero-fallback is a SQUARE
+                # invariant only
+                if pr.get("embedding") != "rect":
+                    g.check(
+                        pr.get("fallbacks", 0) == 0,
+                        f"warmstart/{bench}/{arm_name}: round "
+                        f"{pr.get('round')} used exact fallback",
+                    )
+        warm_rounds = [
+            pr for pr in warm.get("per_round", []) if pr.get("round", 0) > 0
+        ]
+        if warm_rounds and "warm_instances" in warm_rounds[0]:
+            g.check(
+                any(pr["warm_instances"] > 0 for pr in warm_rounds),
+                f"warmstart/{bench}: warm arm never served a warm instance",
+            )
+
+
+def _check_churn(g: _Gate, path: str) -> None:
+    if g.skip_missing(path):
+        return
+    doc = json.load(open(path))
+    g.check(doc.get("gates_ok") is True, "churn: gates_ok flag not True")
+    by_rate: Dict[float, Dict[str, dict]] = {}
+    for r in doc.get("records", []):
+        by_rate.setdefault(r["rate"], {})[r["arm"]] = r
+    for rate, arms in sorted(by_rate.items()):
+        for arm_name, rec in arms.items():
+            for pr in rec.get("per_round", []):
+                g.check(
+                    pr.get("converged", True),
+                    f"churn@{rate}/{arm_name}: round {pr.get('round')} "
+                    "not converged",
+                )
+                g.check(
+                    pr.get("parity_ok", True),
+                    f"churn@{rate}/{arm_name}: round {pr.get('round')} "
+                    "parity failure",
+                )
+        ident, cold = arms.get("identity"), arms.get("cold")
+        if ident is None or cold is None:
+            continue
+        post = [pr for pr in ident["per_round"] if pr.get("round", 0) > 0]
+        g.check(
+            all(pr.get("warm_instances", 0) + pr.get("memo_instances", 0) > 0
+                for pr in post),
+            f"churn@{rate}: identity arm has post-warmup rounds with zero "
+            "warm/memo instances",
+        )
+        g.check(
+            2 * ident["total_bid_iters"] <= cold["total_bid_iters"],
+            f"churn@{rate}: identity keying reduction "
+            f"{cold['total_bid_iters']}/{ident['total_bid_iters']} below 2x",
+        )
+
+
+def _check_fused(g: _Gate, path: str) -> None:
+    if g.skip_missing(path):
+        return
+    doc = json.load(open(path))
+    g.check(doc.get("gates_ok") is True, "fused: gates_ok flag not True")
+    for rec in doc.get("records", []):
+        bench = rec.get("bench", "?")
+        if bench == "fused_parity_churn":
+            g.check(
+                rec["host_fallbacks"] == 0,
+                f"fused/{bench}: {rec['host_fallbacks']} host fallbacks",
+            )
+            g.check(
+                rec["readouts"] == rec["fused_rounds"],
+                f"fused/{bench}: readouts {rec['readouts']} != fused rounds "
+                f"{rec['fused_rounds']} (one-readout contract)",
+            )
+            g.check(
+                rec["parity_ok_rounds"] == rec["parity_rounds"],
+                f"fused/{bench}: parity {rec['parity_ok_rounds']}"
+                f"/{rec['parity_rounds']}",
+            )
+        elif bench == "fused_decide_scale":
+            g.check(
+                all(s == 1 for s in rec.get("host_syncs_per_round", [])),
+                f"fused/{bench}: host syncs per round "
+                f"{rec.get('host_syncs_per_round')} != all 1",
+            )
+            per_round = rec.get("per_round", [])
+            g.check(
+                all(pr["host_fallbacks"] == 0 for pr in per_round),
+                f"fused/{bench}: host fallbacks in per_round",
+            )
+            g.check(
+                all(pr["fused_readouts"] == 1 for pr in per_round),
+                f"fused/{bench}: a round took != 1 fused readout",
+            )
+            steady = [pr for pr in per_round if pr["round"] >= 2]
+            g.check(
+                bool(steady) and steady[-1]["dirty_pairs"] == 0,
+                f"fused/{bench}: steady state never reached 0 dirty pairs",
+            )
+
+
+def _check_endtoend(g: _Gate, path: str) -> None:
+    if g.skip_missing(path):
+        return
+    doc = json.load(open(path))
+    arms = doc.get("arms", [])
+    g.check(bool(arms), "endtoend: no arms recorded")
+    for a in arms:
+        tag = f"endtoend/{a.get('policy')}/{a.get('scenario')}"
+        g.check(
+            a["faults"]["fused_host_fallbacks"] == 0,
+            f"{tag}: fused host fallbacks",
+        )
+        g.check(a["metrics"]["rounds"] > 0, f"{tag}: zero rounds")
+        g.check(
+            all(v == v for v in a["metrics"].values()),  # NaN check
+            f"{tag}: non-finite metric",
+        )
+        if a["policy"].startswith("tesserae"):
+            mt = a.get("match_telemetry", {})
+            g.check(
+                mt.get("warm_hit_rounds", 0) > 0,
+                f"{tag}: tesserae arm with zero warm-hit rounds",
+            )
+            g.check(
+                mt.get("warm_instances", 0) > 0,
+                f"{tag}: tesserae arm served no warm instances",
+            )
+
+
+def _check_fresh(g: _Gate) -> None:
+    """Small fused churn replay with observability enabled: the live
+    registry and the tesserae-obs-v1 export must satisfy the same
+    structural invariants the committed records are gated on."""
+    from repro.core.cluster import ClusterSpec
+    from repro.core.policies.tiresias import TiresiasPolicy
+    from repro.core.profiler import ThroughputProfile
+    from repro.core.scheduler import TesseraeScheduler
+    from repro.core.simulator import SimConfig, Simulator
+    from repro.core.traces import shockwave_trace
+    from repro.obs import (
+        Observability,
+        to_obs_doc,
+        validate_chrome_trace,
+        validate_obs_doc,
+        to_chrome_trace,
+    )
+
+    cluster = ClusterSpec(4, 4)
+    profile = ThroughputProfile()
+    trace = shockwave_trace(num_jobs=12, arrival_rate_per_hour=220.0, seed=5)
+    obs = Observability()
+    sched = TesseraeScheduler(
+        cluster,
+        TiresiasPolicy(profile, queue_base=900.0),
+        profile,
+        lap_backend="auction",
+        tie_break=True,
+        fused_fanout=True,
+        obs=obs,
+    )
+    sim = Simulator(
+        cluster, trace, sched, profile,
+        SimConfig(round_duration_s=360.0), obs=obs,
+    )
+    res = sim.run()
+    m = obs.metrics
+    g.check(res.num_rounds >= 10, f"fresh: only {res.num_rounds} rounds")
+    g.check(
+        m.counter_value("match.fused_readouts")
+        == m.counter_value("match.fused_rounds"),
+        "fresh: fused readouts != fused rounds (one-readout contract)",
+    )
+    g.check(
+        res.fused_host_fallbacks == 0,
+        f"fresh: {res.fused_host_fallbacks} fused host fallbacks",
+    )
+    g.check(
+        res.warm_hit_rounds() > 0, "fresh: no warm-hit rounds in live registry"
+    )
+    g.check(
+        m.counter_value("sim.rounds") == res.num_rounds,
+        "fresh: sim.rounds counter disagrees with SimResult",
+    )
+    doc = to_obs_doc(obs.tracer, obs.metrics)
+    probs = validate_obs_doc(doc)
+    g.check(not probs, f"fresh: obs doc invalid: {probs[:3]}")
+    probs = validate_chrome_trace(to_chrome_trace(obs.tracer))
+    g.check(not probs, f"fresh: chrome trace invalid: {probs[:3]}")
+
+
+def run_check(fresh: bool = True) -> int:
+    g = _Gate()
+    checks: List[Callable[[], None]] = [
+        lambda: _check_warmstart(
+            g, os.path.join(REPO, "BENCH_matching_warmstart.json")
+        ),
+        lambda: _check_churn(g, os.path.join(REPO, "BENCH_matching_churn.json")),
+        lambda: _check_fused(g, os.path.join(REPO, "BENCH_fused_decide.json")),
+        lambda: _check_endtoend(g, os.path.join(REPO, "BENCH_endtoend.json")),
+    ]
+    if fresh:
+        checks.append(lambda: _check_fresh(g))
+    for c in checks:
+        c()
+    print(f"perf_summary --check: {g.passed} invariants ok, "
+          f"{len(g.failures)} failed")
+    for f in g.failures:
+        print(f"  FAIL: {f}")
+    return 1 if g.failures else 0
+
+
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--check", action="store_true",
+        help="gate the committed BENCH_*.json on structural invariants",
+    )
+    ap.add_argument(
+        "--no-fresh", action="store_true",
+        help="with --check: skip the live obs-enabled replay cross-check",
+    )
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(run_check(fresh=not args.no_fresh))
     main()

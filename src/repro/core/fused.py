@@ -66,6 +66,7 @@ from repro.core.migration import (
     _relabel_penalties,
     plan_migration,
 )
+from repro.obs.tracer import tracer_of
 
 #: f32 mantissa budget: the largest scaled cost plus the finest tie-break
 #: quantum must span fewer than 24 bits for the in-program f32 assembly to
@@ -303,10 +304,20 @@ class FusedMigrationPlanner:
     invalidate the device cache; both are counted in :attr:`stats`.
     """
 
-    def __init__(self, shards: int = 1, use_kernel: bool = False, max_iters: int = 20_000):
+    def __init__(
+        self,
+        shards: int = 1,
+        use_kernel: bool = False,
+        max_iters: int = 20_000,
+        obs=None,
+    ):
         self.shards = max(1, min(int(shards), len(jax.devices())))
         self.use_kernel = bool(use_kernel)
         self.max_iters = int(max_iters)
+        #: opt-in observability bundle — spans around the fused program,
+        #: its single readout, and host fallbacks.  Pure host-side
+        #: bookkeeping: no extra device work, no decision inputs touched.
+        self.obs = obs
         self._cache = None  # device arrays: pi, pj, col_of, prices, node_prices
         self._cache_key = None  # (kc, kl, P, scale, tie_break)
         #: why the most recent :meth:`plan` call fell back to the host
@@ -357,6 +368,37 @@ class FusedMigrationPlanner:
         down_nodes: Optional[np.ndarray] = None,
         speed_factor: Optional[np.ndarray] = None,
     ) -> MigrationResult:
+        tracer = tracer_of(self.obs)
+        with tracer.span(
+            "migrate.fused", shards=self.shards, kernel=self.use_kernel
+        ) as sp:
+            before = dict(self.stats)
+            res = self._plan_impl(
+                prev, new_logical, num_gpus_of, tie_break, down_nodes,
+                speed_factor, tracer,
+            )
+            sp.annotate(
+                fallback=self.last_fallback_reason or "none",
+                dirty_pairs=self.stats["fused_dirty_pairs"]
+                - before["fused_dirty_pairs"],
+                bid_iters=self.stats["fused_bid_iters"]
+                - before["fused_bid_iters"],
+                readouts=self.stats["fused_readouts"]
+                - before["fused_readouts"],
+                migrations=res.num_migrations,
+            )
+        return res
+
+    def _plan_impl(
+        self,
+        prev: PlacementPlan,
+        new_logical: PlacementPlan,
+        num_gpus_of: Dict[int, int],
+        tie_break: bool,
+        down_nodes: Optional[np.ndarray],
+        speed_factor: Optional[np.ndarray],
+        tracer,
+    ) -> MigrationResult:
         t0 = time.perf_counter()
         self.last_fallback_reason = None
         cluster = prev.cluster
@@ -390,9 +432,11 @@ class FusedMigrationPlanner:
             self.stats["fused_budget_fallbacks"] += 1
             self.last_fallback_reason = "fused-budget"
             self.invalidate()
-            return self._host(
-                prev, new_logical, num_gpus_of, tie_break, down_nodes, speed_factor
-            )
+            with tracer.span("migrate.fused.host_fallback", reason="fused-budget"):
+                return self._host(
+                    prev, new_logical, num_gpus_of, tie_break, down_nodes,
+                    speed_factor,
+                )
 
         common = prev.job_ids() & new_logical.job_ids()
         pi = prev.restricted_to(common).slots.astype(np.int32)
@@ -426,26 +470,28 @@ class FusedMigrationPlanner:
         else:
             cache = (*self._cache, jnp.asarray(True))
 
-        out = _fused_round(
-            jnp.asarray(pi),
-            jnp.asarray(pj),
-            jnp.asarray(new_logical.slots.astype(np.int32)),
-            jnp.asarray(weights),
-            jnp.asarray(pen_scaled),
-            *cache,
-            kc=kc,
-            kl=kl,
-            shards=self.shards,
-            max_iters=self.max_iters,
-            use_kernel=self.use_kernel,
-            tb_pair=tb_pair,
-            tb_node=tb_node,
-        )
+        with tracer.span("migrate.fused.program", kc=kc, kl=kl):
+            out = _fused_round(
+                jnp.asarray(pi),
+                jnp.asarray(pj),
+                jnp.asarray(new_logical.slots.astype(np.int32)),
+                jnp.asarray(weights),
+                jnp.asarray(pen_scaled),
+                *cache,
+                kc=kc,
+                kl=kl,
+                shards=self.shards,
+                max_iters=self.max_iters,
+                use_kernel=self.use_kernel,
+                tb_pair=tb_pair,
+                tb_node=tb_node,
+            )
         # THE readout: everything host-side comes off the device here, once
         phys_dev, node_assign_dev, cost_dev, conv_dev, stats_dev = out[:5]
-        phys, node_assignment, cost_scaled, converged, stats = jax.device_get(  # tessalint: sync-ok(THE one sanctioned readout per fused round; see BENCH_fused_decide.json)
-            (phys_dev, node_assign_dev, cost_dev, conv_dev, stats_dev)
-        )
+        with tracer.span("migrate.fused.readout"):
+            phys, node_assignment, cost_scaled, converged, stats = jax.device_get(  # tessalint: sync-ok(THE one sanctioned readout per fused round; see BENCH_fused_decide.json)
+                (phys_dev, node_assign_dev, cost_dev, conv_dev, stats_dev)
+            )
         self.stats["fused_readouts"] += 1
 
         if not bool(converged):
@@ -453,9 +499,13 @@ class FusedMigrationPlanner:
             self.stats["fused_nonconverged_fallbacks"] += 1
             self.last_fallback_reason = "fused-nonconverged"
             self.invalidate()
-            return self._host(
-                prev, new_logical, num_gpus_of, tie_break, down_nodes, speed_factor
-            )
+            with tracer.span(
+                "migrate.fused.host_fallback", reason="fused-nonconverged"
+            ):
+                return self._host(
+                    prev, new_logical, num_gpus_of, tie_break, down_nodes,
+                    speed_factor,
+                )
 
         # cache stays device-resident for next round's diff / warm start
         self._cache = (out[8], out[9], out[5], out[6], out[7])

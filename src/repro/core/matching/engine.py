@@ -347,6 +347,11 @@ class MatchContext:
         #: (context_key, backend) -> OrderedDict[(instance_id, col_id) -> price]
         self._departed: Dict[tuple, "OrderedDict[Tuple[int, int], float]"] = {}
         self.departed_lru_capacity = departed_lru_capacity
+        #: opt-in observability bundle (repro.obs.Observability) — when set
+        #: (TesseraeScheduler.set_observability), solve_lap_batched emits a
+        #: span per engine call with this context's stat deltas.  Never
+        #: serialised with the context payload; the owner re-attaches it.
+        self.obs = None
         self.stats: Dict[str, int] = {
             "solves": 0,          # engine calls that consulted this context
             "memo_hits": 0,       # calls where EVERY instance memo-hit
@@ -1158,6 +1163,13 @@ def solve_lap_batched(
 ) -> BatchedMatchResult:
     """Solve a batch of (rectangular, masked) LAPs with one backend call.
 
+    When the ``context`` carries an observability bundle (``context.obs``,
+    attached by ``TesseraeScheduler.set_observability``), each call emits a
+    ``lap.solve`` span annotated with the per-family context-stat deltas
+    (memo/warm/cold instances, bid iters, host syncs) and the solve
+    outcome — pure host-side bookkeeping over numbers the solve already
+    read back; no extra device work.
+
     Args:
       costs: (B, N, M) cost batch (numpy or jax array).  ``+inf`` under
         minimisation (``-inf`` under maximisation) marks a forbidden edge.
@@ -1194,6 +1206,61 @@ def solve_lap_batched(
         assignment bit-for-bit the one every exact backend returns.
         Default off: the unperturbed (seed) assignments are preserved.
     """
+    obs = getattr(context, "obs", None) if context is not None else None
+    kwargs = dict(
+        maximize=maximize,
+        row_mask=row_mask,
+        col_mask=col_mask,
+        backend=backend,
+        eps_min=eps_min,
+        max_iters=max_iters,
+        context=context,
+        context_key=context_key,
+        instance_ids=instance_ids,
+        row_ids=row_ids,
+        col_ids=col_ids,
+        tie_break=tie_break,
+    )
+    if obs is None:
+        return _solve_lap_batched_impl(costs, **kwargs)
+    batch = int(costs.shape[0]) if getattr(costs, "ndim", 2) == 3 else 1
+    before = dict(context.stats)
+    with obs.tracer.span("lap.solve", family=context_key, batch=batch) as sp:
+        res = _solve_lap_batched_impl(costs, **kwargs)
+        # host-side annotation only: converged/used_fallback are numpy
+        # results the solve already transferred
+        sp.annotate(
+            backend=res.backend,
+            embedding=res.embedding,
+            converged=int(np.count_nonzero(res.converged)),
+            fallbacks=int(np.count_nonzero(res.used_fallback)),
+            **{
+                k: int(v - before.get(k, 0))
+                for k, v in context.stats.items()
+                if v != before.get(k, 0)
+            },
+        )
+    return res
+
+
+def _solve_lap_batched_impl(
+    costs: np.ndarray,
+    *,
+    maximize: bool = False,
+    row_mask: Optional[np.ndarray] = None,
+    col_mask: Optional[np.ndarray] = None,
+    backend: str = "auto",
+    eps_min: Optional[float] = None,
+    max_iters: int = 20_000,
+    context: Optional[MatchContext] = None,
+    context_key: str = "default",
+    instance_ids: Optional[np.ndarray] = None,
+    row_ids: Optional[np.ndarray] = None,
+    col_ids: Optional[np.ndarray] = None,
+    tie_break: bool = False,
+) -> BatchedMatchResult:
+    """The batched-LAP engine body — see :func:`solve_lap_batched` for the
+    full contract (the public name is a thin tracing wrapper)."""
     t0 = time.perf_counter()
     costs = np.asarray(costs, dtype=np.float64)
     if costs.ndim == 2:

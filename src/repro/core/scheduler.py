@@ -29,6 +29,7 @@ from repro.core.packing import PackingResult, pack_jobs
 from repro.core.placement import apply_packing, place_without_packing
 from repro.core.policies.base import SchedulingPolicy
 from repro.core.profiler import ThroughputProfile
+from repro.obs.tracer import tracer_of
 
 
 class DegradeReason:
@@ -131,6 +132,11 @@ class TesseraeScheduler:
         # with all nodes healthy, decide() is bit-identical to the seed.
         health_aware: bool = False,
         spread_mtbf_h: float = 12.0,
+        # opt-in observability bundle (repro.obs.Observability): structured
+        # span tracing of the decide() pipeline.  None (default) routes
+        # every instrumentation point through no-op singletons — the
+        # decision sequence is bit-identical to the uninstrumented path.
+        obs=None,
     ):
         self.cluster = cluster
         self.policy = policy
@@ -158,6 +164,18 @@ class TesseraeScheduler:
         #: under churn, where jobs arriving/finishing change the packing
         #: graph's SHAPE but not the surviving identities.
         self.match_context = match_context if match_context is not None else MatchContext()
+        self.obs = None
+        if obs is not None:
+            self.set_observability(obs)
+
+    def set_observability(self, obs) -> None:
+        """Attach (or detach, with ``None``) an observability bundle to the
+        scheduler AND its matching context / fused planner, so LAP-solve
+        and fused-round spans nest under this scheduler's decide spans."""
+        self.obs = obs
+        self.match_context.obs = obs
+        if self._fused_planner is not None:
+            self._fused_planner.obs = obs
 
     def decide(
         self,
@@ -166,6 +184,28 @@ class TesseraeScheduler:
         prev_plan: Optional[PlacementPlan] = None,
         num_gpus_of: Optional[Dict[int, int]] = None,
         health: Optional[ClusterHealth] = None,
+    ) -> RoundDecision:
+        tracer = tracer_of(self.obs)
+        with tracer.span("decide", jobs=len(active_jobs)) as sp:
+            decision = self._decide_impl(
+                active_jobs, now, prev_plan, num_gpus_of, health, tracer
+            )
+            sp.annotate(
+                placed=len(decision.placed),
+                pending=len(decision.pending),
+                degrade=decision.degrade_reason,
+                warm_instances=decision.warm_hits,
+            )
+        return decision
+
+    def _decide_impl(
+        self,
+        active_jobs: Sequence[JobState],
+        now: float,
+        prev_plan: Optional[PlacementPlan],
+        num_gpus_of: Optional[Dict[int, int]],
+        health: Optional[ClusterHealth],
+        tracer,
     ) -> RoundDecision:
         timings: Dict[str, float] = {}
         stats_before = dict(self.match_context.stats)
@@ -193,48 +233,54 @@ class TesseraeScheduler:
 
         t_start = self._clock()
         t0 = time.perf_counter()
-        ordered = self.policy.order(active_jobs, now, self.cluster)
+        with tracer.span("policy_sort", policy=type(self.policy).__name__):
+            ordered = self.policy.order(active_jobs, now, self.cluster)
         timings["schedule_s"] = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        plan, placed, pending = place_without_packing(
-            self.cluster,
-            ordered,
-            type_affinity=self.type_affinity,
-            down_nodes=down,
-            spread_domains=spread,
-        )
+        with tracer.span("place", spread=spread) as sp_place:
+            plan, placed, pending = place_without_packing(
+                self.cluster,
+                ordered,
+                type_affinity=self.type_affinity,
+                down_nodes=down,
+                spread_domains=spread,
+            )
+            sp_place.annotate(placed=len(placed), pending=len(pending))
         timings["place_s"] = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        if self.enable_packing:
-            placed_types = None
-            if self.cluster.node_gpu_types is not None and placed:
-                # heterogeneous cluster: each placed job's packing weights
-                # (incl. HBM feasibility) are profiled on its node's type
-                gmap_placed = plan.job_gpu_map()
-                placed_types = [
-                    self.cluster.gpu_type_of(
-                        self.cluster.node_of(min(gmap_placed[j.job_id]))
-                    )
-                    for j in placed
-                ]
-            packing = pack_jobs(
-                placed,
-                pending,
-                self.profile,
-                optimize_strategy=self.optimize_strategy,
-                backend=self.lap_backend,
-                packed_ok=self.packed_ok,
-                context=self.match_context,
-                placed_gpu_types=placed_types,
-                tie_break=self.tie_break,
-            )
-            if packing.matches:
-                placed_lookup = {j.job_id: j for j in placed}
-                plan = apply_packing(plan, packing.matches, placed_lookup)
-        else:
-            packing = PackingResult({}, {}, 0.0, 0.0, 0)
+        with tracer.span("pack", enabled=self.enable_packing) as sp_pack:
+            if self.enable_packing:
+                placed_types = None
+                if self.cluster.node_gpu_types is not None and placed:
+                    # heterogeneous cluster: each placed job's packing
+                    # weights (incl. HBM feasibility) are profiled on its
+                    # node's type
+                    gmap_placed = plan.job_gpu_map()
+                    placed_types = [
+                        self.cluster.gpu_type_of(
+                            self.cluster.node_of(min(gmap_placed[j.job_id]))
+                        )
+                        for j in placed
+                    ]
+                packing = pack_jobs(
+                    placed,
+                    pending,
+                    self.profile,
+                    optimize_strategy=self.optimize_strategy,
+                    backend=self.lap_backend,
+                    packed_ok=self.packed_ok,
+                    context=self.match_context,
+                    placed_gpu_types=placed_types,
+                    tie_break=self.tie_break,
+                )
+                if packing.matches:
+                    placed_lookup = {j.job_id: j for j in placed}
+                    plan = apply_packing(plan, packing.matches, placed_lookup)
+            else:
+                packing = PackingResult({}, {}, 0.0, 0.0, 0)
+            sp_pack.annotate(matches=len(packing.matches))
         timings["pack_s"] = time.perf_counter() - t0
 
         t0 = time.perf_counter()
@@ -264,7 +310,7 @@ class TesseraeScheduler:
                     from repro.core.fused import FusedMigrationPlanner
 
                     self._fused_planner = FusedMigrationPlanner(
-                        shards=self.fanout_shards
+                        shards=self.fanout_shards, obs=self.obs
                     )
                 fused_before = dict(self._fused_planner.stats)
                 migration = self._fused_planner.plan(
@@ -278,17 +324,19 @@ class TesseraeScheduler:
                 if self._fused_planner.last_fallback_reason is not None:
                     degrade = self._fused_planner.last_fallback_reason
             else:
-                migration = plan_migration(
-                    prev_plan,
-                    plan,
-                    gmap,
-                    algorithm=algorithm,
-                    backend=self.lap_backend,
-                    context=self.match_context,
-                    tie_break=self.tie_break,
-                    down_nodes=down,
-                    speed_factor=speed,
-                )
+                with tracer.span("migrate.host", algorithm=algorithm) as sp_mig:
+                    migration = plan_migration(
+                        prev_plan,
+                        plan,
+                        gmap,
+                        algorithm=algorithm,
+                        backend=self.lap_backend,
+                        context=self.match_context,
+                        tie_break=self.tie_break,
+                        down_nodes=down,
+                        speed_factor=speed,
+                    )
+                    sp_mig.annotate(migrations=migration.num_migrations)
             plan = migration.physical_plan
         timings["migrate_s"] = time.perf_counter() - t0
 

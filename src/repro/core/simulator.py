@@ -50,7 +50,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
-from collections import Counter
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence
 
@@ -71,6 +70,8 @@ from repro.core.policies.gavel import GavelPolicy
 from repro.core.policies.themis import ThemisFtfPolicy
 from repro.core.profiler import GPU_TYPES, ThroughputProfile
 from repro.core.scheduler import RoundDecision, TesseraeScheduler
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracer import tracer_of
 
 
 @dataclasses.dataclass
@@ -160,6 +161,13 @@ class SimResult:
     #: voluntary migrations that moved a job OFF a degraded node onto
     #: strictly faster ones — the straggler-drain relabel penalty at work.
     drain_migrations: int = 0
+    #: the run's metrics registry (repro.obs) — the single aggregation
+    #: substrate the simulator records per-round telemetry into.  The
+    #: legacy aggregate properties below (``fused_host_fallbacks``,
+    #: ``degrade_counts``, ``warm_hit_rounds``, ``total_bid_iters``) are
+    #: views over it; per-round detail stays on ``match_rounds`` /
+    #: ``degrade_rounds``.
+    metrics: MetricsRegistry = dataclasses.field(default_factory=MetricsRegistry)
 
     @property
     def jcts(self) -> np.ndarray:
@@ -175,13 +183,13 @@ class SimResult:
     def fused_host_fallbacks(self) -> int:
         """Rounds the fused migrate stage served from the host planner
         (mantissa-budget overflow or non-converged auction)."""
-        return sum(rs.get("fused_host_fallbacks", 0) for rs in self.match_rounds)
+        return self.metrics.counter_value("match.fused_host_fallbacks")
 
     @property
     def degrade_counts(self) -> Dict[str, int]:
         """Histogram of per-round degradation-ladder steps (``"none"``
         rounds included)."""
-        return dict(Counter(self.degrade_rounds))
+        return self.metrics.counters_with_prefix("sim.degrade.")
 
     def ftf_ratios(self, profile: ThroughputProfile) -> np.ndarray:
         """rho = T_shared / T_fair; T_fair = isolated duration stretched by
@@ -210,24 +218,28 @@ class SimResult:
             rho = self.ftf_ratios(profile)
             d["ftf_worst"] = float(rho.max())
             d["ftf_p90"] = float(np.percentile(rho, 90))
+        lat = self.metrics.histogram_values("decide.latency_s")
+        if lat:
+            # SLO telemetry for the online-serving arc: exact nearest-rank
+            # percentiles of per-round decide() wall time
+            h = self.metrics.histogram("decide.latency_s", timing=True)
+            d["decide_p50_s"] = h.percentile(50)
+            d["decide_p99_s"] = h.percentile(99)
         return d
 
     def warm_hit_rounds(self, skip: int = 1) -> int:
         """Rounds (after the first ``skip`` warmup rounds) in which the
         scheduler served at least one LAP instance from its identity-keyed
         context — the churn-replay acceptance metric."""
-        return sum(
-            1
-            for rs in self.match_rounds[skip:]
-            if rs.get("warm_instances", 0) > 0
-        )
+        warm = self.metrics.histogram_values("match.warm_instances_per_round")
+        return sum(1 for v in warm[skip:] if v > 0)
 
     @property
     def total_bid_iters(self) -> int:
         """Not tracked per round by the scheduler timings — derived from
         the context stats the rounds accumulated (0 when the backend is
         exact)."""
-        return sum(rs.get("bid_iters", 0) for rs in self.match_rounds)
+        return self.metrics.counter_value("match.bid_iters")
 
 
 @dataclasses.dataclass
@@ -300,6 +312,7 @@ class Simulator:
         config: SimConfig | None = None,
         failures: Optional[Sequence[FailureEvent]] = None,
         round_hook=None,
+        obs=None,
     ):
         self.cluster = cluster
         self.trace = sorted(trace, key=lambda s: (s.arrival_time, s.job_id))
@@ -322,6 +335,18 @@ class Simulator:
         #: in-progress loop state (``run(stop_after_rounds=...)`` retains
         #: it for :meth:`save_state` / a continued :meth:`run` call).
         self._state: Optional[_SimState] = None
+        #: opt-in observability bundle (repro.obs.Observability): span
+        #: tracing of the round loop + the scheduler pipeline.  ``None``
+        #: (default) keeps every decision code path bit-identical to the
+        #: uninstrumented one.  The METRICS registry is always on — it is
+        #: pure host-side aggregation of numbers the loop already computes,
+        #: and ``SimResult``'s telemetry views read from it.
+        self.obs = obs
+        if obs is not None and hasattr(scheduler, "set_observability"):
+            scheduler.set_observability(obs)
+        self._metrics: MetricsRegistry = (
+            obs.metrics if obs is not None else MetricsRegistry()
+        )
 
     # ------------------------------------------------------------------ #
     def run(self, stop_after_rounds: Optional[int] = None) -> Optional[SimResult]:
@@ -334,7 +359,13 @@ class Simulator:
         continue).
         """
         cfg = self.config
+        tracer = tracer_of(self.obs)
         if self._state is None:
+            if self.obs is None:
+                # fresh run, internal registry: start clean so a reused
+                # Simulator object never double-counts (the previous
+                # SimResult keeps its own registry reference)
+                self._metrics = MetricsRegistry()
             self._state = _SimState(
                 states={s.job_id: JobState(spec=s) for s in self.trace},
                 num_gpus_of={s.job_id: s.num_gpus for s in self.trace},
@@ -351,7 +382,11 @@ class Simulator:
 
         def _timed_prewarm(spec_active, t, plan, gmap):
             t0 = time.perf_counter()
-            self.scheduler.prewarm(spec_active, t, plan, gmap)
+            # traces into the prewarm thread's own root list (the tracer
+            # keeps per-thread span stacks), so speculative decides never
+            # nest under the measured round's spans
+            with tracer.span("prewarm", jobs=len(spec_active)):
+                self.scheduler.prewarm(spec_active, t, plan, gmap)
             return time.perf_counter() - t0
 
         try:
@@ -434,33 +469,38 @@ class Simulator:
                     getattr(self.scheduler, "health_aware", False)
                     and (st.health.degraded or st.health.outages > 0)
                 )
-                if st.health is not None and health_signal:
-                    decision = self.scheduler.decide(
-                        active,
-                        st.now,
-                        st.prev_plan,
-                        st.num_gpus_of,
-                        health=st.health,
-                    )
-                else:
-                    decision = self.scheduler.decide(
-                        active, st.now, st.prev_plan, st.num_gpus_of
-                    )
-                st.match_rounds.append(dict(decision.match_stats))
-                st.degrade_rounds.append(decision.degrade_reason)
-                for k, v in decision.timings.items():
-                    st.overhead[k] = st.overhead.get(k, 0.0) + v
-                if decision.migration is not None:
-                    st.total_migrations += decision.migration.num_migrations
-                if isinstance(self.scheduler.policy, GavelPolicy):
-                    self.scheduler.policy.note_round(
-                        [j.job_id for j in decision.placed]
-                    )
+                with tracer.span(
+                    "round", index=st.rounds, active=len(active)
+                ) as sp_round:
+                    if st.health is not None and health_signal:
+                        decision = self.scheduler.decide(
+                            active,
+                            st.now,
+                            st.prev_plan,
+                            st.num_gpus_of,
+                            health=st.health,
+                        )
+                    else:
+                        decision = self.scheduler.decide(
+                            active, st.now, st.prev_plan, st.num_gpus_of
+                        )
+                    st.match_rounds.append(dict(decision.match_stats))
+                    st.degrade_rounds.append(decision.degrade_reason)
+                    self._record_round_metrics(decision)
+                    for k, v in decision.timings.items():
+                        st.overhead[k] = st.overhead.get(k, 0.0) + v
+                    if decision.migration is not None:
+                        st.total_migrations += decision.migration.num_migrations
+                    if isinstance(self.scheduler.policy, GavelPolicy):
+                        self.scheduler.policy.note_round(
+                            [j.job_id for j in decision.placed]
+                        )
 
-                self._advance_round(
-                    decision, st.states, st.now, st.prev_gpus, st.num_gpus_of,
-                    st.health, sim_state=st,
-                )
+                    self._advance_round(
+                        decision, st.states, st.now, st.prev_gpus,
+                        st.num_gpus_of, st.health, sim_state=st,
+                    )
+                    sp_round.annotate(degrade=decision.degrade_reason)
 
                 plan_map = decision.plan.job_gpu_map()
                 st.prev_gpus = dict(plan_map)
@@ -550,14 +590,91 @@ class Simulator:
             fault_events_applied=st.events_applied,
             lost_work_s_total=st.lost_work_s,
             drain_migrations=st.drain_migrations,
+            metrics=self._metrics,
         )
         self._state = None
         return result
 
     # ------------------------------------------------------------------ #
+    # Metrics recording (host-side aggregation; always on, decision-inert)
+    # ------------------------------------------------------------------ #
+    def _record_round_metrics(self, decision: RoundDecision) -> None:
+        """Fold one measured round into the registry.  Only numbers the
+        loop already holds on the host — no device reads, no decision
+        inputs touched.  ``match_stats`` keys land as ``match.*`` counters
+        (so ``SimResult``'s views re-derive the legacy aggregates), the
+        per-round warm/bid-iter series as exact histograms, and the stage
+        wall times as timing histograms (excluded from deterministic
+        snapshots)."""
+        m = self._metrics
+        m.counter("sim.rounds").inc()
+        m.counter("sim.degrade." + decision.degrade_reason).inc()
+        for k, v in decision.match_stats.items():
+            m.counter("match." + k).inc(int(v))
+        m.histogram("match.warm_instances_per_round").observe(
+            float(decision.match_stats.get("warm_instances", 0))
+        )
+        m.histogram("match.bid_iters_per_round").observe(
+            float(
+                decision.match_stats.get("bid_iters", 0)
+                + decision.match_stats.get("fused_bid_iters", 0)
+            )
+        )
+        m.histogram("decide.latency_s", timing=True).observe(
+            decision.total_overhead_s
+        )
+        for k, v in decision.timings.items():
+            m.histogram("decide.stage." + k, timing=True).observe(v)
+
+    def _reseed_metrics(self, st: _SimState) -> None:
+        """Rebuild the registry's deterministic content from a restored
+        snapshot so a resumed run's counters/histograms finish equal to an
+        uninterrupted run's.  Wall-clock (timing) histograms are NOT
+        reconstructed — timings were never part of bit-identity.  Guarded
+        increments mirror the live recording paths exactly: an instrument
+        the live run never touched must not exist after a reseed either."""
+        m = self._metrics
+        if st.match_rounds:
+            m.counter("sim.rounds").inc(len(st.match_rounds))
+        for rs in st.match_rounds:
+            for k, v in rs.items():
+                m.counter("match." + k).inc(int(v))
+            m.histogram("match.warm_instances_per_round").observe(
+                float(rs.get("warm_instances", 0))
+            )
+            m.histogram("match.bid_iters_per_round").observe(
+                float(rs.get("bid_iters", 0) + rs.get("fused_bid_iters", 0))
+            )
+        for reason in st.degrade_rounds:
+            m.counter("sim.degrade." + reason).inc()
+        if st.events_applied:
+            m.counter("faults.events_applied").inc(st.events_applied)
+        if st.preemptions:
+            m.counter("faults.preemptions").inc(st.preemptions)
+        if st.retries_total:
+            m.counter("faults.retries").inc(st.retries_total)
+            m.gauge("faults.lost_iters").set(st.lost_iters)
+            m.gauge("faults.lost_work_s").set(st.lost_work_s)
+        if st.failed_jobs:
+            m.counter("faults.failed_jobs").inc(len(st.failed_jobs))
+
+    # ------------------------------------------------------------------ #
     # Fault-event application (round boundaries)
     # ------------------------------------------------------------------ #
     def _apply_events(self, st: _SimState) -> None:
+        if not (
+            st.event_idx < len(self._events)
+            and self._events[st.event_idx].time_s <= st.now
+        ):
+            return
+        with tracer_of(self.obs).span("apply_events") as sp:
+            n0 = st.events_applied
+            self._apply_events_impl(st)
+            applied = st.events_applied - n0
+            sp.annotate(applied=applied)
+        self._metrics.counter("faults.events_applied").inc(applied)
+
+    def _apply_events_impl(self, st: _SimState) -> None:
         while (
             st.event_idx < len(self._events)
             and self._events[st.event_idx].time_s <= st.now
@@ -629,8 +746,12 @@ class Simulator:
         if preempt:
             s.preemptions += 1
             st.preemptions += 1
+            self._metrics.counter("faults.preemptions").inc()
         s.retries += 1
         st.retries_total += 1
+        self._metrics.counter("faults.retries").inc()
+        self._metrics.gauge("faults.lost_iters").set(st.lost_iters)
+        self._metrics.gauge("faults.lost_work_s").set(st.lost_work_s)
         # drop the job from the relabelling's view of the previous round so
         # its eventual re-placement is a RESUME (checkpoint load), not a
         # migration of live state that no longer exists
@@ -641,6 +762,7 @@ class Simulator:
             s.failed = True
             s.finish_time = st.now
             st.failed_jobs.append(s.job_id)
+            self._metrics.counter("faults.failed_jobs").inc()
         else:
             s.eligible_time = st.now + cfg.backoff_base_s * (
                 cfg.backoff_factor ** (s.retries - 1)
@@ -689,6 +811,21 @@ class Simulator:
         return min(base, max(cfg.round_duration_s, young))
 
     def _advance_round(
+        self,
+        decision: RoundDecision,
+        states: Dict[int, JobState],
+        now: float,
+        prev_gpus: Dict[int, frozenset],
+        num_gpus_of: Dict[int, int],
+        health: Optional[ClusterHealth] = None,
+        sim_state: Optional[_SimState] = None,
+    ) -> None:
+        with tracer_of(self.obs).span("advance_round"):
+            self._advance_round_impl(
+                decision, states, now, prev_gpus, num_gpus_of, health, sim_state
+            )
+
+    def _advance_round_impl(
         self,
         decision: RoundDecision,
         states: Dict[int, JobState],
@@ -942,3 +1079,17 @@ class Simulator:
             # plan (the fused program is exact within its budget)
             if self.scheduler._fused_planner is not None:
                 self.scheduler._fused_planner.invalidate()
+            # fresh registry, reseeded from the snapshot's deterministic
+            # telemetry so the resumed run's counters finish equal to an
+            # uninterrupted run's (timing histograms excepted — wall time
+            # was never part of bit-identity).  Re-attach obs to the
+            # restored MatchContext (from_payload builds a bare one).
+            self._metrics = (
+                self.obs.metrics if self.obs is not None else MetricsRegistry()
+            )
+            self._metrics.reset()
+            self._reseed_metrics(self._state)
+            if self.obs is not None and hasattr(
+                self.scheduler, "set_observability"
+            ):
+                self.scheduler.set_observability(self.obs)

@@ -258,6 +258,7 @@ class TestStartupDebtSemantics:
         assert sched.match_context.stats["solves"] > 0
         assert sched.match_context.stats["memo_hits"] > 0
 
+    @pytest.mark.timing
     def test_speculative_prewarm_runs_off_the_critical_path(self, profile):
         """The prewarm decide work happens on the background thread: its
         wall time is telemetered, part of it OVERLAPS the sim loop (the
@@ -267,15 +268,25 @@ class TestStartupDebtSemantics:
         trace = shockwave_trace(num_jobs=15, seed=7, profile=profile)
         mk = lambda: TesseraeScheduler(cluster, TiresiasPolicy(profile), profile)
         plain = _sim(cluster, trace, mk(), profile)
-        spec = _sim(cluster, trace, mk(), profile, speculative_prewarm=True)
         assert plain.prewarm_wall_s == 0.0 and plain.prewarm_overlap_s == 0.0
-        assert spec.prewarm_wall_s > 0.0
-        assert spec.prewarm_overlap_s > 0.0
-        assert spec.prewarm_overlap_s <= spec.prewarm_wall_s
         # the overlap claim is backed by the match_stats deltas: measured
         # rounds are warm (the thread did the cold work between rounds)
         warm = lambda r: sum(rs.get("warm_instances", 0) for rs in r.match_rounds)
-        assert warm(spec) > warm(plain)
+        # Overlap is a wall-clock MEASUREMENT, not a decision: on a
+        # contended CPU the background thread can land entirely inside a
+        # gap the loop never waited through, measuring 0.0 overlap for a
+        # run whose decisions are still correct.  The deterministic
+        # invariants hold on every attempt; only the timing observation
+        # gets a bounded retry.
+        for _ in range(3):
+            spec = _sim(cluster, trace, mk(), profile, speculative_prewarm=True)
+            assert spec.prewarm_wall_s > 0.0
+            assert spec.prewarm_overlap_s <= spec.prewarm_wall_s
+            assert warm(spec) > warm(plain)
+            if spec.prewarm_overlap_s > 0.0:
+                break
+        else:
+            pytest.fail("prewarm overlap measured 0.0 in 3 consecutive runs")
 
     def test_speculative_prewarm_identical_under_auction_backend(self, profile):
         """Prewarm speculation must stay decision-invariant when the
